@@ -1,0 +1,73 @@
+"""Beyond-figure benchmark sections: multi-application accelerator sharing
+(the paper's abstract motivation) and HTS design-parameter ablations (the
+paper names dispatch width / window size as design-time parameters)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.hts import assembler, costs, machine, multiapp
+from repro.core.hts.golden import HtsParams
+
+PARAMS = HtsParams(mem_words=4096, tracker_entries=128)
+
+
+def _cycles(bench, sched="hts_spec", n_fu=2, cost_obj=None, params=None):
+    code = assembler.assemble(bench.asm)
+    t0 = time.perf_counter()
+    out = machine.simulate(code, cost_obj or costs.costs_by_name(sched),
+                           params or PARAMS, n_fu=np.array([n_fu] * 10),
+                           mem_init=bench.mem_init, effects=bench.effects)
+    assert out["halted"], bench.name
+    return int(out["cycles"]), (time.perf_counter() - t0) * 1e6
+
+
+def multi_app_sharing(bands: int = 2, tiles: int = 40):
+    """Two applications (audio pid=0, image pid=1) share one accelerator
+    pool: HTS-shared makespan vs running the apps serially.  Mixes are
+    complementary (audio: FFT units; image: DCT/vector units) and sized to
+    comparable standalone makespans, so sharing should approach
+    max(a, b) ≪ a + b."""
+    rows = []
+    audio = multiapp.audio_straightline(bands)
+    image = multiapp.image_compression(tiles)
+    shared = multiapp.interleave(audio, image)
+    for n_fu in (1, 2, 4):
+        ca, _ = _cycles(audio, n_fu=n_fu)
+        ci, _ = _cycles(image, n_fu=n_fu)
+        cs, us = _cycles(shared, n_fu=n_fu)
+        rows.append((f"multiapp/shared_vs_serial/fu{n_fu}", us, {
+            "audio_cycles": ca, "image_cycles": ci,
+            "serial_cycles": ca + ci, "shared_cycles": cs,
+            "sharing_gain": (ca + ci) / cs,
+            "ideal_max": max(ca, ci),
+        }))
+    return rows
+
+
+def design_ablation(bands: int = 8):
+    """HTS design parameters: issue width, RS window, CDB width."""
+    from repro.core.hts.programs import audio_compression
+    bench = audio_compression(bands, time_domain=False)
+    rows = []
+    base = costs.hts_costs(True)
+    for issue_w in (1, 2, 4, 8):
+        c = dataclasses.replace(base, issue_width=issue_w)
+        cyc, us = _cycles(bench, cost_obj=c, n_fu=4)
+        rows.append((f"ablation/issue_width{issue_w}", us, {"cycles": cyc}))
+    for cdb_w in (1, 2, 4):
+        c = dataclasses.replace(base, cdb_width=cdb_w)
+        cyc, us = _cycles(bench, cost_obj=c, n_fu=4)
+        rows.append((f"ablation/cdb_width{cdb_w}", us, {"cycles": cyc}))
+    for rs in (4, 8, 16, 64):
+        p = dataclasses.replace(PARAMS, rs_entries=rs)
+        cyc, us = _cycles(bench, n_fu=4, params=p)
+        rows.append((f"ablation/rs_entries{rs}", us, {"cycles": cyc}))
+    for tlb in (2, 4, 16):
+        p = dataclasses.replace(PARAMS, tlb_entries=tlb,
+                                tm_slots=max(tlb, 2))
+        cyc, us = _cycles(bench, n_fu=4, params=p)
+        rows.append((f"ablation/tlb_entries{tlb}", us, {"cycles": cyc}))
+    return rows

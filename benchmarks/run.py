@@ -1,0 +1,44 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived is a compact JSON blob).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig10,tableII
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks import extensions, paper_figs  # noqa: E402
+
+SECTIONS = {
+    "tableII": paper_figs.table2,
+    "fig7": paper_figs.fig7,
+    "fig8": paper_figs.fig8,
+    "fig9": paper_figs.fig9,
+    "fig10": paper_figs.fig10,
+    "multiapp": extensions.multi_app_sharing,
+    "ablation": extensions.design_ablation,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(SECTIONS))
+
+    print("name,us_per_call,derived")
+    for name in names:
+        for row_name, us, derived in SECTIONS[name]():
+            print(f"{row_name},{us:.1f},"
+                  f"\"{json.dumps(derived, default=float)}\"", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end training driver: ~100M-parameter dense LM, synthetic data,
+checkpoint/restart, straggler watchdog — the full runtime stack on CPU.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300       # full run
+    PYTHONPATH=src python examples/train_100m.py --steps 8 --tiny  # CI smoke
+"""
+import argparse
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax                                                 # noqa: E402
+
+from repro.configs.base import ArchConfig                  # noqa: E402
+from repro.data import pipeline as data_lib                # noqa: E402
+from repro.models import registry                          # noqa: E402
+from repro.optim.adamw import AdamWConfig                  # noqa: E402
+from repro.runtime import train as train_rt                # noqa: E402
+
+CFG_100M = ArchConfig(                     # ≈ 110M params (gpt2-medium-ish)
+    name="lm-100m", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+    d_ff=2048, vocab=32000,
+)
+CFG_TINY = CFG_100M.smoke()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = CFG_TINY if args.tiny else CFG_100M
+    model = registry.build(cfg)
+    print(f"arch={cfg.name} params={model.param_count()/1e6:.1f}M")
+
+    dcfg = data_lib.DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                               global_batch=args.batch)
+    source = data_lib.make_source(dcfg)
+    tcfg = train_rt.TrainConfig(
+        optimizer=AdamWConfig(lr=3e-4),
+        warmup_steps=max(2, args.steps // 10), total_steps=args.steps,
+        ckpt_every=max(args.steps // 4, 1))
+    step_fn = jax.jit(train_rt.make_train_step(model, tcfg), donate_argnums=0)
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="train100m_")
+    loop = train_rt.TrainLoop(
+        model, source, step_fn, tcfg, ckpt_dir,
+        init_fn=lambda: train_rt.init_state(model, jax.random.PRNGKey(0)))
+    loop.run(args.steps)
+    first, last = loop.history[0]["loss"], loop.history[-1]["loss"]
+    print(f"loss: step0={first:.3f} → step{args.steps - 1}={last:.3f} "
+          f"(ckpts in {ckpt_dir}; stragglers flagged: {loop.stragglers})")
+    import math
+    assert math.isfinite(last)
+    if args.steps >= 100:          # too few steps to demand a visible trend
+        assert last < first, "loss must decrease on the synthetic stream"
+
+
+if __name__ == "__main__":
+    main()

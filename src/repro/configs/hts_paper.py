@@ -1,0 +1,6 @@
+"""The paper's own workload configuration: Table II accelerator set + default
+HTS design parameters (see repro.core.hts)."""
+from repro.core.hts.costs import FUNCTIONS, hts_costs  # noqa: F401  re-export
+from repro.core.hts.golden import HtsParams            # noqa: F401
+
+DEFAULT_N_FU = (2,) * 10

@@ -1,0 +1,460 @@
+"""Golden cycle-accurate HTS simulator (pure Python oracle).
+
+This module pins down the *exact* cycle-level semantics of the Hardware Task
+Scheduler; ``machine.py`` re-implements the same semantics as a compiled JAX
+``lax.while_loop`` program and is tested for schedule-level equivalence against
+this oracle (tests/test_hts_equivalence.py, incl. hypothesis-generated
+programs).
+
+Within-cycle phase order (both simulators MUST follow it exactly):
+
+  1. FU tick            — busy accelerators count down; on reaching 0 the task's
+                          result is written to memory and a completion record is
+                          queued for the CDB (ticket = completion order), the
+                          accelerator is freed (ASR busy bit cleared).
+  2. memread tick       — the pseudo-unit spawned by an MR branch counts down.
+  3. CDB grant          — up to ``cdb_width`` queued completions whose
+                          ``ready_cycle`` has arrived broadcast in ticket order:
+                          RS dependencies wake, Memory-Tracker entries retire,
+                          a BR branch waiting on this uid becomes resolvable.
+  4. branch resolve     — evaluate condition; on speculation: commit (retain TLB
+                          mappings) or squash (discard TLB, abort speculative
+                          tasks, redirect PC).  Non-speculative stalls unblock.
+  5. RS issue           — ready reservation-station entries (age order) issue to
+                          idle accelerators of their class, up to ``issue_width``
+                          per cycle.
+  6. frontend           — fetch/decode/dispatch one instruction (tasks allocate
+                          RS + tracker + optionally TLB/TM; control instructions
+                          execute on the scheduler's GPRs).
+  7. halt check / cycle++
+
+Memory-value semantics: the simulator tracks *scheduling*, not DSP math — as in
+the paper's Python model.  Task outputs take their values from a benchmark-
+provided ``effects`` image: completing a task copies
+``effect_mem[orig_out + i] → mem[phys_out + i]``.  Branch conditions read
+``mem`` (TLB-remapped), so benchmarks control taken/not-taken outcomes by
+seeding ``mem_init`` / ``effects``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from . import isa
+from .costs import (FUNC_CYCLES, MEM_READ_CYCLES, NUM_FUNCS, SchedulerCosts)
+
+# ---------------------------------------------------------------------------
+# Capacities (design-time parameters of the HTS, paper §IV-C)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HtsParams:
+    num_regs: int = 32          # GPR bank size
+    mem_words: int = 1024       # main memory image (region address space used)
+    rs_entries: int = 32        # reservation-station capacity (instruction window)
+    tracker_entries: int = 64   # Memory Tracker capacity
+    tlb_entries: int = 16       # Task Lookup Buffer capacity
+    tm_slots: int = 16          # Transactional Memory slots
+    tm_slot_words: int = 16     # words per TM slot
+    tlb_drain_cycles: int = 20  # cost to drain one committed TLB entry (TM→mem)
+    mem_read_cycles: int = MEM_READ_CYCLES
+    max_tasks: int = 1024       # schedule-trace capacity
+    n_fu: tuple[int, ...] = (1,) * NUM_FUNCS   # units per function class
+
+    @property
+    def tm_base(self) -> int:
+        return self.mem_words
+
+    @property
+    def total_mem(self) -> int:
+        return self.mem_words + self.tm_slots * self.tm_slot_words
+
+
+@dataclasses.dataclass
+class TaskRecord:
+    uid: int
+    func: int
+    dispatch_cycle: int
+    issue_cycle: int = -1
+    complete_cycle: int = -1
+    broadcast_cycle: int = -1
+    dep_uid: int = 0
+    is_spec: bool = False
+    aborted: bool = False
+
+
+@dataclasses.dataclass
+class Result:
+    cycles: int
+    tasks: list[TaskRecord]
+    mem: np.ndarray
+    regs: np.ndarray
+    fu_busy_cycles: np.ndarray          # (total_fus,)
+    spec_aborted: int
+    stall_cycles: int
+    halted: bool                        # False ⇒ hit max_cycles (bug or livelock)
+
+    def schedule_tuple(self):
+        """Canonical tuple for equivalence testing against the JAX machine."""
+        return [(t.uid, t.func, t.dispatch_cycle, t.issue_cycle,
+                 t.complete_cycle, t.broadcast_cycle, t.aborted)
+                for t in self.tasks]
+
+
+class _RS:
+    __slots__ = ("uid", "func", "dep_uid", "age", "out_s", "out_e", "src_s",
+                 "exec_cycles", "is_spec")
+
+    def __init__(self, uid, func, dep_uid, age, out_s, out_e, src_s,
+                 exec_cycles, is_spec):
+        self.uid, self.func, self.dep_uid, self.age = uid, func, dep_uid, age
+        self.out_s, self.out_e, self.src_s = out_s, out_e, src_s
+        self.exec_cycles, self.is_spec = exec_cycles, is_spec
+
+
+def run(code: np.ndarray,
+        costs: SchedulerCosts,
+        params: HtsParams = HtsParams(),
+        mem_init: Optional[dict[int, int]] = None,
+        effects: Optional[dict[int, int]] = None,
+        max_cycles: int = 5_000_000) -> Result:
+    """Execute ``code`` under scheduler cost model ``costs``; return the schedule."""
+    tbl = isa.decode_table(code)
+    P = len(tbl)
+    p = params
+
+    regs = np.zeros(p.num_regs, dtype=np.int64)
+    mem = np.zeros(p.total_mem, dtype=np.int64)
+    effect_mem = np.zeros(p.total_mem, dtype=np.int64)
+    for k, v in (mem_init or {}).items():
+        mem[k] = v
+    for k, v in (effects or {}).items():
+        effect_mem[k] = v
+
+    pc = 0
+    cycle = 0
+    fe_wait = 0
+    next_uid = 1
+    age_ctr = 0
+    ticket_ctr = 0
+    stall_cycles = 0
+    spec_aborted = 0
+
+    rs: list[_RS] = []
+    # FU pool: flattened (class, unit) with existence from n_fu.
+    fu_cls: list[int] = []
+    for c in range(NUM_FUNCS):
+        fu_cls.extend([c] * p.n_fu[c])
+    n_total_fu = len(fu_cls)
+    fu_busy = [False] * n_total_fu
+    fu_uid = [0] * n_total_fu
+    fu_rem = [0] * n_total_fu
+    fu_meta: list[Optional[tuple]] = [None] * n_total_fu  # (out_s,out_e,src_s,is_spec)
+    fu_busy_cycles = np.zeros(n_total_fu, dtype=np.int64)
+
+    tracker: list[dict] = []          # {s, e, uid, is_spec}
+    tlb: list[dict] = []              # {os, oe, tm_s, spec, committed, seq}
+    tlb_seq = 0
+    tm_free = list(range(p.tm_slots))
+    cdb: list[dict] = []              # {uid, ticket, ready, is_spec}
+    memread_active = False
+    memread_rem = 0
+
+    # branch bookkeeping
+    br: Optional[dict] = None         # {kind, pc, off, cond, thr, addr, wait_uid,
+    #                                    speculating, value(optional)}
+    spec_active = False
+    spec_regs_ckpt: Optional[np.ndarray] = None   # GPR checkpoint at spec entry
+
+    tasks: list[TaskRecord] = []
+    by_uid: dict[int, TaskRecord] = {}
+
+    def remap(addr: int) -> int:
+        """TLB remap of a physical read address (latest matching entry wins)."""
+        best = None
+        for e in tlb:
+            if e["os"] <= addr < e["oe"]:
+                if best is None or e["seq"] > best["seq"]:
+                    best = e
+        if best is None:
+            return addr
+        return p.tm_base + best["tm_s"] * p.tm_slot_words + (addr - best["os"])
+
+    def tracker_lookup(s: int, e: int) -> int:
+        """Latest in-flight producer overlapping [s, e); 0 if none."""
+        best = 0
+        for t in tracker:
+            if t["s"] < e and s < t["e"]:
+                best = max(best, t["uid"])
+        return best
+
+    def eval_cond(cond: int, v: int, thr: int) -> bool:
+        if cond == isa.CND_EQ:
+            return v == thr
+        if cond == isa.CND_NEQ:
+            return v != thr
+        if cond == isa.CND_GE:
+            return v >= thr
+        return v <= thr
+
+    def machine_empty() -> bool:
+        return (not rs and not any(fu_busy) and not cdb
+                and not memread_active and br is None)
+
+    while cycle < max_cycles:
+        # ---- 1. FU tick ------------------------------------------------
+        for i in range(n_total_fu):
+            if fu_busy[i]:
+                fu_busy_cycles[i] += 1
+                fu_rem[i] -= 1
+                if fu_rem[i] == 0:
+                    out_s, out_e, src_s, is_spec = fu_meta[i]
+                    for j in range(out_e - out_s):
+                        mem[out_s + j] = effect_mem[src_s + j]
+                    cdb.append({"uid": fu_uid[i], "ticket": ticket_ctr,
+                                "ready": cycle + costs.completion_extra,
+                                "is_spec": is_spec})
+                    ticket_ctr += 1
+                    by_uid[fu_uid[i]].complete_cycle = cycle
+                    fu_busy[i] = False
+                    fu_uid[i] = 0
+
+        # ---- 2. memread tick -------------------------------------------
+        br_value_ready = False
+        if memread_active:
+            memread_rem -= 1
+            if memread_rem == 0:
+                memread_active = False
+                br_value_ready = True
+
+        # ---- 3. CDB grant ----------------------------------------------
+        granted = 0
+        while granted < costs.cdb_width:
+            ready = [e for e in cdb if e["ready"] <= cycle]
+            if not ready:
+                break
+            e = min(ready, key=lambda x: x["ticket"])
+            cdb.remove(e)
+            granted += 1
+            uid = e["uid"]
+            by_uid[uid].broadcast_cycle = cycle
+            for r in rs:
+                if r.dep_uid == uid:
+                    r.dep_uid = 0
+            tracker[:] = [t for t in tracker if t["uid"] != uid]
+            if br is not None and br["kind"] == isa.BR_BR and br["wait_uid"] == uid:
+                br_value_ready = True
+
+        # ---- 4. branch resolve -------------------------------------------
+        if br is not None and br_value_ready:
+            value = int(mem[remap(br["addr"])])
+            taken = eval_cond(br["cond"], value, br["thr"])
+            target = br["pc"] + (br["off"] if taken else 1)
+            if br["speculating"]:
+                if not taken:          # predicted not-taken → correct
+                    for t in tlb:
+                        if not t["committed"]:
+                            t["committed"] = True
+                    for t in tracker:
+                        t["is_spec"] = False
+                    for r in rs:
+                        r.is_spec = False
+                    for i in range(n_total_fu):
+                        if fu_busy[i] and fu_meta[i][3]:
+                            fu_meta[i] = fu_meta[i][:3] + (False,)
+                    for e in cdb:
+                        e["is_spec"] = False
+                else:                  # mis-speculation → squash
+                    for t in tlb:
+                        if not t["committed"]:
+                            tm_free.append(t["tm_s"])
+                    tlb[:] = [t for t in tlb if t["committed"]]
+                    tracker[:] = [t for t in tracker if not t["is_spec"]]
+                    for r in rs:
+                        if r.is_spec:
+                            by_uid[r.uid].aborted = True
+                            spec_aborted += 1
+                    rs[:] = [r for r in rs if not r.is_spec]
+                    for i in range(n_total_fu):
+                        if fu_busy[i] and fu_meta[i][3]:
+                            by_uid[fu_uid[i]].aborted = True
+                            spec_aborted += 1
+                            fu_busy[i] = False
+                            fu_uid[i] = 0
+                    cdb[:] = [e for e in cdb if not e["is_spec"]]
+                    if spec_regs_ckpt is not None:
+                        regs[:] = spec_regs_ckpt   # roll back GPR side effects
+                    pc = target
+                    fe_wait = 0
+                spec_active = False
+                spec_regs_ckpt = None
+            else:
+                pc = target
+            br = None
+
+        # ---- 5. RS issue --------------------------------------------------
+        issued = 0
+        for r in sorted(rs, key=lambda x: x.age):
+            if issued >= costs.issue_width:
+                break
+            if r.dep_uid != 0:
+                continue
+            slot = next((i for i in range(n_total_fu)
+                         if fu_cls[i] == r.func and not fu_busy[i]), None)
+            if slot is None:
+                continue
+            fu_busy[slot] = True
+            fu_uid[slot] = r.uid
+            fu_rem[slot] = r.exec_cycles
+            fu_meta[slot] = (r.out_s, r.out_e, r.src_s, r.is_spec)
+            by_uid[r.uid].issue_cycle = cycle
+            rs.remove(r)
+            issued += 1
+
+        # ---- 6. frontend ---------------------------------------------------
+        progressed = True
+        if fe_wait > 0:
+            fe_wait -= 1
+            progressed = False
+        elif br is not None and not br["speculating"]:
+            progressed = False          # stalled on an unresolved branch
+        elif pc >= P:
+            progressed = False          # draining
+        else:
+            op, acc, a, asz, b, bsz, tid, pid_, ctl, meta = (int(x) for x in tbl[pc])
+            if op == isa.OP_TASK:
+                if costs.in_order and not machine_empty():
+                    progressed = False
+                elif len(rs) >= p.rs_entries or len(tracker) >= p.tracker_entries:
+                    progressed = False   # structural stall
+                else:
+                    in_s = int(regs[a]) if ctl & isa.CTL_IN_INDIRECT else a
+                    out_s = int(regs[b]) if ctl & isa.CTL_OUT_INDIRECT else b
+                    in_e, out_e = in_s + asz, out_s + bsz
+                    phys_in = remap(in_s)
+                    dep = tracker_lookup(phys_in, phys_in + (in_e - in_s))
+                    if spec_active:
+                        if not tm_free:
+                            # TLB/TM full: drain the oldest committed entry.
+                            committed = [t for t in tlb if t["committed"]]
+                            if committed:
+                                victim = min(committed, key=lambda t: t["seq"])
+                                base = (p.tm_base
+                                        + victim["tm_s"] * p.tm_slot_words)
+                                for j in range(victim["oe"] - victim["os"]):
+                                    mem[victim["os"] + j] = mem[base + j]
+                                tm_free.append(victim["tm_s"])
+                                tlb.remove(victim)
+                                fe_wait = p.tlb_drain_cycles
+                            progressed = False
+                        elif len(tlb) >= p.tlb_entries:
+                            progressed = False
+                        else:
+                            slot_id = min(tm_free)   # lowest-index slot (matches machine)
+                            tm_free.remove(slot_id)
+                            tlb.append({"os": out_s, "oe": out_e, "tm_s": slot_id,
+                                        "committed": False, "seq": tlb_seq})
+                            tlb_seq += 1
+                            phys_out = p.tm_base + slot_id * p.tm_slot_words
+                            self_spec = True
+                            _dispatch_task(rs, tracker, by_uid, tasks, acc, dep,
+                                           phys_out, phys_out + (out_e - out_s),
+                                           out_s, next_uid, age_ctr, cycle,
+                                           self_spec)
+                            next_uid += 1
+                            age_ctr += 1
+                            fe_wait = costs.dispatch_serial_cost - 1
+                            pc += 1
+                    else:
+                        _dispatch_task(rs, tracker, by_uid, tasks, acc, dep,
+                                       out_s, out_e, out_s, next_uid, age_ctr,
+                                       cycle, False)
+                        next_uid += 1
+                        age_ctr += 1
+                        fe_wait = costs.dispatch_serial_cost - 1
+                        pc += 1
+            elif op == isa.OP_ADD:
+                regs[b] = regs[a] + regs[asz]
+                pc += 1
+            elif op == isa.OP_MUL:
+                regs[b] = regs[a] * regs[asz]
+                pc += 1
+            elif op == isa.OP_MOV:
+                regs[b] = a if ctl & isa.CTL_IMM else regs[a]
+                pc += 1
+            elif op == isa.OP_JUMP:
+                pc = a
+            elif op == isa.OP_LBEG:
+                regs[asz] = int(regs[a]) if ctl & 1 else a
+                pc += 1
+            elif op == isa.OP_LEND:
+                regs[asz] -= 1
+                pc = pc - b if regs[asz] > 0 else pc + 1
+            elif op == isa.OP_IF:
+                kind = ctl & 0x3
+                cond = (ctl >> 2) & 0x3
+                thr = int(regs[asz])
+                if br is not None:
+                    # Depth-1 speculation: a second unresolved branch stalls the
+                    # frontend until the outstanding one resolves.
+                    progressed = False
+                elif kind == isa.BR_RR:
+                    taken = eval_cond(cond, int(regs[a]), thr)
+                    pc = pc + b if taken else pc + 1
+                    fe_wait = 1      # single-cycle bubble (paper §IV-C3)
+                else:
+                    if costs.in_order and not machine_empty():
+                        progressed = False
+                    else:
+                        phys = remap(a)
+                        wait_uid = tracker_lookup(phys, phys + 1)
+                        eff_kind = kind
+                        if kind == isa.BR_BR and wait_uid == 0:
+                            eff_kind = isa.BR_MR   # producer already done
+                        speculate = costs.speculation and not spec_active
+                        br = {"kind": eff_kind, "pc": pc, "off": b, "cond": cond,
+                              "thr": thr, "addr": a, "wait_uid": wait_uid,
+                              "speculating": speculate}
+                        if eff_kind == isa.BR_MR:
+                            memread_active = True
+                            memread_rem = p.mem_read_cycles
+                        if speculate:
+                            spec_active = True
+                            spec_regs_ckpt = regs.copy()
+                            pc += 1        # predicted not-taken
+            else:   # OP_NOP
+                pc += 1
+
+        if not progressed:
+            stall_cycles += 1
+
+        cycle += 1
+
+        # ---- 7. halt check ----------------------------------------------
+        if (pc >= P and not rs and not any(fu_busy) and not cdb
+                and br is None and not memread_active and fe_wait == 0):
+            return Result(cycles=cycle, tasks=tasks, mem=mem, regs=regs,
+                          fu_busy_cycles=fu_busy_cycles,
+                          spec_aborted=spec_aborted, stall_cycles=stall_cycles,
+                          halted=True)
+
+    return Result(cycles=cycle, tasks=tasks, mem=mem, regs=regs,
+                  fu_busy_cycles=fu_busy_cycles, spec_aborted=spec_aborted,
+                  stall_cycles=stall_cycles, halted=False)
+
+
+def _dispatch_task(rs, tracker, by_uid, tasks, acc, dep, out_s, out_e, src_s,
+                   uid, age, cycle, is_spec):
+    """Shared dispatch bookkeeping (RS + tracker + trace)."""
+    # WAW replacement: a new producer of an overlapping range supersedes
+    # older tracker entries (strict paper mode would skip this; see DESIGN.md).
+    tracker[:] = [t for t in tracker
+                  if not (t["s"] < out_e and out_s < t["e"])]
+    tracker.append({"s": out_s, "e": out_e, "uid": uid, "is_spec": is_spec})
+    rs.append(_RS(uid, acc, dep, age, out_s, out_e, src_s,
+                  FUNC_CYCLES[acc], is_spec))
+    rec = TaskRecord(uid=uid, func=acc, dispatch_cycle=cycle, dep_uid=dep,
+                     is_spec=is_spec)
+    tasks.append(rec)
+    by_uid[uid] = rec

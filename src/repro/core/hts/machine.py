@@ -1,0 +1,635 @@
+"""JAX cycle-accurate HTS machine (the paper's simulator as a compiled program).
+
+Same semantics as :mod:`golden` (see its docstring for the within-cycle phase
+order) but implemented with fixed-capacity state arrays and ``jax.lax``
+control flow, so that
+
+  * one simulation is a single ``jit``-compiled ``lax.while_loop``;
+  * the per-class accelerator count ``n_fu`` is a *runtime argument*, so the
+    Fig-10 strong-scaling sweep is one ``vmap`` over FU configurations;
+  * an optional **event-skip** mode (beyond-paper) advances time directly to
+    the next scheduler event instead of ticking every cycle — exact-equivalent
+    schedules (tested), 10-400× faster wall-clock for interrupt-dominated
+    (naive/software) cost models.
+
+GPR side effects on a squashed speculative path are rolled back from a
+checkpoint taken at speculation entry (the paper is silent on GPR recovery;
+an OoO core would checkpoint the RAT — DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa
+from .costs import FUNC_CYCLES, NUM_FUNCS, SchedulerCosts
+from .golden import HtsParams
+
+I32 = jnp.int32
+NEG = jnp.int32(-1)
+BIG = jnp.int32(2**30)
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineSpec:
+    """Static configuration baked into the compiled machine."""
+    params: HtsParams = HtsParams()
+    costs: SchedulerCosts = None
+    max_fu_per_class: int = 16     # FU pool width (n_fu may be ≤ this, traced)
+    event_skip: bool = True
+    max_cycles: int = 5_000_000
+
+
+def make_machine(spec: MachineSpec, max_prog: int = 256):
+    """Build the machine under ``spec``; returns
+    ``run(ftab, p_len, n_fu, mem_init, effects)``.
+
+    The *program is a runtime input* — ``ftab`` is the (max_prog, 10) decoded
+    field table (``isa.decode_table`` output, zero-padded) and ``p_len`` its
+    true length — so one compilation serves every benchmark, and ``vmap`` can
+    batch over programs as well as FU configurations.
+
+    ``n_fu``: (NUM_FUNCS,) int32 — units per accelerator class (traced).
+    ``mem_init``/``effects``: (total_mem,) int32 images.
+    Returns a dict of schedule/trace arrays (see ``out`` at the bottom).
+    """
+    p = spec.params
+    c = spec.costs
+    P = max_prog
+    NF = NUM_FUNCS
+    NFU = NF * spec.max_fu_per_class
+    S = p.rs_entries
+    T = p.tracker_entries
+    L = p.tlb_entries
+    M = p.total_mem
+    U = p.max_tasks + 1            # uid-indexed trace arrays (uid 0 unused)
+    C = p.max_tasks                # CDB queue capacity (never binds)
+
+    fu_cls = jnp.asarray(np.repeat(np.arange(NF), spec.max_fu_per_class), I32)
+    fu_pos = jnp.asarray(np.tile(np.arange(spec.max_fu_per_class), NF), I32)
+    func_cycles = jnp.asarray(FUNC_CYCLES, I32)
+    mem_idx = jnp.arange(M, dtype=I32)
+
+    def init_state(mem_init, effects):
+        z = functools.partial(jnp.zeros, dtype=I32)
+        zb = functools.partial(jnp.zeros, dtype=jnp.bool_)
+        return dict(
+            pc=I32(0), cycle=I32(0), dt=I32(1), fe_wait=I32(0),
+            next_uid=I32(1), age=I32(0), ticket=I32(0),
+            regs=z(p.num_regs), mem=jnp.asarray(mem_init, I32),
+            effect=jnp.asarray(effects, I32),
+            rs_valid=zb(S), rs_uid=z(S), rs_func=z(S), rs_dep=z(S),
+            rs_age=z(S), rs_out_s=z(S), rs_out_e=z(S), rs_src=z(S),
+            rs_exec=z(S), rs_spec=zb(S),
+            fu_busy=zb(NFU), fu_uid=z(NFU), fu_rem=z(NFU),
+            fu_out_s=z(NFU), fu_out_e=z(NFU), fu_src=z(NFU), fu_spec=zb(NFU),
+            fu_busy_cycles=z(NFU),
+            trk_valid=zb(T), trk_s=z(T), trk_e=z(T), trk_uid=z(T), trk_spec=zb(T),
+            tlb_valid=zb(L), tlb_os=z(L), tlb_oe=z(L), tlb_slot=z(L),
+            tlb_seq=z(L), tlb_com=zb(L), tlb_seq_ctr=I32(0),
+            cdb_valid=zb(C), cdb_uid=z(C), cdb_ticket=z(C), cdb_ready=z(C),
+            cdb_spec=zb(C),
+            br_active=jnp.bool_(False), br_kind=I32(0), br_pc=I32(0),
+            br_off=I32(0), br_cond=I32(0), br_thr=I32(0), br_addr=I32(0),
+            br_wait=I32(0), br_speculating=jnp.bool_(False),
+            spec_active=jnp.bool_(False), spec_ckpt=z(p.num_regs),
+            mr_active=jnp.bool_(False), mr_rem=I32(0),
+            halted=jnp.bool_(False), overflow=jnp.bool_(False),
+            stall_cycles=I32(0), spec_aborted=I32(0),
+            # uid-indexed trace
+            tr_func=jnp.full((U,), NEG, I32), tr_dispatch=jnp.full((U,), NEG, I32),
+            tr_issue=jnp.full((U,), NEG, I32), tr_complete=jnp.full((U,), NEG, I32),
+            tr_broadcast=jnp.full((U,), NEG, I32), tr_dep=z(U),
+            tr_aborted=zb(U),
+        )
+
+    # ------------------------------------------------------------------
+    # shared helpers
+    # ------------------------------------------------------------------
+    def remap(st, addr):
+        match = st["tlb_valid"] & (st["tlb_os"] <= addr) & (addr < st["tlb_oe"])
+        seq = jnp.where(match, st["tlb_seq"], -1)
+        best = jnp.argmax(seq)
+        phys = (p.tm_base + st["tlb_slot"][best] * p.tm_slot_words
+                + (addr - st["tlb_os"][best]))
+        return jnp.where(match.any(), phys, addr)
+
+    def tracker_lookup(st, s, e):
+        ov = st["trk_valid"] & (st["trk_s"] < e) & (s < st["trk_e"])
+        return jnp.max(jnp.where(ov, st["trk_uid"], 0))
+
+    def eval_cond(cond, v, thr):
+        return jnp.select(
+            [cond == isa.CND_EQ, cond == isa.CND_NEQ, cond == isa.CND_GE],
+            [v == thr, v != thr, v >= thr], v <= thr)
+
+    def copy_range(dst_arr, src_arr, dst, src, n, enable):
+        m = enable & (mem_idx >= dst) & (mem_idx < dst + n)
+        src_ix = jnp.clip(mem_idx - dst + src, 0, M - 1)
+        return jnp.where(m, src_arr[src_ix], dst_arr)
+
+    def machine_empty(st):
+        return (~st["rs_valid"].any() & ~st["fu_busy"].any()
+                & ~st["cdb_valid"].any() & ~st["mr_active"] & ~st["br_active"])
+
+    # ------------------------------------------------------------------
+    # phase 1: FU tick (+ completion writes & CDB enqueue, FU-index order)
+    # ------------------------------------------------------------------
+    def fu_tick(st, exists):
+        busy = st["fu_busy"] & exists
+        st["fu_busy_cycles"] = st["fu_busy_cycles"] + jnp.where(busy, st["dt"], 0)
+        rem = jnp.where(busy, st["fu_rem"] - st["dt"], st["fu_rem"])
+        done = busy & (rem <= 0)
+        st["fu_rem"] = rem
+
+        def do_completions(st):
+            def body(i, st):
+                is_done = done[i]
+                st["mem"] = copy_range(
+                    st["mem"], st["effect"], st["fu_out_s"][i], st["fu_src"][i],
+                    st["fu_out_e"][i] - st["fu_out_s"][i], is_done)
+                slot = jnp.argmin(st["cdb_valid"])
+                free_ok = ~st["cdb_valid"][slot]
+                st["overflow"] = st["overflow"] | (is_done & ~free_ok)
+                w = is_done & free_ok
+                st["cdb_valid"] = st["cdb_valid"].at[slot].set(
+                    jnp.where(w, True, st["cdb_valid"][slot]))
+                st["cdb_uid"] = st["cdb_uid"].at[slot].set(
+                    jnp.where(w, st["fu_uid"][i], st["cdb_uid"][slot]))
+                st["cdb_ticket"] = st["cdb_ticket"].at[slot].set(
+                    jnp.where(w, st["ticket"], st["cdb_ticket"][slot]))
+                st["cdb_ready"] = st["cdb_ready"].at[slot].set(
+                    jnp.where(w, st["cycle"] + c.completion_extra,
+                              st["cdb_ready"][slot]))
+                st["cdb_spec"] = st["cdb_spec"].at[slot].set(
+                    jnp.where(w, st["fu_spec"][i], st["cdb_spec"][slot]))
+                st["ticket"] = st["ticket"] + jnp.where(w, 1, 0)
+                uid = st["fu_uid"][i]
+                st["tr_complete"] = st["tr_complete"].at[uid].set(
+                    jnp.where(is_done, st["cycle"], st["tr_complete"][uid]))
+                st["fu_busy"] = st["fu_busy"].at[i].set(
+                    jnp.where(is_done, False, st["fu_busy"][i]))
+                st["fu_uid"] = st["fu_uid"].at[i].set(
+                    jnp.where(is_done, 0, st["fu_uid"][i]))
+                return st
+            return jax.lax.fori_loop(0, NFU, body, st)
+
+        return jax.lax.cond(done.any(), do_completions, lambda s: s, st)
+
+    # ------------------------------------------------------------------
+    # phase 2+3: memread tick and CDB grant
+    # ------------------------------------------------------------------
+    def memread_tick(st):
+        rem = jnp.where(st["mr_active"], st["mr_rem"] - st["dt"], st["mr_rem"])
+        fired = st["mr_active"] & (rem <= 0)
+        st["mr_rem"] = rem
+        st["mr_active"] = st["mr_active"] & ~fired
+        return st, fired
+
+    def cdb_grant(st, br_ready):
+        def grant_one(carry, _):
+            st, br_ready = carry
+            ready = st["cdb_valid"] & (st["cdb_ready"] <= st["cycle"])
+            idx = jnp.argmin(jnp.where(ready, st["cdb_ticket"], BIG))
+            has = ready.any()
+            uid = st["cdb_uid"][idx]
+            st["cdb_valid"] = st["cdb_valid"].at[idx].set(
+                jnp.where(has, False, st["cdb_valid"][idx]))
+            st["rs_dep"] = jnp.where(has & (st["rs_dep"] == uid), 0, st["rs_dep"])
+            st["trk_valid"] = st["trk_valid"] & ~(has & (st["trk_uid"] == uid))
+            st["tr_broadcast"] = st["tr_broadcast"].at[uid].set(
+                jnp.where(has, st["cycle"], st["tr_broadcast"][uid]))
+            br_ready = br_ready | (has & st["br_active"]
+                                   & (st["br_kind"] == isa.BR_BR)
+                                   & (st["br_wait"] == uid))
+            return (st, br_ready), None
+        (st, br_ready), _ = jax.lax.scan(grant_one, (st, br_ready), None,
+                                         length=c.cdb_width)
+        return st, br_ready
+
+    # ------------------------------------------------------------------
+    # phase 4: branch resolution
+    # ------------------------------------------------------------------
+    def branch_resolve(st, br_ready):
+        fire = st["br_active"] & br_ready
+        value = st["mem"][remap(st, st["br_addr"])]
+        taken = eval_cond(st["br_cond"], value, st["br_thr"])
+        target = st["br_pc"] + jnp.where(taken, st["br_off"], 1)
+        spec = st["br_speculating"]
+
+        commit = fire & spec & ~taken
+        squash = fire & spec & taken
+        plain = fire & ~spec
+
+        # --- commit: speculative state becomes architectural
+        st["tlb_com"] = st["tlb_com"] | (commit & st["tlb_valid"])
+        st["trk_spec"] = st["trk_spec"] & ~commit
+        st["rs_spec"] = st["rs_spec"] & ~commit
+        st["fu_spec"] = st["fu_spec"] & ~commit
+        st["cdb_spec"] = st["cdb_spec"] & ~commit
+
+        # --- squash: discard speculative state, roll back, redirect
+        rs_kill = squash & st["rs_valid"] & st["rs_spec"]
+        fu_kill = squash & st["fu_busy"] & st["fu_spec"]
+        st["tr_aborted"] = st["tr_aborted"].at[
+            jnp.where(rs_kill, st["rs_uid"], 0)].set(True)
+        st["tr_aborted"] = st["tr_aborted"].at[
+            jnp.where(fu_kill, st["fu_uid"], 0)].set(True)
+        st["tr_aborted"] = st["tr_aborted"].at[0].set(False)
+        st["spec_aborted"] = (st["spec_aborted"]
+                              + rs_kill.sum(dtype=I32) + fu_kill.sum(dtype=I32))
+        st["rs_valid"] = st["rs_valid"] & ~rs_kill
+        st["fu_busy"] = st["fu_busy"] & ~fu_kill
+        st["fu_uid"] = jnp.where(fu_kill, 0, st["fu_uid"])
+        st["trk_valid"] = st["trk_valid"] & ~(squash & st["trk_spec"])
+        st["tlb_valid"] = st["tlb_valid"] & ~(squash & ~st["tlb_com"])
+        st["cdb_valid"] = st["cdb_valid"] & ~(squash & st["cdb_spec"])
+        st["regs"] = jnp.where(squash, st["spec_ckpt"], st["regs"])
+        st["pc"] = jnp.where(squash | plain, target, st["pc"])
+        st["fe_wait"] = jnp.where(squash, 0, st["fe_wait"])
+
+        st["spec_active"] = st["spec_active"] & ~(commit | squash)
+        st["br_active"] = st["br_active"] & ~fire
+        return st
+
+    # ------------------------------------------------------------------
+    # phase 5: RS issue (age order, per-class capacity, global width cap)
+    # ------------------------------------------------------------------
+    def rs_issue(st, exists):
+        ready = st["rs_valid"] & (st["rs_dep"] == 0)
+        free = exists & ~st["fu_busy"]
+        n_free = jnp.zeros((NF,), I32).at[fu_cls].add(free.astype(I32))
+        # rank of each ready entry among ready entries of the same class, by age
+        age = jnp.where(ready, st["rs_age"], BIG)
+        same_cls = st["rs_func"][:, None] == st["rs_func"][None, :]
+        older = (age[None, :] < age[:, None]) & same_cls & ready[None, :]
+        cls_rank = older.sum(axis=1).astype(I32)
+        issuable = ready & (cls_rank < n_free[st["rs_func"]])
+        # global width cap: smallest ages among issuable
+        g_age = jnp.where(issuable, st["rs_age"], BIG)
+        g_rank = (g_age[None, :] < g_age[:, None]).sum(axis=1).astype(I32)
+        fire = issuable & (g_rank < c.issue_width)
+        # among fired entries of a class, k-th by age → k-th free unit by index
+        f_age = jnp.where(fire, st["rs_age"], BIG)
+        f_older = (f_age[None, :] < f_age[:, None]) & same_cls & fire[None, :]
+        f_rank = f_older.sum(axis=1).astype(I32)
+        free_rank = (jnp.cumsum(free.astype(I32)) - 1).astype(I32)
+        # per-class free rank: rank among free units of same class, by fu index
+        cls_eq = fu_cls[None, :] == fu_cls[:, None]
+        lower = cls_eq & free[None, :] & (jnp.arange(NFU)[None, :]
+                                          < jnp.arange(NFU)[:, None])
+        unit_rank = lower.sum(axis=1).astype(I32)
+        del free_rank
+        # match matrix: entry e → unit u
+        m = (fire[:, None] & free[None, :]
+             & (st["rs_func"][:, None] == fu_cls[None, :])
+             & (f_rank[:, None] == unit_rank[None, :]))
+        unit_of_entry = jnp.argmax(m, axis=1)      # valid where fire
+        entry_of_unit = jnp.argmax(m, axis=0)      # valid where any col
+        unit_hit = m.any(axis=0)
+
+        st["fu_busy"] = st["fu_busy"] | unit_hit
+        st["fu_uid"] = jnp.where(unit_hit, st["rs_uid"][entry_of_unit], st["fu_uid"])
+        st["fu_rem"] = jnp.where(unit_hit, st["rs_exec"][entry_of_unit], st["fu_rem"])
+        st["fu_out_s"] = jnp.where(unit_hit, st["rs_out_s"][entry_of_unit],
+                                   st["fu_out_s"])
+        st["fu_out_e"] = jnp.where(unit_hit, st["rs_out_e"][entry_of_unit],
+                                   st["fu_out_e"])
+        st["fu_src"] = jnp.where(unit_hit, st["rs_src"][entry_of_unit], st["fu_src"])
+        st["fu_spec"] = jnp.where(unit_hit, st["rs_spec"][entry_of_unit],
+                                  st["fu_spec"])
+        st["tr_issue"] = st["tr_issue"].at[
+            jnp.where(fire, st["rs_uid"], 0)].set(st["cycle"])
+        st["tr_issue"] = st["tr_issue"].at[0].set(NEG)
+        st["rs_valid"] = st["rs_valid"] & ~fire
+        del unit_of_entry
+        return st
+
+    # ------------------------------------------------------------------
+    # phase 6: frontend — one instruction
+    # ------------------------------------------------------------------
+    def frontend(st, F, p_len):
+        blocked_wait = st["fe_wait"] > 0
+        st["fe_wait"] = jnp.maximum(st["fe_wait"] - st["dt"], 0)
+        blocked_br = st["br_active"] & ~st["br_speculating"]
+        drained = st["pc"] >= p_len
+        active = ~blocked_wait & ~blocked_br & ~drained
+
+        pcc = jnp.clip(st["pc"], 0, max(P - 1, 0))
+        op = F["op"][pcc]
+        a, asz, b, bsz = F["a"][pcc], F["asz"][pcc], F["b"][pcc], F["bsz"][pcc]
+        ctl = F["ctl"][pcc]
+        acc = F["acc"][pcc]
+
+        progressed = jnp.bool_(False)
+
+        # ---- control ops (1 cycle each) --------------------------------
+        is_add = active & (op == isa.OP_ADD)
+        is_mul = active & (op == isa.OP_MUL)
+        is_mov = active & (op == isa.OP_MOV)
+        is_jmp = active & (op == isa.OP_JUMP)
+        is_lbeg = active & (op == isa.OP_LBEG)
+        is_lend = active & (op == isa.OP_LEND)
+        is_nop = active & (op == isa.OP_NOP)
+
+        regs = st["regs"]
+        val = jnp.select(
+            [is_add, is_mul, is_mov, is_lbeg],
+            [regs[a] + regs[asz], regs[a] * regs[asz],
+             jnp.where(ctl & isa.CTL_IMM, a, regs[a]),
+             jnp.where(ctl & 1, regs[a], a)],
+            0)
+        wr_reg = jnp.select([is_add | is_mul | is_mov, is_lbeg],
+                            [b, asz], -1)
+        lend_val = regs[asz] - 1
+        regs = jnp.where((jnp.arange(p.num_regs) == wr_reg)
+                         & (is_add | is_mul | is_mov | is_lbeg), val, regs)
+        regs = jnp.where((jnp.arange(p.num_regs) == asz) & is_lend,
+                         lend_val, regs)
+        st["regs"] = regs
+
+        pc_next = st["pc"]
+        pc_next = jnp.where(is_add | is_mul | is_mov | is_lbeg | is_nop,
+                            st["pc"] + 1, pc_next)
+        pc_next = jnp.where(is_jmp, a, pc_next)
+        pc_next = jnp.where(is_lend,
+                            jnp.where(lend_val > 0, st["pc"] - b, st["pc"] + 1),
+                            pc_next)
+        progressed = progressed | is_add | is_mul | is_mov | is_jmp \
+            | is_lbeg | is_lend | is_nop
+
+        # ---- task dispatch ---------------------------------------------
+        is_task = active & (op == isa.OP_TASK)
+        in_s = jnp.where(ctl & isa.CTL_IN_INDIRECT, regs[a], a)
+        out_s = jnp.where(ctl & isa.CTL_OUT_INDIRECT, regs[b], b)
+        in_e, out_e = in_s + asz, out_s + bsz
+        phys_in = remap(st, in_s)
+        dep = tracker_lookup(st, phys_in, phys_in + (in_e - in_s))
+
+        rs_full = st["rs_valid"].all()
+        trk_full = st["trk_valid"].all()
+        empty_req = (jnp.bool_(c.in_order) & ~machine_empty(st))
+        stall_struct = rs_full | trk_full | empty_req
+
+        # speculative output remap through TLB/TM
+        slot_used = jax.vmap(
+            lambda s: (st["tlb_valid"] & (st["tlb_slot"] == s)).any())(
+                jnp.arange(p.tm_slots))
+        tm_slot = jnp.argmin(slot_used)
+        tm_avail = ~slot_used.all()
+        tlb_full = st["tlb_valid"].all()
+        committed_seq = jnp.where(st["tlb_valid"] & st["tlb_com"],
+                                  st["tlb_seq"], BIG)
+        victim = jnp.argmin(committed_seq)
+        has_victim = (committed_seq[victim] < BIG)
+
+        spec = st["spec_active"]
+        # drain path: TM full and a committed victim exists
+        do_drain = is_task & ~stall_struct & spec & ~tm_avail & has_victim
+        vic_base = p.tm_base + st["tlb_slot"][victim] * p.tm_slot_words
+        st["mem"] = copy_range(st["mem"], st["mem"], st["tlb_os"][victim],
+                               vic_base, st["tlb_oe"][victim] - st["tlb_os"][victim],
+                               do_drain)
+        st["tlb_valid"] = st["tlb_valid"].at[victim].set(
+            jnp.where(do_drain, False, st["tlb_valid"][victim]))
+        st["fe_wait"] = jnp.where(do_drain, p.tlb_drain_cycles, st["fe_wait"])
+
+        spec_ok = spec & tm_avail & ~tlb_full
+        dispatch = is_task & ~stall_struct & (~spec | spec_ok)
+        phys_out = jnp.where(spec, p.tm_base + tm_slot * p.tm_slot_words, out_s)
+        phys_oe = phys_out + (out_e - out_s)
+
+        # TLB insert for speculative dispatch
+        tlb_slot_new = jnp.argmin(st["tlb_valid"])
+        ins_tlb = dispatch & spec
+        st["tlb_valid"] = st["tlb_valid"].at[tlb_slot_new].set(
+            jnp.where(ins_tlb, True, st["tlb_valid"][tlb_slot_new]))
+        st["tlb_os"] = st["tlb_os"].at[tlb_slot_new].set(
+            jnp.where(ins_tlb, out_s, st["tlb_os"][tlb_slot_new]))
+        st["tlb_oe"] = st["tlb_oe"].at[tlb_slot_new].set(
+            jnp.where(ins_tlb, out_e, st["tlb_oe"][tlb_slot_new]))
+        st["tlb_slot"] = st["tlb_slot"].at[tlb_slot_new].set(
+            jnp.where(ins_tlb, tm_slot, st["tlb_slot"][tlb_slot_new]))
+        st["tlb_seq"] = st["tlb_seq"].at[tlb_slot_new].set(
+            jnp.where(ins_tlb, st["tlb_seq_ctr"], st["tlb_seq"][tlb_slot_new]))
+        st["tlb_com"] = st["tlb_com"].at[tlb_slot_new].set(
+            jnp.where(ins_tlb, False, st["tlb_com"][tlb_slot_new]))
+        st["tlb_seq_ctr"] = st["tlb_seq_ctr"] + jnp.where(ins_tlb, 1, 0)
+
+        # WAW replacement + tracker insert
+        waw = dispatch & st["trk_valid"] & (st["trk_s"] < phys_oe) \
+            & (phys_out < st["trk_e"])
+        st["trk_valid"] = st["trk_valid"] & ~waw
+        trk_new = jnp.argmin(st["trk_valid"])
+        st["trk_valid"] = st["trk_valid"].at[trk_new].set(
+            jnp.where(dispatch, True, st["trk_valid"][trk_new]))
+        st["trk_s"] = st["trk_s"].at[trk_new].set(
+            jnp.where(dispatch, phys_out, st["trk_s"][trk_new]))
+        st["trk_e"] = st["trk_e"].at[trk_new].set(
+            jnp.where(dispatch, phys_oe, st["trk_e"][trk_new]))
+        st["trk_uid"] = st["trk_uid"].at[trk_new].set(
+            jnp.where(dispatch, st["next_uid"], st["trk_uid"][trk_new]))
+        st["trk_spec"] = st["trk_spec"].at[trk_new].set(
+            jnp.where(dispatch, spec, st["trk_spec"][trk_new]))
+
+        # RS insert
+        rs_new = jnp.argmin(st["rs_valid"])
+        uid = st["next_uid"]
+        st["overflow"] = st["overflow"] | (dispatch & (uid >= U))
+        uidc = jnp.clip(uid, 0, U - 1)
+        for k, v in (("rs_valid", True), ("rs_uid", uid), ("rs_func", acc),
+                     ("rs_dep", dep), ("rs_age", st["age"]),
+                     ("rs_out_s", phys_out), ("rs_out_e", phys_oe),
+                     ("rs_src", out_s), ("rs_exec", func_cycles[jnp.clip(acc, 0, NF - 1)]),
+                     ("rs_spec", spec)):
+            st[k] = st[k].at[rs_new].set(jnp.where(dispatch, v, st[k][rs_new]))
+        st["tr_func"] = st["tr_func"].at[uidc].set(
+            jnp.where(dispatch, acc, st["tr_func"][uidc]))
+        st["tr_dispatch"] = st["tr_dispatch"].at[uidc].set(
+            jnp.where(dispatch, st["cycle"], st["tr_dispatch"][uidc]))
+        st["tr_dep"] = st["tr_dep"].at[uidc].set(
+            jnp.where(dispatch, dep, st["tr_dep"][uidc]))
+        st["next_uid"] = st["next_uid"] + jnp.where(dispatch, 1, 0)
+        st["age"] = st["age"] + jnp.where(dispatch, 1, 0)
+        st["fe_wait"] = jnp.where(dispatch, c.dispatch_serial_cost - 1,
+                                  st["fe_wait"])
+        pc_next = jnp.where(dispatch, st["pc"] + 1, pc_next)
+        progressed = progressed | dispatch
+
+        # ---- if / branches ----------------------------------------------
+        is_if = active & (op == isa.OP_IF) & ~st["br_active"]
+        kind = ctl & 0x3
+        cond = (ctl >> 2) & 0x3
+        thr = regs[asz]
+        # RR: resolve inline with a 1-cycle bubble
+        rr = is_if & (kind == isa.BR_RR)
+        rr_taken = eval_cond(cond, regs[a], thr)
+        pc_next = jnp.where(rr, jnp.where(rr_taken, st["pc"] + b, st["pc"] + 1),
+                            pc_next)
+        st["fe_wait"] = jnp.where(rr, 1, st["fe_wait"])
+        # MR/BR
+        mrbr = is_if & (kind != isa.BR_RR) & ~(jnp.bool_(c.in_order)
+                                               & ~machine_empty(st))
+        phys_a = remap(st, a)
+        wait_uid = tracker_lookup(st, phys_a, phys_a + 1)
+        eff_kind = jnp.where((kind == isa.BR_BR) & (wait_uid == 0),
+                             I32(isa.BR_MR), kind)
+        speculate = jnp.bool_(c.speculation) & ~st["spec_active"]
+        st["br_active"] = st["br_active"] | mrbr
+        for k, v in (("br_kind", eff_kind), ("br_pc", st["pc"]), ("br_off", b),
+                     ("br_cond", cond), ("br_thr", thr), ("br_addr", a),
+                     ("br_wait", wait_uid)):
+            st[k] = jnp.where(mrbr, v, st[k])
+        st["br_speculating"] = jnp.where(mrbr, speculate, st["br_speculating"])
+        start_mr = mrbr & (eff_kind == isa.BR_MR)
+        st["mr_active"] = st["mr_active"] | start_mr
+        st["mr_rem"] = jnp.where(start_mr, p.mem_read_cycles, st["mr_rem"])
+        enter_spec = mrbr & speculate
+        st["spec_active"] = st["spec_active"] | enter_spec
+        st["spec_ckpt"] = jnp.where(enter_spec, regs, st["spec_ckpt"])
+        pc_next = jnp.where(enter_spec, st["pc"] + 1, pc_next)
+        progressed = progressed | rr | mrbr
+
+        st["pc"] = pc_next
+        st["stall_cycles"] = st["stall_cycles"] + jnp.where(progressed, 0, 1)
+        return st
+
+    # ------------------------------------------------------------------
+    # event-skip: time to the next scheduler event
+    # ------------------------------------------------------------------
+    def next_dt(st, exists, F, p_len):
+        if not spec.event_skip:
+            return I32(1)
+        busy = st["fu_busy"] & exists
+        cands = jnp.where(busy, st["fu_rem"], BIG)
+        dt = jnp.min(cands)
+        dt = jnp.minimum(dt, jnp.where(st["mr_active"], st["mr_rem"], BIG))
+        cdb_dt = jnp.where(st["cdb_valid"],
+                           jnp.maximum(st["cdb_ready"] - st["cycle"], 1), BIG)
+        dt = jnp.minimum(dt, jnp.min(cdb_dt))
+        dt = jnp.minimum(dt, jnp.where(st["fe_wait"] > 0, st["fe_wait"], BIG))
+        # frontend can act next cycle → no skipping
+        pcc = jnp.clip(st["pc"], 0, max(P - 1, 0))
+        at_op = F["op"][pcc]
+        in_order_block = (jnp.bool_(c.in_order) & ~machine_empty(st)
+                          & ((at_op == isa.OP_TASK) | (at_op == isa.OP_IF)))
+        # structural stall: a TASK blocked on a full RS / Memory Tracker can
+        # only unblock via an issue (covered below) or a CDB grant (in the
+        # min) — skippable
+        struct_block = ((at_op == isa.OP_TASK)
+                        & (st["rs_valid"].all() | st["trk_valid"].all()))
+        fe_act = ((st["fe_wait"] == 0)
+                  & ~(st["br_active"] & ~st["br_speculating"])
+                  & (st["pc"] < p_len) & ~in_order_block & ~struct_block)
+        dt = jnp.where(fe_act, 1, dt)
+        # a ready RS entry with a free unit issues next cycle
+        free = exists & ~st["fu_busy"]
+        n_free = jnp.zeros((NF,), I32).at[fu_cls].add(free.astype(I32))
+        ready = st["rs_valid"] & (st["rs_dep"] == 0)
+        issue_now = (ready & (n_free[st["rs_func"]] > 0)).any()
+        dt = jnp.where(issue_now, 1, dt)
+        return jnp.clip(dt, 1, BIG)
+
+    # ------------------------------------------------------------------
+    # full step + driver
+    # ------------------------------------------------------------------
+    def step(st, exists, F, p_len):
+        st = fu_tick(st, exists)
+        st, br_ready = memread_tick(st)
+        st, br_ready = cdb_grant(st, br_ready)
+        st = branch_resolve(st, br_ready)
+        st = rs_issue(st, exists)
+        st = frontend(st, F, p_len)
+        done = ((st["pc"] >= p_len) & ~st["rs_valid"].any() & ~st["fu_busy"].any()
+                & ~st["cdb_valid"].any() & ~st["br_active"] & ~st["mr_active"]
+                & (st["fe_wait"] == 0))
+        dt = next_dt(st, exists, F, p_len)
+        st["cycle"] = st["cycle"] + jnp.where(done, 1, dt)
+        st["dt"] = dt
+        st["halted"] = done
+        return st
+
+    def run(ftab, p_len, n_fu, mem_init, effects):
+        F = {name: ftab[:, i].astype(I32)
+             for i, name in enumerate(isa.FIELDS)}
+        p_len = jnp.asarray(p_len, I32)
+        exists = fu_pos < n_fu[fu_cls]
+        st = init_state(mem_init, effects)
+
+        def cond(st):
+            return (~st["halted"] & ~st["overflow"]
+                    & (st["cycle"] < spec.max_cycles))
+
+        st = jax.lax.while_loop(cond, lambda s: step(s, exists, F, p_len), st)
+        return dict(
+            cycles=st["cycle"], halted=st["halted"], overflow=st["overflow"],
+            n_tasks=st["next_uid"] - 1, spec_aborted=st["spec_aborted"],
+            stall_cycles=st["stall_cycles"],
+            fu_busy_cycles=st["fu_busy_cycles"],
+            mem=st["mem"], regs=st["regs"],
+            tr_func=st["tr_func"], tr_dispatch=st["tr_dispatch"],
+            tr_issue=st["tr_issue"], tr_complete=st["tr_complete"],
+            tr_broadcast=st["tr_broadcast"], tr_dep=st["tr_dep"],
+            tr_aborted=st["tr_aborted"],
+        )
+
+    return run
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled(spec: MachineSpec, max_prog: int):
+    return jax.jit(make_machine(spec, max_prog))
+
+
+def pack_program(code: np.ndarray, max_prog: int) -> tuple[np.ndarray, int]:
+    """Decode + zero-pad a program to the machine's static table shape."""
+    tbl = isa.decode_table(code)
+    p_len = len(tbl)
+    if p_len > max_prog:
+        raise ValueError(f"program length {p_len} > max_prog {max_prog}")
+    pad = np.zeros((max_prog, tbl.shape[1]), np.int32)
+    pad[:p_len] = tbl
+    # padding rows decode as acc-id 0 tasks but are never fetched (pc >= p_len)
+    return pad, p_len
+
+
+def images(params: HtsParams, mem_init=None, effects=None):
+    mem = np.zeros((params.total_mem,), np.int32)
+    eff = np.zeros((params.total_mem,), np.int32)
+    for k, v in (mem_init or {}).items():
+        mem[k] = v
+    for k, v in (effects or {}).items():
+        eff[k] = v
+    return mem, eff
+
+
+def simulate(code: np.ndarray, costs: SchedulerCosts,
+             params: HtsParams = HtsParams(),
+             n_fu=None, mem_init=None, effects=None,
+             event_skip: bool = True, max_cycles: int = 5_000_000,
+             max_fu_per_class: int = 16, max_prog: int = 256) -> dict[str, Any]:
+    """One-shot convenience wrapper around the cached compiled machine."""
+    ms = MachineSpec(params=params, costs=costs, event_skip=event_skip,
+                     max_cycles=max_cycles, max_fu_per_class=max_fu_per_class)
+    run = _compiled(ms, max_prog)
+    ftab, p_len = pack_program(code, max_prog)
+    n_fu = jnp.asarray(n_fu if n_fu is not None else params.n_fu, I32)
+    mem, eff = images(params, mem_init, effects)
+    out = run(jnp.asarray(ftab), p_len, n_fu, jnp.asarray(mem), jnp.asarray(eff))
+    return jax.tree.map(np.asarray, out)
+
+
+def schedule_tuple(out: dict[str, Any]) -> list[tuple]:
+    """Match golden.Result.schedule_tuple() for equivalence tests."""
+    n = int(out["n_tasks"])
+    rows = []
+    for uid in range(1, n + 1):
+        rows.append((uid, int(out["tr_func"][uid]), int(out["tr_dispatch"][uid]),
+                     int(out["tr_issue"][uid]), int(out["tr_complete"][uid]),
+                     int(out["tr_broadcast"][uid]), bool(out["tr_aborted"][uid])))
+    return rows

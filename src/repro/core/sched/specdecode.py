@@ -1,0 +1,131 @@
+"""Speculative decoding — the paper's speculative task execution mapped onto
+serving (DESIGN.md §3).
+
+Correspondence with the HTS mechanism (paper §IV-C3):
+
+  draft tokens            ↔ speculative tasks (predicted not-taken path)
+  KV-cache tail ≥ pos     ↔ Transactional Memory region (TLB-remapped outputs)
+  target verify chunk     ↔ branch resolution (the BR read on the CDB)
+  accepted prefix commit  ↔ TLB mappings retained on correct speculation
+  pointer rollback        ↔ TLB entry discard on mis-speculation — the stale
+                            K/V beyond the accept point is dead by masking
+                            and overwritten by the next chunk, exactly like
+                            discarded TM regions.
+
+Greedy self-consistent variant: the emitted stream provably equals plain
+greedy decoding of the target model (tested in tests/test_sched.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class SpecStats:
+    proposed: int = 0
+    accepted: int = 0
+    chunks: int = 0
+
+    @property
+    def acceptance(self) -> float:
+        return self.accepted / max(self.proposed, 1)
+
+
+def greedy_decode(model, params, prompt: np.ndarray, n_new: int,
+                  max_len: int) -> np.ndarray:
+    """Plain greedy decoding baseline (token-at-a-time)."""
+    cfg = model.cfg
+    B, P = prompt.shape
+    cache = model.init_cache(B, max_len)
+    step = jax.jit(model.decode_step)
+    toks = jnp.asarray(prompt)
+    out = []
+    cur = toks[:, :1]
+    for t in range(P + n_new - 1):
+        logits, cache = step(params, cache, cur, jnp.int32(t))
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        cur = toks[:, t + 1:t + 2] if t + 1 < P else nxt
+        if t + 1 >= P:
+            out.append(cur[:, 0])
+    return np.stack([np.asarray(o) for o in out], axis=1)
+
+
+def speculative_decode(target, t_params, draft, d_params, prompt: np.ndarray,
+                       n_new: int, k: int, max_len: int
+                       ) -> tuple[np.ndarray, SpecStats]:
+    """Greedy speculative decoding (draft k, verify 1 chunk, rollback).
+
+    ``target``/``draft`` are transformer-family Models (draft is typically a
+    reduced-depth config).  Returns (generated tokens (B, n_new), stats).
+    """
+    t_cfg, d_cfg = target.cfg, draft.cfg
+    B, P = prompt.shape
+    assert B == 1, "spec-decode path is per-sequence (slots batch upstream)"
+    t_cache = target.init_cache(B, max_len)
+    d_cache = draft.init_cache(B, max_len)
+    d_step = jax.jit(draft.decode_step)
+    t_chunk = jax.jit(
+        lambda p, c, tok, pos: T.chunk_step(p, t_cfg, c, tok, pos))
+
+    toks = list(np.asarray(prompt[0]))
+    # prefill both models via chunk scoring (target) / stepping (draft)
+    t_logits, t_cache = t_chunk(t_params, t_cache,
+                                jnp.asarray([toks]), jnp.int32(0))
+    for i in range(P):
+        _, d_cache = d_step(d_params, d_cache,
+                            jnp.asarray([[toks[i]]]), jnp.int32(i))
+    next_tok = int(np.argmax(np.asarray(t_logits[0, -1])))
+
+    stats = SpecStats()
+    generated = [next_tok]
+    # Invariant at loop top: caches hold K/V for positions [0, pos);
+    # sequence[pos] = generated[-1] = next_tok (K/V not yet written — it is
+    # chunk[0] of the next verify, or the first draft feed).
+    pos = P
+    d_pos = P
+    while len(generated) < n_new:
+        # --- draft proposes k tokens (speculative tasks; dc is scratch = TM)
+        proposal = []
+        cur = next_tok
+        dc = d_cache
+        for j in range(k):
+            lg, dc = d_step(d_params, dc, jnp.asarray([[cur]]),
+                            jnp.int32(d_pos + j))
+            cur = int(np.argmax(np.asarray(lg[0, -1])))
+            proposal.append(cur)
+        # --- target verifies chunk = [next_tok, proposal[:-1]] (branch resolve)
+        chunk = [next_tok] + proposal[:-1]
+        lg, t_cache = t_chunk(t_params, t_cache, jnp.asarray([chunk]),
+                              jnp.int32(pos))
+        argmax = [int(a) for a in np.asarray(jnp.argmax(lg[0], axis=-1))]
+        # accepted = target tokens up to and including the first mismatch
+        m = k - 1
+        for j in range(k):
+            if proposal[j] != argmax[j]:
+                m = j
+                break
+        accepted = argmax[:m + 1]
+        stats.chunks += 1
+        stats.proposed += k
+        stats.accepted += sum(1 for j in range(m + 1)
+                              if proposal[j] == argmax[j])
+        generated.extend(accepted)
+        # --- commit/rollback: pointer advances by |accepted|; chunk K/V
+        #     beyond it is dead by masking and overwritten next round (the
+        #     paper's TM discard on mis-speculation).
+        replay = [next_tok] + accepted[:-1]     # sequence[d_pos : pos+|acc|]
+        for j, tk in enumerate(replay):
+            _, d_cache = d_step(d_params, d_cache, jnp.asarray([[tk]]),
+                                jnp.int32(d_pos + j))
+        pos += len(accepted)
+        d_pos += len(replay)
+        next_tok = generated[-1]
+
+    return np.asarray([generated[:n_new]]), stats

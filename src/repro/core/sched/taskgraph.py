@@ -1,0 +1,133 @@
+"""Generic task-DAG scheduling with the HTS policy (paper → runtime layer).
+
+This is the cycle-accurate machine's scheduling *policy* (dependency-driven,
+out-of-order, age-priority issue to free units) lifted to an abstract task
+graph, so the framework can use it to schedule real work: pipeline-parallel
+microbatch×stage grids (pipeline.py) and serving slots (serving.py).
+
+``schedule(..., policy="inorder")`` reproduces the paper's *Naive* baseline at
+this level (issue strictly in submission order, one task at a time);
+``policy="ooo"`` is the HTS policy.  The makespan gap between the two is the
+paper's core claim, now visible in runtime schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    uid: int
+    cls: str                    # resource class ("stage3", "fft", "slot", …)
+    duration: float
+    deps: tuple[int, ...] = ()
+    tag: Optional[tuple] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    uid: int
+    cls: str
+    unit: int
+    start: float
+    end: float
+    tag: Optional[tuple] = None
+
+
+@dataclasses.dataclass
+class Schedule:
+    placements: list[Placement]
+    makespan: float
+
+    def by_unit(self) -> dict[tuple[str, int], list[Placement]]:
+        out: dict[tuple[str, int], list[Placement]] = {}
+        for p in self.placements:
+            out.setdefault((p.cls, p.unit), []).append(p)
+        return out
+
+    def order(self) -> list[int]:
+        return [p.uid for p in sorted(self.placements,
+                                      key=lambda p: (p.start, p.uid))]
+
+
+def schedule(tasks: Sequence[Task], units: dict[str, int],
+             policy: str = "ooo") -> Schedule:
+    """Event-driven list scheduling under the HTS policy.
+
+    ooo:     any ready task may issue to a free unit of its class, oldest
+             (submission order) first — the reservation-station policy.
+    inorder: a task may only issue when every earlier-submitted task has
+             completed (the paper's Naive CPU-driven dispatch).
+    """
+    assert policy in ("ooo", "inorder")
+    by_uid = {t.uid: t for t in tasks}
+    submit_rank = {t.uid: i for i, t in enumerate(tasks)}
+    indeg = {t.uid: 0 for t in tasks}
+    children: dict[int, list[int]] = {t.uid: [] for t in tasks}
+    for t in tasks:
+        for d in t.deps:
+            indeg[t.uid] += 1
+            children[d].append(t.uid)
+
+    free: dict[str, list[int]] = {c: list(range(n)) for c, n in units.items()}
+    ready = [ (submit_rank[t.uid], t.uid) for t in tasks if indeg[t.uid] == 0 ]
+    heapq.heapify(ready)
+    running: list[tuple[float, int, int, int]] = []   # (end, rank, uid, unit)
+    done: set[int] = set()
+    completed_upto = -1          # for inorder: highest contiguous done rank
+    placements: list[Placement] = []
+    now = 0.0
+
+    def can_issue(uid: int) -> bool:
+        if policy == "inorder":
+            return submit_rank[uid] == completed_upto + 1
+        return True
+
+    pending_done: set[int] = set()
+    while len(done) < len(tasks):
+        # issue everything issuable at `now`
+        progressed = True
+        while progressed:
+            progressed = False
+            deferred = []
+            while ready:
+                rank, uid = heapq.heappop(ready)
+                t = by_uid[uid]
+                if can_issue(uid) and free.get(t.cls):
+                    unit = free[t.cls].pop(0)
+                    end = now + t.duration
+                    heapq.heappush(running, (end, rank, uid, unit))
+                    placements.append(Placement(uid, t.cls, unit, now, end,
+                                                t.tag))
+                    progressed = True
+                else:
+                    deferred.append((rank, uid))
+                if policy == "inorder":
+                    break        # at most one outstanding task
+            for item in deferred:
+                heapq.heappush(ready, item)
+            if policy == "inorder":
+                break
+        if not running:
+            if len(done) < len(tasks):
+                raise ValueError("deadlock: cyclic dependencies or missing "
+                                 "resource class")
+            break
+        # advance to next completion
+        end, rank, uid, unit = heapq.heappop(running)
+        now = end
+        t = by_uid[uid]
+        free[t.cls].append(unit)
+        free[t.cls].sort()
+        done.add(uid)
+        pending_done.add(submit_rank[uid])
+        while completed_upto + 1 in pending_done:
+            completed_upto += 1
+        for ch in children[uid]:
+            indeg[ch] -= 1
+            if indeg[ch] == 0:
+                heapq.heappush(ready, (submit_rank[ch], ch))
+
+    return Schedule(placements, max((p.end for p in placements), default=0.0))

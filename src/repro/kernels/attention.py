@@ -1,0 +1,108 @@
+"""Flash-attention forward Pallas kernel (GQA-aware wrapper lives in ops.py).
+
+Canonical TPU online-softmax pattern: grid = (batch·heads, q_blocks, k_blocks)
+with the k axis innermost ("arbitrary" — sequential), VMEM scratch carrying
+the running max ``m``, normalizer ``l`` and accumulator across k blocks.
+Causal q/k blocks that are fully masked are skipped with ``pl.when`` — for
+causal attention this halves the compute vs a masked dense sweep.
+
+Block shapes are MXU-aligned: (BQ, D) × (BK, D)ᵀ contraction with BQ = BK =
+128 and head dim D padded to a lane multiple by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import INTERPRET
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, q_offset: int, bq: int, bk: int,
+                 nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # skip fully-masked blocks: first query row this block = qi*bq + q_offset
+    run = True
+    if causal:
+        run = (ki * bk) <= (qi * bq + q_offset + bq - 1)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)            # (BK, D)
+        v = v_ref[0].astype(jnp.float32)            # (BK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * bq + q_offset + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_scr[...]                          # (BQ, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    q_offset: int = 0, bq: int = DEFAULT_BQ,
+                    bk: int = DEFAULT_BK) -> jax.Array:
+    """q: (BH, Tq, D); k, v: (BH, Tk, D) — heads pre-flattened, GQA pre-repeated.
+
+    ``q_offset`` positions q[0] at absolute key index ``q_offset`` (chunked
+    prefill / decode append).
+    """
+    BH, Tq, D = q.shape
+    Tk = k.shape[1]
+    bq = min(bq, Tq)
+    bk = min(bk, Tk)
+    nq = pl.cdiv(Tq, bq)
+    nk = pl.cdiv(Tk, bk)
+    if scale is None:
+        scale = D ** -0.5
+    kern = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, q_offset=q_offset,
+        bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tq, D), q.dtype),
+        scratch_shapes=[            # VMEM: running max / normalizer / accumulator
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(q, k, v)

@@ -1,0 +1,28 @@
+"""Shared Pallas kernel utilities.
+
+All kernels in this package are written for TPU (``pl.pallas_call`` with
+explicit ``BlockSpec`` VMEM tiling, MXU-aligned inner dims where the math
+allows) and VALIDATED on CPU in ``interpret=True`` mode — the kernel body
+executes in Python, so correctness vs the ``ref.py`` oracles is exact.
+"""
+from __future__ import annotations
+
+import jax
+
+#: interpret mode: True everywhere except a real TPU backend.
+INTERPRET = jax.default_backend() != "tpu"
+
+#: TPU lane / sublane quanta (fp32).  Block shapes are chosen as multiples
+#: where the workload allows; odd DSP frame sizes (40, 64, 256) are padded by
+#: the ops.py wrappers so kernel tiles stay hardware-aligned.
+LANE = 128
+SUBLANE = 8
+MXU = 128
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b

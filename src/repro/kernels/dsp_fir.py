@@ -1,0 +1,169 @@
+"""Pallas TPU kernels for the FIR/IIR filter accelerators (Table II).
+
+These are the paper's Function-level accelerators, adapted to TPU: instead of
+one ASIC processing one 40-sample dataframe, each kernel processes a *batch*
+of dataframes per grid step — the TPU-native analogue of "many accelerator
+instances", with the batch tile as the VMEM working set.
+
+Layout: frames are (B, N) f32; the batch dim is tiled by ``BB`` (sublane-
+aligned), the frame dim stays whole (N ≤ 256 ≪ lane budget).  Filters are
+shift+FMA chains on the VPU; taps are unrolled (K is a design-time constant of
+the accelerator, like the paper's fixed dataframe size).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+BB = 256      # batch tile (frames per grid step)
+
+
+def _grid(b: int) -> tuple[int, ...]:
+    return (pl.cdiv(b, BB),)
+
+
+# ---------------------------------------------------------------------------
+# real FIR
+# ---------------------------------------------------------------------------
+def _real_fir_kernel(x_ref, h_ref, o_ref, *, K: int):
+    x = x_ref[...]
+    h = h_ref[...]
+    n = x.shape[-1]
+    acc = h[0] * x
+    for k in range(1, K):
+        # x shifted right by k with zero fill: y[:, n] += h[k] * x[:, n-k]
+        shifted = jnp.pad(x, ((0, 0), (k, 0)))[:, :n]
+        acc = acc + h[k] * shifted
+    o_ref[...] = acc
+
+
+def real_fir(x: jax.Array, h: jax.Array) -> jax.Array:
+    """x: (B, N) f32, h: (K,) f32 → (B, N)."""
+    B, N = x.shape
+    K = h.shape[0]
+    return pl.pallas_call(
+        functools.partial(_real_fir_kernel, K=K),
+        grid=_grid(B),
+        in_specs=[pl.BlockSpec((BB, N), lambda i: (i, 0)),
+                  pl.BlockSpec((K,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((BB, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
+        interpret=INTERPRET,
+    )(x, h)
+
+
+# ---------------------------------------------------------------------------
+# complex FIR (re/im planes)
+# ---------------------------------------------------------------------------
+def _complex_fir_kernel(xr_ref, xi_ref, h_ref, or_ref, oi_ref, *, K: int):
+    xr, xi = xr_ref[...], xi_ref[...]
+    h = h_ref[...]            # (K, 2)
+    n = xr.shape[-1]
+    ar = h[0, 0] * xr - h[0, 1] * xi
+    ai = h[0, 0] * xi + h[0, 1] * xr
+    for k in range(1, K):
+        sr = jnp.pad(xr, ((0, 0), (k, 0)))[:, :n]
+        si = jnp.pad(xi, ((0, 0), (k, 0)))[:, :n]
+        ar = ar + h[k, 0] * sr - h[k, 1] * si
+        ai = ai + h[k, 0] * si + h[k, 1] * sr
+    or_ref[...] = ar
+    oi_ref[...] = ai
+
+
+def complex_fir(x: jax.Array, h: jax.Array) -> jax.Array:
+    """x: (B, N, 2) re/im, h: (K, 2) → (B, N, 2)."""
+    B, N, _ = x.shape
+    K = h.shape[0]
+    yr, yi = pl.pallas_call(
+        functools.partial(_complex_fir_kernel, K=K),
+        grid=_grid(B),
+        in_specs=[pl.BlockSpec((BB, N), lambda i: (i, 0)),
+                  pl.BlockSpec((BB, N), lambda i: (i, 0)),
+                  pl.BlockSpec((K, 2), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((BB, N), lambda i: (i, 0)),
+                   pl.BlockSpec((BB, N), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, N), x.dtype),
+                   jax.ShapeDtypeStruct((B, N), x.dtype)],
+        interpret=INTERPRET,
+    )(x[..., 0], x[..., 1], h)
+    return jnp.stack([yr, yi], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# adaptive (LMS) FIR — sequential weight update, batch-vectorized
+# ---------------------------------------------------------------------------
+def _adaptive_fir_kernel(x_ref, d_ref, o_ref, *, K: int, mu: float):
+    x = x_ref[...]            # (BB, N)
+    d = d_ref[...]
+    bb, n = x.shape
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0)))     # (BB, N+K-1)
+
+    def step(i, carry):
+        w, out = carry                         # w: (BB, K)
+        win = jax.lax.dynamic_slice_in_dim(xp, i, K, axis=1)[:, ::-1]
+        y = jnp.sum(w * win, axis=1)           # (BB,)
+        e = d[:, i] - y
+        w = w + mu * e[:, None] * win
+        out = jax.lax.dynamic_update_slice_in_dim(out, y[:, None], i, axis=1)
+        return w, out
+
+    _, out = jax.lax.fori_loop(
+        0, n, step, (jnp.zeros((bb, K), x.dtype), jnp.zeros_like(x)))
+    o_ref[...] = out
+
+
+def adaptive_fir(x: jax.Array, d: jax.Array, mu: float, K: int) -> jax.Array:
+    """LMS filter output per frame. x, d: (B, N) → (B, N)."""
+    B, N = x.shape
+    return pl.pallas_call(
+        functools.partial(_adaptive_fir_kernel, K=K, mu=mu),
+        grid=_grid(B),
+        in_specs=[pl.BlockSpec((BB, N), lambda i: (i, 0)),
+                  pl.BlockSpec((BB, N), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BB, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
+        interpret=INTERPRET,
+    )(x, d)
+
+
+# ---------------------------------------------------------------------------
+# IIR — recurrence over the frame, batch-vectorized
+# ---------------------------------------------------------------------------
+def _iir_kernel(x_ref, b_ref, a_ref, o_ref, *, Kb: int, Ka: int):
+    x = x_ref[...]
+    b = b_ref[...]
+    a = a_ref[...]
+    bb, n = x.shape
+    xp = jnp.pad(x, ((0, 0), (Kb - 1, 0)))
+
+    def step(i, carry):
+        ys, out = carry                        # ys: (BB, Ka-1) newest-first
+        xwin = jax.lax.dynamic_slice_in_dim(xp, i, Kb, axis=1)[:, ::-1]
+        y = xwin @ b - ys @ a[1:]
+        ys = jnp.concatenate([y[:, None], ys[:, :-1]], axis=1)
+        out = jax.lax.dynamic_update_slice_in_dim(out, y[:, None], i, axis=1)
+        return ys, out
+
+    _, out = jax.lax.fori_loop(
+        0, n, step, (jnp.zeros((bb, Ka - 1), x.dtype), jnp.zeros_like(x)))
+    o_ref[...] = out
+
+
+def iir(x: jax.Array, b: jax.Array, a: jax.Array) -> jax.Array:
+    """x: (B, N); b: (Kb,); a: (Ka,) with a[0] = 1 → (B, N)."""
+    B, N = x.shape
+    return pl.pallas_call(
+        functools.partial(_iir_kernel, Kb=b.shape[0], Ka=a.shape[0]),
+        grid=_grid(B),
+        in_specs=[pl.BlockSpec((BB, N), lambda i: (i, 0)),
+                  pl.BlockSpec((b.shape[0],), lambda i: (0,)),
+                  pl.BlockSpec((a.shape[0],), lambda i: (0,))],
+        out_specs=pl.BlockSpec((BB, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
+        interpret=INTERPRET,
+    )(x, b, a)

@@ -1,0 +1,118 @@
+"""Pallas TPU kernels for the spectral accelerators: 256-pt FFT and DCT.
+
+TPU adaptation (DESIGN.md §3): the paper's FFT accelerator is a radix-2
+in-place butterfly ASIC.  On TPU we keep the radix-2 dataflow but express each
+stage as *static* reshapes + vector FMAs over a batch of frames (the butterfly
+index arithmetic becomes layout, which the Mosaic compiler handles as cheap
+relayouts), and the bit-reversal permutation as a static gather.  The DCT is
+the textbook MXU case: a (64, 64) coefficient matmul.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+BB = 128     # frames per grid step
+
+
+def _bitrev(n: int) -> np.ndarray:
+    bits = n.bit_length() - 1
+    idx = np.arange(n)
+    rev = np.zeros_like(idx)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+def _twiddle_tables(N: int) -> tuple[np.ndarray, np.ndarray]:
+    """(stages, N/2) twiddle tables; stage s uses the first 2^s entries."""
+    stages = N.bit_length() - 1
+    twr = np.zeros((stages, N // 2), np.float32)
+    twi = np.zeros((stages, N // 2), np.float32)
+    for s in range(stages):
+        m = 1 << s
+        tw = np.exp(-2j * np.pi * np.arange(m) / (2 * m))
+        twr[s, :m], twi[s, :m] = tw.real, tw.imag
+    return twr, twi
+
+
+def _fft_kernel(xr_ref, xi_ref, twr_ref, twi_ref, or_ref, oi_ref, *, N: int):
+    # inputs arrive bit-reverse permuted (static relayout done by the wrapper,
+    # where XLA fuses it into the HBM→VMEM stream)
+    stages = N.bit_length() - 1
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    bb = xr.shape[0]
+    for s in range(stages):
+        m = 1 << s                      # butterfly half-span
+        g = N // (2 * m)                # groups
+        twr = twr_ref[s, :m].astype(xr.dtype)
+        twi = twi_ref[s, :m].astype(xr.dtype)
+        xr4 = xr.reshape(bb, g, 2, m)
+        xi4 = xi.reshape(bb, g, 2, m)
+        er, ei = xr4[:, :, 0, :], xi4[:, :, 0, :]
+        orr, oii = xr4[:, :, 1, :], xi4[:, :, 1, :]
+        tr = orr * twr - oii * twi      # twiddled odd
+        ti = orr * twi + oii * twr
+        xr = jnp.concatenate([(er + tr)[:, :, None, :],
+                              (er - tr)[:, :, None, :]], axis=2).reshape(bb, N)
+        xi = jnp.concatenate([(ei + ti)[:, :, None, :],
+                              (ei - ti)[:, :, None, :]], axis=2).reshape(bb, N)
+    or_ref[...] = xr
+    oi_ref[...] = xi
+
+
+def fft(x: jax.Array) -> jax.Array:
+    """Radix-2 complex FFT. x: (B, N, 2) re/im, N power of two → (B, N, 2)."""
+    B, N, _ = x.shape
+    assert N & (N - 1) == 0, "radix-2 FFT needs a power-of-two frame"
+    stages = N.bit_length() - 1
+    twr, twi = _twiddle_tables(N)
+    x = x[:, _bitrev(N), :]       # bit-reversal pre-pass (see kernel docstring)
+    yr, yi = pl.pallas_call(
+        functools.partial(_fft_kernel, N=N),
+        grid=(pl.cdiv(B, BB),),
+        in_specs=[pl.BlockSpec((BB, N), lambda i: (i, 0)),
+                  pl.BlockSpec((BB, N), lambda i: (i, 0)),
+                  pl.BlockSpec((stages, N // 2), lambda i: (0, 0)),
+                  pl.BlockSpec((stages, N // 2), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((BB, N), lambda i: (i, 0)),
+                   pl.BlockSpec((BB, N), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, N), x.dtype),
+                   jax.ShapeDtypeStruct((B, N), x.dtype)],
+        interpret=INTERPRET,
+    )(x[..., 0], x[..., 1], jnp.asarray(twr), jnp.asarray(twi))
+    return jnp.stack([yr, yi], axis=-1)
+
+
+def fft_256(x: jax.Array) -> jax.Array:
+    assert x.shape[1] == 256
+    return fft(x)
+
+
+# ---------------------------------------------------------------------------
+# DCT-II as an MXU matmul
+# ---------------------------------------------------------------------------
+def _dct_kernel(x_ref, m_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], m_ref[...],
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def dct(x: jax.Array, mat: jax.Array) -> jax.Array:
+    """x: (B, N) @ matᵀ: (N, N) — mat is ref.dct_matrix(N); returns (B, N)."""
+    B, N = x.shape
+    return pl.pallas_call(
+        _dct_kernel,
+        grid=(pl.cdiv(B, BB),),
+        in_specs=[pl.BlockSpec((BB, N), lambda i: (i, 0)),
+                  pl.BlockSpec((N, N), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((BB, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
+        interpret=INTERPRET,
+    )(x, mat.T)

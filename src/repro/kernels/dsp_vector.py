@@ -1,0 +1,91 @@
+"""Pallas TPU kernels for the vector accelerators: dot, add, max, correlation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+BB = 512
+
+
+def _vdot_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.sum(x_ref[...] * y_ref[...], axis=-1, keepdims=True)
+
+
+def vector_dot(x: jax.Array, y: jax.Array) -> jax.Array:
+    """(B, N) · (B, N) → (B,)"""
+    B, N = x.shape
+    out = pl.pallas_call(
+        _vdot_kernel,
+        grid=(pl.cdiv(B, BB),),
+        in_specs=[pl.BlockSpec((BB, N), lambda i: (i, 0)),
+                  pl.BlockSpec((BB, N), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BB, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), x.dtype),
+        interpret=INTERPRET,
+    )(x, y)
+    return out[:, 0]
+
+
+def _vadd_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def vector_add(x: jax.Array, y: jax.Array) -> jax.Array:
+    B, N = x.shape
+    return pl.pallas_call(
+        _vadd_kernel,
+        grid=(pl.cdiv(B, BB),),
+        in_specs=[pl.BlockSpec((BB, N), lambda i: (i, 0)),
+                  pl.BlockSpec((BB, N), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BB, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, N), x.dtype),
+        interpret=INTERPRET,
+    )(x, y)
+
+
+def _vmax_kernel(x_ref, o_ref):
+    o_ref[...] = jnp.max(x_ref[...], axis=-1, keepdims=True)
+
+
+def vector_max(x: jax.Array) -> jax.Array:
+    B, N = x.shape
+    out = pl.pallas_call(
+        _vmax_kernel,
+        grid=(pl.cdiv(B, BB),),
+        in_specs=[pl.BlockSpec((BB, N), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BB, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1), x.dtype),
+        interpret=INTERPRET,
+    )(x)
+    return out[:, 0]
+
+
+def _corr_kernel(x_ref, y_ref, o_ref, *, max_lag: int):
+    x = x_ref[...]
+    y = y_ref[...]
+    n = x.shape[-1]
+    yp = jnp.pad(y, ((0, 0), (max_lag, max_lag)))
+    cols = []
+    for lag in range(2 * max_lag + 1):    # static unroll: shift + FMA + reduce
+        cols.append(jnp.sum(x * yp[:, lag:lag + n], axis=-1, keepdims=True))
+    o_ref[...] = jnp.concatenate(cols, axis=-1)
+
+
+def correlation(x: jax.Array, y: jax.Array, max_lag: int) -> jax.Array:
+    """Sliding cross-correlation, lags in [-max_lag, max_lag]. (B,N)→(B,2L+1)."""
+    B, N = x.shape
+    L = 2 * max_lag + 1
+    return pl.pallas_call(
+        functools.partial(_corr_kernel, max_lag=max_lag),
+        grid=(pl.cdiv(B, BB),),
+        in_specs=[pl.BlockSpec((BB, N), lambda i: (i, 0)),
+                  pl.BlockSpec((BB, N), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BB, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L), x.dtype),
+        interpret=INTERPRET,
+    )(x, y)

@@ -1,0 +1,74 @@
+"""Mamba-2 SSD recurrence as a Pallas TPU kernel.
+
+Per sequence, heads H, head dim P, state dim N:
+
+    h_t = exp(a_t) ⊙ h_{t-1} + b_t ⊗ x_t        h ∈ R^{H×N×P}
+    y_t = c_t · h_t                              y ∈ R^{H×P}
+
+Grid (B, T/C) with the chunk axis sequential and the state carried in VMEM
+scratch (f32).  Each in-chunk step is an outer-product FMA + an N-contraction
+(b ⊗ x and c·h), both VPU/MXU friendly at (N, P) = (64…128, 64…128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import INTERPRET
+
+DEFAULT_CHUNK = 64
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *, C: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)     # (C, H, P)
+    a = a_ref[0].astype(jnp.float32)     # (C, H)
+    b = b_ref[0].astype(jnp.float32)     # (C, N)
+    c = c_ref[0].astype(jnp.float32)     # (C, N)
+    H, P = x.shape[1], x.shape[2]
+    N = b.shape[-1]
+
+    def step(t, carry):
+        h, ys = carry                                    # h: (H, N, P)
+        decay = jnp.exp(a[t])[:, None, None]
+        h = decay * h + b[t][None, :, None] * x[t][:, None, :]
+        y = jnp.einsum("n,hnp->hp", c[t], h)
+        ys = jax.lax.dynamic_update_slice_in_dim(ys, y[None], t, axis=0)
+        return h, ys
+
+    h, ys = jax.lax.fori_loop(
+        0, C, step, (h_scr[...], jnp.zeros((C, H, P), jnp.float32)))
+    h_scr[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+
+def ssd(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array, *,
+        chunk: int = DEFAULT_CHUNK) -> jax.Array:
+    """x: (B, T, H, P); a: (B, T, H); b, c: (B, T, N) → y: (B, T, H, P)."""
+    B, T, H, P = x.shape
+    N = b.shape[-1]
+    C = min(chunk, T)
+    nc = pl.cdiv(T, C)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, C=C),
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, C, H, P), lambda i, c_: (i, c_, 0, 0)),
+            pl.BlockSpec((1, C, H), lambda i, c_: (i, c_, 0)),
+            pl.BlockSpec((1, C, N), lambda i, c_: (i, c_, 0)),
+            pl.BlockSpec((1, C, N), lambda i, c_: (i, c_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, H, P), lambda i, c_: (i, c_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((H, N, P), jnp.float32)],
+        interpret=INTERPRET,
+    )(x, a, b, c)

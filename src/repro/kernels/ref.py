@@ -1,0 +1,212 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the *semantics*; kernels are asserted allclose against them over
+shape/dtype sweeps in tests/test_kernels_*.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# DSP function set (the paper's Table II accelerators)
+# ---------------------------------------------------------------------------
+
+def real_fir(x: jax.Array, h: jax.Array) -> jax.Array:
+    """Real FIR: y[b, n] = sum_k h[k] * x[b, n - k]   (causal, zero-padded).
+
+    x: (B, N) float; h: (K,) float → (B, N)
+    """
+    K = h.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0)))
+    return sum(h[k] * jax.lax.dynamic_slice_in_dim(xp, K - 1 - k, x.shape[1], 1)
+               for k in range(K))
+
+
+def complex_fir(x: jax.Array, h: jax.Array) -> jax.Array:
+    """Complex FIR on interleaved re/im channels.
+
+    x: (B, N, 2); h: (K, 2) → (B, N, 2)
+    """
+    xr, xi = x[..., 0], x[..., 1]
+    hr, hi = h[:, 0], h[:, 1]
+    yr = real_fir(xr, hr) - real_fir(xi, hi)
+    yi = real_fir(xr, hi) + real_fir(xi, hr)
+    return jnp.stack([yr, yi], axis=-1)
+
+
+def adaptive_fir(x: jax.Array, d: jax.Array, mu: float, K: int) -> jax.Array:
+    """LMS adaptive FIR: per-frame sequential weight update.
+
+    x, d: (B, N) input / desired → (B, N) filter output sequence.
+    w_{n+1} = w_n + mu * e[n] * x_window[n]
+    """
+    B, N = x.shape
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0)))
+
+    def frame(xb, db, xpb):
+        def step(w, n):
+            win = jax.lax.dynamic_slice_in_dim(xpb, n, K)[::-1]
+            y = jnp.dot(w, win)
+            e = db[n] - y
+            return w + mu * e * win, y
+        _, ys = jax.lax.scan(step, jnp.zeros((K,), x.dtype), jnp.arange(N))
+        return ys
+
+    return jax.vmap(frame)(x, d, xp)
+
+
+def iir(x: jax.Array, b: jax.Array, a: jax.Array) -> jax.Array:
+    """Direct-form-II biquad-style IIR.
+
+    y[n] = sum_j b[j] x[n-j] - sum_{j>=1} a[j] y[n-j];   a[0] assumed 1.
+    x: (B, N); b: (Kb,); a: (Ka,) → (B, N)
+    """
+    Kb, Ka = b.shape[0], a.shape[0]
+    xp = jnp.pad(x, ((0, 0), (Kb - 1, 0)))
+
+    def frame(xpb):
+        def step(ys, n):
+            xwin = jax.lax.dynamic_slice_in_dim(xpb, n, Kb)[::-1]
+            y = jnp.dot(b, xwin) - jnp.dot(a[1:], ys[:Ka - 1])
+            return jnp.concatenate([y[None], ys[:-1]]), y
+        _, out = jax.lax.scan(step, jnp.zeros((Ka - 1,), x.dtype),
+                              jnp.arange(x.shape[1]))
+        return out
+
+    return jax.vmap(frame)(xp)
+
+
+def vector_dot(x: jax.Array, y: jax.Array) -> jax.Array:
+    """(B, N) · (B, N) → (B,)"""
+    return jnp.sum(x * y, axis=-1)
+
+
+def vector_add(x: jax.Array, y: jax.Array) -> jax.Array:
+    return x + y
+
+
+def vector_max(x: jax.Array) -> jax.Array:
+    return jnp.max(x, axis=-1)
+
+
+def fft_256(x: jax.Array) -> jax.Array:
+    """256-point complex FFT. x: (B, 256, 2) re/im → (B, 256, 2)."""
+    z = x[..., 0] + 1j * x[..., 1]
+    f = jnp.fft.fft(z, axis=-1)
+    return jnp.stack([f.real, f.imag], axis=-1).astype(x.dtype)
+
+
+def dct_matrix(n: int, dtype=jnp.float32) -> jax.Array:
+    """Orthonormal DCT-II matrix."""
+    k = np.arange(n)[:, None]
+    i = np.arange(n)[None, :]
+    m = np.cos(np.pi * (2 * i + 1) * k / (2 * n))
+    m[0] *= 1.0 / np.sqrt(2)
+    m *= np.sqrt(2.0 / n)
+    return jnp.asarray(m, dtype)
+
+
+def dct(x: jax.Array) -> jax.Array:
+    """DCT-II over the last axis. x: (B, N) → (B, N)."""
+    return x @ dct_matrix(x.shape[-1], x.dtype).T
+
+
+def correlation(x: jax.Array, y: jax.Array, max_lag: int) -> jax.Array:
+    """Sliding cross-correlation: c[b, l] = sum_n x[b, n] y[b, n + l - max_lag].
+
+    x, y: (B, N) → (B, 2*max_lag + 1)
+    """
+    N = x.shape[1]
+    yp = jnp.pad(y, ((0, 0), (max_lag, max_lag)))
+    return jnp.stack(
+        [jnp.sum(x * jax.lax.dynamic_slice_in_dim(yp, l, N, 1), axis=-1)
+         for l in range(2 * max_lag + 1)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Transformer hot-spot kernels
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * r).astype(dt) * w
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    q_offset: int = 0):
+    """Reference multi-head attention (no kernel): q (B,H,Tq,D), k/v (B,H,Tk,D).
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (decode phases).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        Tq, Tk = q.shape[2], k.shape[2]
+        qi = jnp.arange(Tq)[:, None] + q_offset
+        ki = jnp.arange(Tk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rwkv6_scan(r, k, v, w, u):
+    """RWKV-6 (Finch) WKV recurrence, per head.
+
+    r,k,w: (B, T, H, K); v: (B, T, H, V); u: (H, K)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t;  o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    Returns o: (B, T, H, V).
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+
+    def head(rb, kb, vb, wb, ub):      # (T,K),(T,K),(T,V),(T,K),(K,)
+        def step(S, t):
+            kv = kb[t][:, None] * vb[t][None, :]            # (K, V)
+            o = rb[t] @ (S + ub[:, None] * kv)              # (V,)
+            S = wb[t][:, None] * S + kv
+            return S, o
+        _, o = jax.lax.scan(step, jnp.zeros((K, V), jnp.float32),
+                            jnp.arange(T))
+        return o
+
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    out = jax.vmap(jax.vmap(head, in_axes=(1, 1, 1, 1, 0), out_axes=1),
+                   in_axes=(0, 0, 0, 0, None), out_axes=0)(rf, kf, vf, wf,
+                                                           u.astype(jnp.float32))
+    return out.astype(r.dtype)
+
+
+def mamba2_ssd(x, a, b, c):
+    """Mamba-2 SSD recurrence (state-space dual), per head.
+
+    x: (B, T, H, P) inputs; a: (B, T, H) scalar decay per head;
+    b, c: (B, T, N) input/output projections (shared across heads).
+    h_t = exp(a_t) * h_{t-1} + b_t ⊗ x_t;  y_t = c_t · h_t
+    Returns y: (B, T, H, P).
+    """
+    B, T, H, P = x.shape
+    N = b.shape[-1]
+
+    def seq(xb, ab, bb, cb):           # (T,H,P),(T,H),(T,N),(T,N)
+        def step(h, t):                # h: (H, N, P)
+            decay = jnp.exp(ab[t])[:, None, None]
+            h = decay * h + bb[t][None, :, None] * xb[t][:, None, :]
+            y = jnp.einsum("n,hnp->hp", cb[t], h)
+            return h, y
+        _, y = jax.lax.scan(step, jnp.zeros((H, N, P), jnp.float32),
+                            jnp.arange(T))
+        return y
+
+    xf, af, bf, cf = (t.astype(jnp.float32) for t in (x, a, b, c))
+    return jax.vmap(seq)(xf, af, bf, cf).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down

@@ -1,0 +1,32 @@
+"""Fused RMSNorm Pallas kernel (row tile × full feature dim in VMEM)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+BR = 256
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    o_ref[...] = ((x * r).astype(o_ref.dtype)) * w_ref[...]
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """x: (R, D) rows; w: (D,) → (R, D). Callers flatten leading dims."""
+    R, D = x.shape
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(pl.cdiv(R, BR),),
+        in_specs=[pl.BlockSpec((BR, D), lambda i: (i, 0)),
+                  pl.BlockSpec((D,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((BR, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
+        interpret=INTERPRET,
+    )(x, w)

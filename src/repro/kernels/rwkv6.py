@@ -1,0 +1,79 @@
+"""RWKV-6 (Finch) WKV recurrence as a Pallas TPU kernel.
+
+Recurrence per head (state S ∈ R^{K×V}, data-dependent decay w_t):
+
+    o_t = r_t (S_{t-1} + diag(u) k_tᵀ v_t)
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+
+TPU adaptation: the time axis is chunked; the grid is (B·H, T/C) with the
+chunk axis innermost/sequential, and the state S carried across chunks in a
+VMEM scratch buffer (f32).  Inside a chunk the recurrence is stepped with a
+``fori_loop`` of rank-1 updates — exact (no decay-ratio reformulation, which
+underflows for long chunks), and each step is a (K×V) VPU FMA.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import INTERPRET
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *, C: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)          # (C, K)
+    k = k_ref[0].astype(jnp.float32)          # (C, K)
+    v = v_ref[0].astype(jnp.float32)          # (C, V)
+    w = w_ref[0].astype(jnp.float32)          # (C, K)
+    u = u_ref[0].astype(jnp.float32)          # (1, K) → (K,)
+
+    def step(t, carry):
+        S, out = carry                         # S: (K, V); out: (C, V)
+        kv = k[t][:, None] * v[t][None, :]     # (K, V) rank-1
+        o = (r[t][:, None] * (S + u[:, None] * kv)).sum(axis=0)   # (V,)
+        S = w[t][:, None] * S + kv
+        out = jax.lax.dynamic_update_slice_in_dim(out, o[None], t, axis=0)
+        return S, out
+
+    S, out = jax.lax.fori_loop(
+        0, C, step, (s_scr[...], jnp.zeros((C, v.shape[-1]), jnp.float32)))
+    s_scr[...] = S
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, chunk: int = DEFAULT_CHUNK) -> jax.Array:
+    """r,k,w: (BH, T, K); v: (BH, T, V); u: (BH, K) → o: (BH, T, V).
+
+    Heads are pre-flattened into BH by the ops.py wrapper (u broadcast per head).
+    """
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    C = min(chunk, T)
+    nc = pl.cdiv(T, C)
+    return pl.pallas_call(
+        functools.partial(_wkv6_kernel, C=C),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, C, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, C, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, C, V), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, C, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, K), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, V), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, V), r.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=INTERPRET,
+    )(r, k, v, w, u)

@@ -1,0 +1,337 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax-importing module (jax locks the
+# device count at first init).  Tests shrink the pool via this env override:
+if "REPRO_DRYRUN_DEVICES" in os.environ:                         # noqa: E402
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape × mesh) cell; record memory/cost analysis and
+collective traffic for the roofline table (deliverable g).
+
+FLOP/byte accounting: XLA's HloCostAnalysis counts a while-loop body ONCE, so
+scan-over-layers graphs under-report by ~n_layers×.  Each cell therefore also
+compiles two (three for hybrid) small *probe* models with the layer scan fully
+unrolled; per-layer body cost = Δcost/Δlayers, and the corrected total is
+``fixed + units×body``.  Kernels are routed to their loop-free jnp references
+during dry-run lowering (ops.KERNELS_ENABLED=False) so attention/SSM math is
+exactly countable.  Raw and corrected figures are both recorded.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k --mesh single --out experiments/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse                                                  # noqa: E402
+import contextlib                                                # noqa: E402
+import dataclasses                                               # noqa: E402
+import json                                                      # noqa: E402
+import time                                                      # noqa: E402
+import traceback                                                 # noqa: E402
+
+import jax                                                       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec            # noqa: E402
+
+from repro.configs.base import SHAPES, applicable_shapes         # noqa: E402
+from repro.configs.registry import all_archs, get_config         # noqa: E402
+from repro.kernels import ops as kops                            # noqa: E402
+from repro.launch.mesh import make_production_mesh               # noqa: E402
+from repro.models import layers as Lmod                          # noqa: E402
+from repro.models import registry                                # noqa: E402
+from repro.roofline import analysis, hlo_collectives             # noqa: E402
+from repro.runtime import flags as flags_lib                     # noqa: E402
+from repro.runtime import train as train_rt                      # noqa: E402
+from repro.sharding import rules as rules_lib                    # noqa: E402
+
+
+@contextlib.contextmanager
+def dryrun_mode(unroll: bool = False):
+    """Loop-free kernels (exact counting); optionally unroll layer scans."""
+    prev_k, prev_u = kops.KERNELS_ENABLED, Lmod.SCAN_UNROLL
+    kops.KERNELS_ENABLED = False
+    Lmod.SCAN_UNROLL = unroll
+    try:
+        yield
+    finally:
+        kops.KERNELS_ENABLED = prev_k
+        Lmod.SCAN_UNROLL = prev_u
+
+
+def rules_for(mesh, shape_name: str, opt: int = 0):
+    overrides = {}
+    if shape_name == "long_500k":
+        overrides = dict(rules_lib.LONG_CONTEXT_RULES)
+    elif opt and SHAPES[shape_name].kind == "decode":
+        overrides = dict(rules_lib.DECODE_OPT2_RULES if opt >= 2
+                         else rules_lib.DECODE_OPT_RULES)
+    return rules_lib.make_rules(mesh, overrides)
+
+
+def _shard(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def lower_with_cfg(cfg, shape, mesh, rules):
+    """Lower + compile one (cfg × shape) under ``rules``; returns compiled."""
+    model = registry.build(cfg)
+
+    if shape.kind == "train":
+        tcfg = train_rt.TrainConfig(
+            remat_policy=os.environ.get("REPRO_DRYRUN_REMAT", "nothing"))
+        batch = model.input_specs(shape)
+        state = train_rt.abstract_state(model)
+        step = train_rt.jit_train_step(model, mesh, rules, tcfg, batch)
+        lowered = step.lower(state, batch)
+    elif shape.kind == "prefill":
+        batch = model.input_specs(shape)
+        pspecs = _shard(mesh, model.param_pspecs(rules))
+        bspecs = _shard(mesh, train_rt.batch_pspecs(batch, rules))
+
+        def prefill_step(params, b):
+            with rules_lib.use_rules(rules):
+                return _prefill_logits(model, params, b)
+
+        fn = jax.jit(prefill_step, in_shardings=(pspecs, bspecs),
+                     out_shardings=None)
+        lowered = fn.lower(model.abstract_params(), batch)
+    else:   # decode
+        inp = model.input_specs(shape)
+        cache = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        pspecs = _shard(mesh, model.param_pspecs(rules))
+        cspecs = _shard(mesh, model.cache_pspecs(shape.global_batch,
+                                                 shape.seq_len, rules))
+        tspec = _shard(mesh, rules.spec_for((shape.global_batch, 1),
+                                            ("cache_batch", None)))
+
+        def serve_step(params, cache, tokens, pos):
+            with rules_lib.use_rules(rules):
+                return model.decode_step(params, cache, tokens, pos)
+
+        fn = jax.jit(serve_step,
+                     in_shardings=(pspecs, cspecs, tspec, None),
+                     out_shardings=(None, cspecs))
+        lowered = fn.lower(model.abstract_params(), cache, inp["tokens"],
+                           inp["pos"])
+    return lowered.compile()
+
+
+def _prefill_logits(model, params, batch):
+    """Family-uniform prefill: full-prompt forward, last-position logits."""
+    from repro.models import rwkv6, transformer, whisper, zamba2
+    cfg = model.cfg
+    if cfg.family in ("dense", "moe"):
+        logits, cache = transformer.prefill(params, cfg, batch["tokens"],
+                                            batch["tokens"].shape[1])
+        return logits[:, -1]
+    if cfg.family == "vlm":
+        logits, _ = transformer.forward(params, cfg, batch["tokens"],
+                                        batch["prefix_embeds"])
+        return logits[:, -1]
+    if cfg.family == "ssm":
+        logits, _ = rwkv6.forward(params, cfg, batch["tokens"])
+        return logits[:, -1]
+    if cfg.family == "hybrid":
+        logits, _ = zamba2.forward(params, cfg, batch["tokens"])
+        return logits[:, -1]
+    enc = whisper.encode(params, cfg, batch["frames"])
+    return whisper.decode_seq(params, cfg, batch["tokens"], enc)[:, -1]
+
+
+def _cell_costs(compiled):
+    cost = dict(compiled.cost_analysis())
+    coll = hlo_collectives.collective_bytes_per_device(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll["total_per_device"]), coll)
+
+
+def _probe_cfgs(cfg):
+    """Probe configs + true-unit count for the layer-scan correction.
+
+    Returns (list of (cfg_variant, units), units_true) where cost(variant) =
+    fixed + units×body is solved for (fixed, body).
+    """
+    if cfg.family == "hybrid":
+        p = cfg.shared_attn_period
+        n_groups = cfg.n_layers // p
+        tail = cfg.n_layers - n_groups * p
+        mk = lambda L: dataclasses.replace(cfg, n_layers=L)
+        # group-units; the 3-layer tail is probed exactly as a 3rd variant
+        variants = [(mk(p), 1), (mk(2 * p), 2)]
+        extra = (mk(p + tail), 1) if tail else None
+        return variants, float(n_groups), extra, tail
+    if cfg.family == "audio":
+        mk = lambda L: dataclasses.replace(cfg, n_layers=L, enc_layers=L)
+        return [(mk(1), 1), (mk(2), 2)], float(cfg.n_layers), None, 0
+    mk = lambda L: dataclasses.replace(cfg, n_layers=L)
+    return [(mk(1), 1), (mk(2), 2)], float(cfg.n_layers), None, 0
+
+
+def probe_correction(cfg, shape, mesh, rules):
+    """(flops, bytes, coll) corrected totals per device via unrolled probes."""
+    variants, units_true, extra, tail = _probe_cfgs(cfg)
+    meas = []
+    with dryrun_mode(unroll=True):
+        for cfg_v, units in variants:
+            comp = lower_with_cfg(cfg_v, shape, mesh, rules)
+            f, b, c, _ = _cell_costs(comp)
+            meas.append((units, f, b, c))
+        tail_cost = (0.0, 0.0, 0.0)
+        if extra is not None:
+            comp = lower_with_cfg(extra[0], shape, mesh, rules)
+            f, b, c, _ = _cell_costs(comp)
+            base = meas[0]
+            tail_cost = (f - base[1], b - base[2], c - base[3])
+    (u0, f0, b0, c0), (u1, f1, b1, c1) = meas
+    du = u1 - u0
+    body = ((f1 - f0) / du, (b1 - b0) / du, (c1 - c0) / du)
+    fixed = (f0 - u0 * body[0], b0 - u0 * body[1], c0 - u0 * body[2])
+    total = tuple(fixed[i] + units_true * body[i] + tail_cost[i]
+                  for i in range(3))
+    return {
+        "per_unit": {"flops": body[0], "bytes": body[1], "coll": body[2]},
+        "fixed": {"flops": fixed[0], "bytes": fixed[1], "coll": fixed[2]},
+        "units_true": units_true,
+        "tail_layers": tail,
+        "corrected_per_device": {"flops": total[0], "bytes": total[1],
+                                 "coll": total[2]},
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
+             probe: bool = True, opt: bool = False) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    cfg = get_config(arch)
+    ok, reason = applicable_shapes(cfg)[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": mesh.size, "opt": opt}
+    perf_kw = flags_lib.optimized(opt) if opt else {}
+    if not ok:
+        rec.update(status="SKIP", reason=reason)
+    else:
+        try:
+            shape = SHAPES[shape_name]
+            rules = rules_for(mesh, shape_name, opt)
+            with flags_lib.use_flags(**perf_kw), dryrun_mode():
+                compiled = lower_with_cfg(cfg, shape, mesh, rules)
+            flops_raw, bytes_raw, coll_raw, coll = _cell_costs(compiled)
+            try:
+                mem = compiled.memory_analysis()
+                mem_stats = {
+                    "argument_bytes": getattr(mem, "argument_size_in_bytes",
+                                              None),
+                    "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                    "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                    "peak_bytes": getattr(mem, "temp_size_in_bytes", None),
+                }
+            except Exception:
+                mem_stats = {}
+
+            model = registry.build(cfg)
+            kind = shape.kind
+            tokens = (shape.global_batch * shape.seq_len
+                      if kind in ("train", "prefill") else shape.global_batch)
+            mflops = analysis.model_flops(
+                model.active_param_count(), tokens,
+                "train" if kind == "train" else "serve")
+
+            corr = None
+            if probe:
+                with flags_lib.use_flags(**perf_kw):
+                    corr = probe_correction(cfg, shape, mesh, rules)
+                # corrected totals cannot be below the once-counted raw
+                # figures (guards probe-extrapolation noise on small cells)
+                cdev = corr["corrected_per_device"]
+                cdev["flops"] = max(cdev["flops"], flops_raw)
+                cdev["bytes"] = max(cdev["bytes"], bytes_raw)
+                cdev["coll"] = max(cdev["coll"], coll_raw)
+                cost_dict = {"flops": cdev["flops"],
+                             "bytes accessed": cdev["bytes"]}
+                coll_corr = {"total_per_device": cdev["coll"],
+                             "per_op": coll["per_op"],
+                             "counts": coll["counts"]}
+            else:
+                cost_dict = {"flops": flops_raw, "bytes accessed": bytes_raw}
+                coll_corr = coll
+
+            roof = analysis.from_compiled(arch, shape_name, mesh_name,
+                                          mesh.size, cost_dict, coll_corr,
+                                          mflops, mem_stats)
+            rec.update(status="OK",
+                       kind=kind,
+                       tokens_per_step=tokens,
+                       params_total=model.param_count(),
+                       params_active=model.active_param_count(),
+                       raw_per_device={"flops": flops_raw, "bytes": bytes_raw,
+                                       "collective": coll_raw},
+                       probe=corr, memory=mem_stats, collectives=coll,
+                       dropped_shardings=sorted(str(d) for d in rules.dropped),
+                       roofline=roof.to_dict(),
+                       compile_seconds=round(time.time() - t0, 1))
+        except Exception as e:
+            rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-2000:])
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}_{shape_name}_{mesh_name}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the unrolled cost probes (faster)")
+    ap.add_argument("--opt", type=int, default=0, nargs="?", const=1,
+                    help="§Perf optimization level (1, 2)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = all_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                fname = os.path.join(args.out,
+                                     f"{arch}_{shape}_{mesh_name}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    with open(fname) as f:
+                        if json.load(f).get("status") in ("OK", "SKIP"):
+                            print(f"[CACHED] {arch} × {shape} × {mesh_name}",
+                                  flush=True)
+                            continue
+                rec = run_cell(arch, shape, mesh_name, args.out,
+                               probe=not args.no_probe, opt=args.opt)
+                status = rec["status"]
+                extra = ""
+                if status == "OK":
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" t=({r['t_compute']:.2e},{r['t_memory']:.2e},"
+                             f"{r['t_collective']:.2e})s"
+                             f" useful={r['useful_flops_ratio']:.2f}"
+                             f" compile={rec['compile_seconds']}s")
+                elif status == "FAIL":
+                    n_fail += 1
+                    extra = " " + rec["error"][:200]
+                print(f"[{status}] {arch} × {shape} × {mesh_name}{extra}",
+                      flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

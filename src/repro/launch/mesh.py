@@ -1,0 +1,24 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN step 1).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(devices: int, model_parallel: int = 1,
+                  pods: int = 1):
+    """Small-scale mesh helper for tests (e.g. 8 host devices)."""
+    data = devices // (model_parallel * pods)
+    if pods > 1:
+        return jax.make_mesh((pods, data, model_parallel),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((data, model_parallel), ("data", "model"))

@@ -1,0 +1,247 @@
+"""Model building blocks: parameter templates, norms, RoPE, attention, MLP.
+
+Parameters are plain nested dicts of arrays.  Each model defines a *template*
+tree of :class:`Spec` descriptors — the single source of truth for shapes,
+logical sharding axes, and initializers — from which ``init_params`` (random
+materialization), ``abstract_params`` (ShapeDtypeStruct for the dry-run) and
+``param_pspecs`` (PartitionSpec tree) are all derived.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.sharding.rules import Rules, constraint
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+#: When True, model-level layer scans fully unroll.  Used by the dry-run's
+#: cost probes: XLA's HloCostAnalysis counts a while-loop body ONCE, so the
+#: roofline extracts exact per-layer costs from small unrolled probe models
+#: (see launch/dryrun.py) instead of trusting under-counted scan totals.
+SCAN_UNROLL = False
+
+
+def scan(f, init, xs, length=None):
+    """lax.scan for layer stacks, honoring the dry-run unroll probe flag."""
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if SCAN_UNROLL else 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Descriptor for one parameter tensor."""
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]      # logical sharding axes
+    init: str = "normal"                 # normal | zeros | ones
+    scale: Optional[float] = None        # fan-in scaling override
+
+    def materialize(self, key) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, PARAM_DTYPE)
+        if self.init == "ones":
+            return jnp.ones(self.shape, PARAM_DTYPE)
+        scale = self.scale
+        if scale is None:
+            fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[-1]
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return jax.random.normal(key, self.shape, PARAM_DTYPE) * scale
+
+
+def _tree_map_specs(fn, template):
+    return jax.tree.map(fn, template,
+                        is_leaf=lambda x: isinstance(x, Spec))
+
+
+def init_params(key, template) -> Any:
+    leaves, treedef = jax.tree.flatten(
+        template, is_leaf=lambda x: isinstance(x, Spec))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [s.materialize(k) for s, k in zip(leaves, keys)])
+
+
+def abstract_params(template) -> Any:
+    return _tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, PARAM_DTYPE), template)
+
+
+def param_pspecs(template, rules: Rules) -> Any:
+    return _tree_map_specs(lambda s: rules.spec_for(s.shape, s.axes), template)
+
+
+def param_count(template) -> int:
+    leaves = jax.tree.leaves(template, is_leaf=lambda x: isinstance(x, Spec))
+    return sum(math.prod(s.shape) for s in leaves)
+
+
+def stack_layers(layer_template, n: int) -> Any:
+    """Prepend a scanned 'layers' axis to every Spec in a layer template."""
+    return _tree_map_specs(
+        lambda s: Spec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        layer_template)
+
+
+def cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale, eps):
+    return ops.rmsnorm(x, cast(scale), eps)
+
+
+def linear(x, w, b=None):
+    y = x @ cast(w)
+    if b is not None:
+        y = y + cast(b)
+    return y
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: (..., T, H, D); positions: (T,) or (..., T)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, half)
+    cos = jnp.cos(ang)[..., :, None, :]                        # (..., T, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(linear(x, w_gate)) * linear(x, w_up)
+    h = constraint(h, ("batch", "seq", "mlp"))
+    return linear(h, w_down)
+
+
+def gelu_mlp(x, w_up, b_up, w_down, b_down):
+    return linear(jax.nn.gelu(linear(x, w_up, b_up)), w_down, b_down)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, RoPE, optional KV cache)
+# ---------------------------------------------------------------------------
+def attn_template(cfg, prefix_fsdp: str = "embed_fsdp") -> dict:
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    t = {
+        "wq": Spec((D, H * Dh), (prefix_fsdp, "heads")),
+        "wk": Spec((D, Hkv * Dh), (prefix_fsdp, "kv_heads")),
+        "wv": Spec((D, Hkv * Dh), (prefix_fsdp, "kv_heads")),
+        "wo": Spec((H * Dh, D), ("heads", prefix_fsdp)),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = Spec((H * Dh,), ("heads",), init="zeros")
+        t["bk"] = Spec((Hkv * Dh,), ("kv_heads",), init="zeros")
+        t["bv"] = Spec((Hkv * Dh,), ("kv_heads",), init="zeros")
+    return t
+
+
+def attn_qkv(p, cfg, x, positions, *, use_rope=True):
+    """x: (B, T, D) → q (B, H, T, Dh), k/v (B, Hkv, T, Dh)."""
+    B, T, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(x, p["wq"], p.get("bq")).reshape(B, T, H, Dh)
+    k = linear(x, p["wk"], p.get("bk")).reshape(B, T, Hkv, Dh)
+    v = linear(x, p["wv"], p.get("bv")).reshape(B, T, Hkv, Dh)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = constraint(q.transpose(0, 2, 1, 3), ("batch", "heads", "seq", None))
+    k = constraint(k.transpose(0, 2, 1, 3), ("batch", "kv_heads", "seq", None))
+    v = constraint(v.transpose(0, 2, 1, 3), ("batch", "kv_heads", "seq", None))
+    return q, k, v
+
+
+def attn_out(p, x_attn):
+    """x_attn: (B, H, T, Dh) → (B, T, D)."""
+    B, H, T, Dh = x_attn.shape
+    y = x_attn.transpose(0, 2, 1, 3).reshape(B, T, H * Dh)
+    return linear(y, p["wo"])
+
+
+def self_attention(p, cfg, x, positions, *, causal=True, use_rope=True,
+                   q_offset=0):
+    q, k, v = attn_qkv(p, cfg, x, positions, use_rope=use_rope)
+    o = ops.flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+    return attn_out(p, o)
+
+
+def decode_attention(p, cfg, x, cache_k, cache_v, pos, *, use_rope=True):
+    """One-token decode. x: (B, 1, D); cache_k/v: (B, Hkv, Tmax, Dh);
+    pos: scalar position OR (B,) per-lane positions (continuous batching —
+    each serving slot may be at a different depth).  Returns (y, k, v)."""
+    B = x.shape[0]
+    Hkv = cfg.n_kv_heads
+    pos = jnp.asarray(pos, jnp.int32)
+    per_lane = pos.ndim == 1
+    positions = (pos[:, None] if per_lane
+                 else jnp.full((1,), pos, jnp.int32))
+    q, k, v = attn_qkv(p, cfg, x, positions, use_rope=use_rope)
+    if per_lane:
+        b_idx = jnp.arange(B)[:, None]
+        h_idx = jnp.arange(Hkv)[None, :]
+        cache_k = cache_k.at[b_idx, h_idx, pos[:, None]].set(
+            k[:, :, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[b_idx, h_idx, pos[:, None]].set(
+            v[:, :, 0].astype(cache_v.dtype))
+        row_pos = pos[:, None, None, None]
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), pos, axis=2)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), pos, axis=2)
+        row_pos = pos
+    Hq = cfg.n_heads
+    scale = cfg.head_dim ** -0.5
+    from repro.runtime.flags import FLAGS
+    if FLAGS.decode_gqa_packed:
+        # grouped-query path: no GQA repeat, no fp32 materialization of the
+        # cache — contraction accumulates in f32 via preferred_element_type.
+        G = Hq // Hkv
+        qg = q.reshape(B, Hkv, G, cfg.head_dim)
+        s = jnp.einsum("bhgd,bhkd->bhgk", qg, cache_k,
+                       preferred_element_type=jnp.float32) * scale
+        mask = (jnp.arange(cache_k.shape[2])[None, None, None, :]
+                <= (row_pos if per_lane else
+                    jnp.asarray(row_pos)[None, None, None, None]))
+        s = jnp.where(mask, s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgk,bhkd->bhgd", w.astype(cache_v.dtype), cache_v,
+                       preferred_element_type=jnp.float32)
+        o = o.reshape(B, Hq, 1, cfg.head_dim).astype(x.dtype)
+        return attn_out(p, o), cache_k, cache_v
+    kk = jnp.repeat(cache_k, Hq // Hkv, axis=1)
+    vv = jnp.repeat(cache_v, Hq // Hkv, axis=1)
+    # masked single-query attention over the cache (memory-bound; jnp path)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    mask = jnp.arange(cache_k.shape[2])[None, None, None, :] <= row_pos
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", w, vv.astype(jnp.float32)).astype(x.dtype)
+    return attn_out(p, o), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+def softmax_xent(logits, labels, mask=None):
+    """logits (..., V) fp32 CE; labels int; mask optional weights."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

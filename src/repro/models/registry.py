@@ -1,0 +1,153 @@
+"""Uniform Model API over all architecture families.
+
+``build(cfg)`` returns a :class:`Model` exposing: template / init /
+train_loss / decode_step / init_cache / cache_pspecs / input shapes —
+everything the runtime, launcher and dry-run need, family-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.sharding.rules import Rules
+from . import layers as L
+from . import rwkv6 as R
+from . import transformer as T
+from . import whisper as W
+from . import zamba2 as Z
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    template: Any
+    train_loss: Callable            # (params, batch, remat_policy) -> loss
+    decode_step: Callable           # (params, cache, tokens, pos) -> (logits, cache)
+    init_cache: Callable            # (batch, max_len) -> cache pytree
+    cache_axes: Any                 # logical axes pytree (mirrors cache)
+
+    def init(self, key):
+        return L.init_params(key, self.template)
+
+    def abstract_params(self):
+        return L.abstract_params(self.template)
+
+    def param_pspecs(self, rules: Rules):
+        return L.param_pspecs(self.template, rules)
+
+    def param_count(self) -> int:
+        return L.param_count(self.template)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: routed experts scaled k/E)."""
+        import math
+        total = 0
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            self.template, is_leaf=lambda x: isinstance(x, L.Spec))
+        m = self.cfg.moe
+        for path, spec in flat:
+            n = math.prod(spec.shape)
+            keys = jax.tree_util.keystr(path)
+            if m and "moe" in keys and "shared" not in keys \
+                    and "router" not in keys:
+                n = int(n * m.top_k / max(m.num_experts, 1))
+            total += n
+        return total
+
+    def cache_pspecs(self, batch: int, max_len: int, rules: Rules):
+        cache = jax.eval_shape(lambda: self.init_cache(batch, max_len))
+        return jax.tree.map(
+            lambda leaf, axes: rules.spec_for(leaf.shape, axes),
+            cache, self.cache_axes)
+
+    # ---- input construction (ShapeDtypeStruct for dry-run, arrays for runs)
+    def input_specs(self, shape: ShapeConfig, abstract: bool = True):
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+
+        def arr(shp, dtype=jnp.int32):
+            if abstract:
+                return jax.ShapeDtypeStruct(shp, dtype)
+            if dtype == jnp.int32:
+                return jnp.zeros(shp, dtype)
+            return jnp.zeros(shp, dtype)
+
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "audio":
+                return {"frames": arr((B, S, cfg.d_model), jnp.float32),
+                        "tokens": arr((B, S)), "labels": arr((B, S))}
+            if cfg.family == "vlm":
+                text = S - cfg.prefix_len
+                return {"prefix_embeds": arr((B, cfg.prefix_len, cfg.d_model),
+                                             jnp.float32),
+                        "tokens": arr((B, text)), "labels": arr((B, text))}
+            return {"tokens": arr((B, S)), "labels": arr((B, S))}
+        # decode: one new token against a seq_len-deep cache
+        return {"tokens": arr((B, 1)),
+                "pos": jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                else jnp.int32(S - 1)}
+
+
+def build(cfg: ArchConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        from repro.runtime.flags import FLAGS
+        kv_axes = ("layers", "cache_batch", "kv_heads", "kv_seq", None)
+        cache_axes = {"k": kv_axes, "v": kv_axes}
+        if FLAGS.decode_kv_int8:
+            cache_axes["k_s"] = kv_axes[:-1]
+            cache_axes["v_s"] = kv_axes[:-1]
+        return Model(
+            cfg=cfg,
+            template=T.template(cfg),
+            train_loss=lambda p, b, rp="nothing": T.train_loss(p, cfg, b, rp),
+            decode_step=lambda p, c, t, pos: T.decode_step(p, cfg, c, t, pos),
+            init_cache=lambda b, m, dt=None: T.init_cache(
+                cfg, b, m, dt if dt is not None else L.COMPUTE_DTYPE),
+            cache_axes=cache_axes,
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            template=R.template(cfg),
+            train_loss=lambda p, b, rp="nothing": R.train_loss(p, cfg, b, rp),
+            decode_step=lambda p, c, t, pos: R.decode_step(p, cfg, c, t, pos),
+            init_cache=lambda b, m, dt=None: R.init_cache(
+                cfg, b, m, dt if dt is not None else L.COMPUTE_DTYPE),
+            cache_axes=R.cache_axes(),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            template=Z.template(cfg),
+            train_loss=lambda p, b, rp="nothing": Z.train_loss(p, cfg, b, rp),
+            decode_step=lambda p, c, t, pos: Z.decode_step(p, cfg, c, t, pos),
+            init_cache=lambda b, m, dt=None: Z.init_cache(
+                cfg, b, m, dt if dt is not None else L.COMPUTE_DTYPE),
+            cache_axes=Z.cache_axes(cfg),
+        )
+    if fam == "audio":
+        return Model(
+            cfg=cfg,
+            template=W.template(cfg),
+            train_loss=lambda p, b, rp="nothing": W.train_loss(p, cfg, b, rp),
+            decode_step=lambda p, c, t, pos: W.decode_step(p, cfg, c, t, pos),
+            init_cache=lambda b, m, dt=None: W.init_cache(
+                cfg, b, m, dt if dt is not None else L.COMPUTE_DTYPE),
+            cache_axes=W.cache_axes(),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def build_arch(arch: str) -> Model:
+    from repro.configs.registry import get_config
+    return build(get_config(arch))
+
+
+def build_smoke(arch: str) -> Model:
+    from repro.configs.registry import get_config
+    return build(get_config(arch).smoke())

@@ -1,0 +1,195 @@
+"""RWKV-6 "Finch" (attention-free) language model.
+
+Time-mix with data-dependent decay (low-rank LoRA on w), WKV6 recurrence via
+the Pallas kernel, squared-ReLU channel mix.  Decode carries O(1) state per
+layer: the (H, K, V) WKV state and the two token-shift registers — this is
+why rwkv6 runs the ``long_500k`` cell (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.sharding.rules import constraint
+from . import layers as L
+from .layers import Spec, cast
+
+DECAY_LORA = 64
+
+
+def block_template(cfg) -> dict:
+    D = cfg.d_model
+    H, K = cfg.n_heads, cfg.ssm.d_state
+    V = cfg.ssm.head_dim
+    F = cfg.d_ff
+    return {
+        "ln1": Spec((D,), (None,), init="ones"),
+        "att": {
+            "mu": Spec((5, D), (None, None), init="zeros"),   # r k v w g mixes
+            "wr": Spec((D, H * K), ("embed_fsdp", "heads")),
+            "wk": Spec((D, H * K), ("embed_fsdp", "heads")),
+            "wv": Spec((D, H * V), ("embed_fsdp", "heads")),
+            "wg": Spec((D, H * V), ("embed_fsdp", "heads")),
+            "w0": Spec((H * K,), ("heads",), init="zeros"),
+            "wa": Spec((D, DECAY_LORA), ("embed_fsdp", None)),
+            "wb": Spec((DECAY_LORA, H * K), (None, "heads")),
+            "u": Spec((H, K), ("heads", None)),
+            "ln_x": Spec((H * V,), ("heads",), init="ones"),
+            "wo": Spec((H * V, D), ("heads", "embed_fsdp")),
+        },
+        "ln2": Spec((D,), (None,), init="ones"),
+        "ffn": {
+            "mu": Spec((2, D), (None, None), init="zeros"),   # k r mixes
+            "wk": Spec((D, F), ("embed_fsdp", "mlp")),
+            "wv": Spec((F, D), ("mlp", "embed_fsdp")),
+            "wr": Spec((D, D), ("embed_fsdp", None)),
+        },
+    }
+
+
+def template(cfg) -> dict:
+    return {
+        "embed": Spec((cfg.vocab, cfg.d_model), ("vocab", "embed_fsdp"),
+                      scale=1.0),
+        "layers": L.stack_layers(block_template(cfg), cfg.n_layers),
+        "final_norm": Spec((cfg.d_model,), (None,), init="ones"),
+        "lm_head": Spec((cfg.d_model, cfg.vocab), ("embed_fsdp", "vocab")),
+    }
+
+
+def _mix(x, x_prev_seq, mu):
+    """Token shift: x + mu * (shift(x) - x), vectorized over the 5 mixes."""
+    return x + mu * (x_prev_seq - x)
+
+
+def _decay(att, xw):
+    w = att["w0"] + jnp.tanh(xw @ cast(att["wa"])) @ cast(att["wb"])
+    return jnp.exp(-jnp.exp(w.astype(jnp.float32))).astype(xw.dtype)
+
+
+def _head_norm(o, scale, H, V, eps):
+    B, T = o.shape[:2]
+    o = o.reshape(B, T, H, V)
+    o = o * jax.lax.rsqrt(
+        jnp.mean(jnp.square(o.astype(jnp.float32)), -1, keepdims=True) + eps
+    ).astype(o.dtype)
+    return o.reshape(B, T, H * V) * cast(scale)
+
+
+def time_mix(att, cfg, x, x_shift):
+    """x: (B, T, D); x_shift: x shifted right one step (first row = prev state)."""
+    H, K, V = cfg.n_heads, cfg.ssm.d_state, cfg.ssm.head_dim
+    B, T, D = x.shape
+    mu = cast(att["mu"])
+    xr, xk, xv, xw, xg = (_mix(x, x_shift, mu[i]) for i in range(5))
+    r = (xr @ cast(att["wr"])).reshape(B, T, H, K)
+    k = (xk @ cast(att["wk"])).reshape(B, T, H, K)
+    v = (xv @ cast(att["wv"])).reshape(B, T, H, V)
+    w = _decay(att, xw).reshape(B, T, H, K)
+    g = jax.nn.silu(xg @ cast(att["wg"]))
+    o = ops.rwkv6_scan(r, k, v, w, cast(att["u"]))
+    o = _head_norm(o.reshape(B, T, H * V), att["ln_x"], H, V, cfg.norm_eps)
+    return (o * g) @ cast(att["wo"])
+
+
+def channel_mix(ffn, x, x_shift):
+    mu = cast(ffn["mu"])
+    xk = _mix(x, x_shift, mu[0])
+    xr = _mix(x, x_shift, mu[1])
+    k = jnp.square(jax.nn.relu(xk @ cast(ffn["wk"])))
+    return jax.nn.sigmoid(xr @ cast(ffn["wr"])) * (k @ cast(ffn["wv"]))
+
+
+def _shift(x):
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def forward(params, cfg, tokens, remat_policy: str = "nothing"):
+    from .transformer import remat, unembed
+    x = jnp.take(cast(params["embed"]), tokens, axis=0)
+    x = constraint(x, ("batch", "seq", None))
+
+    def layer_fn(x, lp):
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        x = x + time_mix(lp["att"], cfg, h, _shift(h))
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        x = x + channel_mix(lp["ffn"], h, _shift(h))
+        return constraint(x, ("batch", "seq", None)), None
+
+    layer_fn = remat(layer_fn, remat_policy)
+    x, _ = L.scan(layer_fn, x, params["layers"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, cfg, x), jnp.float32(0.0)
+
+
+def train_loss(params, cfg, batch, remat_policy: str = "nothing"):
+    logits, _ = forward(params, cfg, batch["tokens"], remat_policy)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) recurrent state
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, dtype=L.COMPUTE_DTYPE):
+    del max_len   # state is O(1) in sequence length
+    H, K, V = cfg.n_heads, cfg.ssm.d_state, cfg.ssm.head_dim
+    Lr, D = cfg.n_layers, cfg.d_model
+    return {
+        "att_x": jnp.zeros((Lr, batch, D), dtype),
+        "ffn_x": jnp.zeros((Lr, batch, D), dtype),
+        "S": jnp.zeros((Lr, batch, H, K, V), jnp.float32),
+    }
+
+
+def cache_axes():
+    return {
+        "att_x": ("layers", "cache_batch", None),
+        "ffn_x": ("layers", "cache_batch", None),
+        "S": ("layers", "cache_batch", "heads", None, None),
+    }
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """tokens: (B, 1) → (logits (B, 1, V), cache)."""
+    del pos
+    from .transformer import unembed
+    H, K, V = cfg.n_heads, cfg.ssm.d_state, cfg.ssm.head_dim
+    x = jnp.take(cast(params["embed"]), tokens, axis=0)   # (B, 1, D)
+
+    def layer_fn(x, inp):
+        lp, ax, fx, S = inp                    # ax/fx: (B, D); S: (B, H, K, V)
+        B = x.shape[0]
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        h1 = h[:, 0]
+        att = lp["att"]
+        mu = cast(att["mu"])
+        xr, xk, xv, xw, xg = (h1 + mu[i] * (ax - h1) for i in range(5))
+        r = (xr @ cast(att["wr"])).reshape(B, H, K)
+        k = (xk @ cast(att["wk"])).reshape(B, H, K)
+        v = (xv @ cast(att["wv"])).reshape(B, H, V)
+        w = _decay(att, xw[:, None])[:, 0].reshape(B, H, K)
+        g = jax.nn.silu(xg @ cast(att["wg"]))
+        kv = k[..., None] * v[..., None, :].astype(jnp.float32)
+        u = cast(att["u"]).astype(jnp.float32)
+        o = jnp.einsum("bhk,bhkv->bhv", r.astype(jnp.float32),
+                       S + u[None, :, :, None] * kv)
+        S = w[..., None].astype(jnp.float32) * S + kv
+        o = _head_norm(o.reshape(B, 1, H * V).astype(x.dtype),
+                       att["ln_x"], H, V, cfg.norm_eps)
+        x = x + ((o[:, 0] * g) @ cast(att["wo"]))[:, None]
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        h1n = h[:, 0]
+        mu2 = cast(lp["ffn"]["mu"])
+        xkf = h1n + mu2[0] * (fx - h1n)
+        xrf = h1n + mu2[1] * (fx - h1n)
+        kf = jnp.square(jax.nn.relu(xkf @ cast(lp["ffn"]["wk"])))
+        y = jax.nn.sigmoid(xrf @ cast(lp["ffn"]["wr"])) * (kf @ cast(lp["ffn"]["wv"]))
+        x = x + y[:, None]
+        return x, (h1, h1n, S)
+
+    x, (ax, fx, S) = L.scan(
+        layer_fn, x, (params["layers"], cache["att_x"], cache["ffn_x"],
+                      cache["S"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, cfg, x), {"att_x": ax, "ffn_x": fx, "S": S}

@@ -1,0 +1,473 @@
+"""Decoder-only transformer family: dense (yi/command-r/phi3/qwen2), MoE
+(olmoe/qwen2-moe) and prefix-LM VLM (paligemma).
+
+Layers are stacked along a scanned axis (small HLO, remat-friendly).  All
+activations carry logical sharding constraints; MoE dispatch is scatter-based
+(no (tokens × experts × capacity) one-hot ever materializes).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import constraint
+from . import layers as L
+from .layers import Spec, cast
+
+# ---------------------------------------------------------------------------
+# templates
+# ---------------------------------------------------------------------------
+def padded_experts(n: int, mult: int = 16) -> int:
+    return -(-n // mult) * mult
+
+
+def moe_template(cfg) -> dict:
+    m = cfg.moe
+    E = padded_experts(m.num_experts)
+    D, F = cfg.d_model, m.d_expert
+    t = {
+        "router": Spec((D, E), (None, "expert")),
+        "w_gate": Spec((E, D, F), ("expert", "embed_fsdp", None)),
+        "w_up": Spec((E, D, F), ("expert", "embed_fsdp", None)),
+        "w_down": Spec((E, F, D), ("expert", None, "embed_fsdp")),
+    }
+    if m.num_shared:
+        t["shared"] = {
+            "w_gate": Spec((D, m.d_shared), ("embed_fsdp", "mlp")),
+            "w_up": Spec((D, m.d_shared), ("embed_fsdp", "mlp")),
+            "w_down": Spec((m.d_shared, D), ("mlp", "embed_fsdp")),
+            "gate_proj": Spec((D, 1), (None, None)),
+        }
+    return t
+
+
+def mlp_template(cfg) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": Spec((D, F), ("embed_fsdp", "mlp")),
+        "w_up": Spec((D, F), ("embed_fsdp", "mlp")),
+        "w_down": Spec((F, D), ("mlp", "embed_fsdp")),
+    }
+
+
+def block_template(cfg) -> dict:
+    t = {
+        "ln1": Spec((cfg.d_model,), (None,), init="ones"),
+        "attn": L.attn_template(cfg),
+        "ln2": Spec((cfg.d_model,), (None,), init="ones"),
+    }
+    t["moe" if cfg.moe else "mlp"] = (moe_template(cfg) if cfg.moe
+                                      else mlp_template(cfg))
+    return t
+
+
+def template(cfg) -> dict:
+    t = {
+        "embed": Spec((cfg.vocab, cfg.d_model), ("vocab", "embed_fsdp"),
+                      scale=1.0),
+        "layers": L.stack_layers(block_template(cfg), cfg.n_layers),
+        "final_norm": Spec((cfg.d_model,), (None,), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        t["lm_head"] = Spec((cfg.d_model, cfg.vocab), ("embed_fsdp", "vocab"))
+    return t
+
+
+# ---------------------------------------------------------------------------
+# MoE forward (scatter-based dispatch)
+# ---------------------------------------------------------------------------
+def moe_apply(p, cfg, x):
+    """x: (B, T, D) → (y, aux_loss).
+
+    Baseline: one global scatter dispatch (position cumsum over all B·T·k
+    assignment rows — replicated under SPMD).  With ``FLAGS.moe_grouped``:
+    GShard-style grouped dispatch — per-sequence capacity and position
+    cumsum, so the dispatch math is sharded along the batch/data axis and
+    each cumsum is T·k long instead of B·T·k (§Perf iteration 1).
+    """
+    from repro.runtime.flags import FLAGS
+    m = cfg.moe
+    E = padded_experts(m.num_experts)
+    k = m.top_k
+    B, T, D = x.shape
+    N = B * T
+
+    if FLAGS.moe_grouped:
+        scores = (x @ cast(p["router"])).astype(jnp.float32)     # (B, T, E)
+        if E != m.num_experts:
+            scores = jnp.where(jnp.arange(E)[None, None] >= m.num_experts,
+                               -1e30, scores)
+        probs = jax.nn.softmax(scores, axis=-1)
+        gates, topi = jax.lax.top_k(probs, k)                    # (B, T, k)
+        gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+        C = max(int(math.ceil(T * k / E * m.capacity_factor)), 1)
+        flat_e = topi.reshape(B, T * k)                          # per group
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (B, T·k, E)
+        pos = jnp.cumsum(onehot, axis=1) - 1
+        my_pos = jnp.take_along_axis(pos, flat_e[..., None],
+                                     axis=2)[..., 0]             # (B, T·k)
+        keep = my_pos < C
+        dst = jnp.where(keep, flat_e * C + my_pos, E * C)
+
+        x_rep = jnp.repeat(x, k, axis=1)                         # (B, T·k, D)
+        xe = jax.vmap(lambda d, xr: jnp.zeros((E * C + 1, D), x.dtype)
+                      .at[d].add(xr))(dst, x_rep)
+        xe = constraint(xe[:, :-1].reshape(B, E, C, D),
+                        ("batch", "expert", None, None))
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, cast(p["w_gate"]))) \
+            * jnp.einsum("becd,edf->becf", xe, cast(p["w_up"]))
+        ye = jnp.einsum("becf,efd->becd", h, cast(p["w_down"]))
+        ye = constraint(ye, ("batch", "expert", None, None))
+        ye_flat = jnp.concatenate(
+            [ye.reshape(B, E * C, D), jnp.zeros((B, 1, D), x.dtype)], axis=1)
+        y_tok = jnp.take_along_axis(ye_flat, dst[..., None], axis=1) \
+            * keep[..., None].astype(x.dtype)
+        y = (y_tok.reshape(B, T, k, D)
+             * gates[..., None].astype(x.dtype)).sum(axis=2)
+        probs2 = probs.reshape(N, E)
+        topi2 = topi.reshape(N, k)
+    else:
+        xf = x.reshape(N, D)
+        scores = (xf @ cast(p["router"])).astype(jnp.float32)    # (N, E)
+        if E != m.num_experts:                                   # mask padding
+            pad_mask = jnp.arange(E) >= m.num_experts
+            scores = jnp.where(pad_mask[None, :], -1e30, scores)
+        probs = jax.nn.softmax(scores, axis=-1)
+        gates, topi = jax.lax.top_k(probs, k)                    # (N, k)
+        gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+        C = max(int(math.ceil(N * k / E * m.capacity_factor)), 1)
+        flat_e = topi.reshape(-1)                                # (N·k,)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - 1
+        my_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+        keep = my_pos < C
+        dst = jnp.where(keep, flat_e * C + my_pos, E * C)        # E·C = drop
+
+        x_rep = jnp.repeat(xf, k, axis=0)                        # (N·k, D)
+        xe = jnp.zeros((E * C + 1, D), x.dtype).at[dst].add(x_rep)
+        xe = constraint(xe[:-1].reshape(E, C, D), ("expert", None, None))
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, cast(p["w_gate"]))) \
+            * jnp.einsum("ecd,edf->ecf", xe, cast(p["w_up"]))
+        ye = jnp.einsum("ecf,efd->ecd", h, cast(p["w_down"]))
+        ye = constraint(ye, ("expert", None, None))
+
+        ye_flat = jnp.concatenate(
+            [ye.reshape(E * C, D), jnp.zeros((1, D), x.dtype)], axis=0)
+        y_tok = ye_flat[dst] * keep[:, None].astype(x.dtype)
+        y = (y_tok.reshape(N, k, D)
+             * gates[..., None].astype(x.dtype)).sum(axis=1).reshape(B, T, D)
+        probs2 = probs
+        topi2 = topi
+
+    if m.num_shared:
+        s = p["shared"]
+        shared_out = L.swiglu(x, s["w_gate"], s["w_up"], s["w_down"])
+        g = jax.nn.sigmoid(L.linear(x, s["gate_proj"]))
+        y = y + g * shared_out
+
+    # Switch-style load-balance loss over the true (unpadded) experts
+    me = probs2[:, :m.num_experts].mean(axis=0)
+    ce = (jax.nn.one_hot(topi2, E, dtype=jnp.float32).sum(1).mean(axis=0)
+          [:m.num_experts]) / k
+    aux = m.num_experts * jnp.sum(me * ce)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def block_apply(lp, cfg, x, positions, *, prefix_len: int = 0):
+    """One decoder block, train/prefill path.  x: (B, T, D)."""
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if prefix_len > 0:
+        # prefix-LM (paligemma): bidirectional over [0, P), causal afterwards
+        q, kk, v = L.attn_qkv(lp["attn"], cfg, h, positions)
+        P = prefix_len
+        from repro.kernels import ops as kops
+        o_pre = kops.flash_attention(q[:, :, :P], kk[:, :, :P], v[:, :, :P],
+                                     causal=False)
+        o_suf = kops.flash_attention(q[:, :, P:], kk, v, causal=True,
+                                     q_offset=P)
+        o = jnp.concatenate([o_pre, o_suf], axis=2)
+        attn = L.attn_out(lp["attn"], o)
+    else:
+        attn = L.self_attention(lp["attn"], cfg, h, positions)
+    x = x + constraint(attn, ("batch", "seq", None))
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        y, aux = moe_apply(lp["moe"], cfg, h)
+    else:
+        y, aux = L.swiglu(h, **{k: lp["mlp"][k] for k in
+                                ("w_gate", "w_up", "w_down")}), 0.0
+    return x + constraint(y, ("batch", "seq", None)), aux
+
+
+def _quant_decode_attention(p, cfg, x, ck, cv, ks, vs, pos):
+    """int8-KV decode attention (grouped-query path, scalar pos).
+
+    Cache stores int8 values with per-(token, head) scales; new K/V rows are
+    quantized at write; dequantization folds into the attention contractions
+    (scale applied on the (..., T) axis) — the cache never materializes in
+    a wide dtype.
+    """
+    B = x.shape[0]
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = L.attn_qkv(p, cfg, x, positions)
+
+    def quantize(t):                       # (B, Hkv, 1, Dh) → int8 + scale
+        s = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+        s = jnp.maximum(s, 1e-8)
+        q8 = jnp.clip(jnp.round(t.astype(jnp.float32) / s[..., None]),
+                      -127, 127).astype(jnp.int8)
+        return q8, s
+
+    k8, k_s = quantize(k)
+    v8, v_s = quantize(v)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k8, pos, axis=2)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v8, pos, axis=2)
+    ks = jax.lax.dynamic_update_slice_in_dim(ks, k_s.astype(ks.dtype), pos,
+                                             axis=2)
+    vs = jax.lax.dynamic_update_slice_in_dim(vs, v_s.astype(vs.dtype), pos,
+                                             axis=2)
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Dh)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * ks[:, :, None, :]
+    s = s * (Dh ** -0.5)
+    mask = jnp.arange(ck.shape[2])[None, None, None, :] <= pos
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", (w * vs[:, :, None, :]),
+                   cv.astype(jnp.float32))
+    o = o.reshape(B, Hq, 1, Dh).astype(x.dtype)
+    return L.attn_out(p, o), ck, cv, ks, vs
+
+
+def block_decode(lp, cfg, x, ck, cv, pos, ks=None, vs=None):
+    """One-token decode. x: (B, 1, D); ck/cv: (B, Hkv, Tmax, Dh);
+    ks/vs: int8-mode per-(token, head) scales (or None)."""
+    h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+    if ks is not None:
+        attn, ck, cv, ks, vs = _quant_decode_attention(
+            lp["attn"], cfg, h, ck, cv, ks, vs, pos)
+        x = x + attn
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            y, _ = moe_apply(lp["moe"], cfg, h)
+        else:
+            y = L.swiglu(h, **{k: lp["mlp"][k] for k in
+                               ("w_gate", "w_up", "w_down")})
+        return x + y, ck, cv, ks, vs
+    attn, ck, cv = L.decode_attention(lp["attn"], cfg, h, ck, cv, pos)
+    x = x + attn
+    h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        y, _ = moe_apply(lp["moe"], cfg, h)
+    else:
+        y = L.swiglu(h, **{k: lp["mlp"][k] for k in
+                           ("w_gate", "w_up", "w_down")})
+    return x + y, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+def embed_tokens(params, tokens):
+    e = jnp.take(cast(params["embed"]), tokens, axis=0)
+    return constraint(e, ("batch", "seq", None))
+
+
+def unembed(params, cfg, x):
+    head = params.get("lm_head")
+    w = cast(head) if head is not None else cast(params["embed"]).T
+    logits = x @ w
+    return constraint(logits, ("batch", "seq", "vocab"))
+
+
+def forward(params, cfg, tokens, prefix_embeds: Optional[jax.Array] = None,
+            remat_policy: str = "nothing"):
+    """tokens: (B, T) → logits (B, T', V), aux.  With ``prefix_embeds``
+    (B, P, D) the sequence is [prefix; tokens] and attention is prefix-LM."""
+    x = embed_tokens(params, tokens)
+    prefix_len = 0
+    if prefix_embeds is not None:
+        prefix_len = prefix_embeds.shape[1]
+        x = jnp.concatenate([cast(prefix_embeds), x], axis=1)
+    T = x.shape[1]
+    positions = jnp.arange(T)
+
+    def layer_fn(carry, lp):
+        x, aux = carry
+        x, a = block_apply(lp, cfg, x, positions, prefix_len=prefix_len)
+        return (x, aux + a), None
+
+    layer_fn = remat(layer_fn, remat_policy)
+    (x, aux), _ = L.scan(layer_fn, (x, jnp.float32(0.0)),
+                         params["layers"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, cfg, x), aux / max(cfg.n_layers, 1)
+
+
+def remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    policies = {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }
+    return jax.checkpoint(fn, policy=policies.get(policy,
+                                                  policies["nothing"]),
+                          prevent_cse=False)
+
+
+def train_loss(params, cfg, batch, remat_policy: str = "nothing"):
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          batch.get("prefix_embeds"), remat_policy)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:          # vlm: loss on text only
+        logits = logits[:, -labels.shape[1]:]
+    return L.softmax_xent(logits, labels) + 0.01 * aux
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=L.COMPUTE_DTYPE):
+    from repro.runtime.flags import FLAGS
+    Hkv, Dh, Lr = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    shape = (Lr, batch, Hkv, max_len, Dh)
+    if FLAGS.decode_kv_int8:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(shape[:-1], jnp.float32),
+                "v_s": jnp.zeros(shape[:-1], jnp.float32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs(cfg, batch: int, max_len: int, rules, dtype=L.COMPUTE_DTYPE):
+    Hkv, Dh, Lr = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    shape = (Lr, batch, Hkv, max_len, Dh)
+    axes = ("layers", "cache_batch", "kv_heads", "kv_seq", None)
+    return jax.tree.map(
+        lambda _: rules.spec_for(shape, axes), {"k": 0, "v": 0})
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """tokens: (B, 1); pos: scalar (or per-lane) position →
+    (logits (B, 1, V), cache)."""
+    x = embed_tokens(params, tokens)
+
+    if "k_s" in cache:                       # int8 KV mode
+        def layer_fn(x, inp):
+            lp, ck, cv, sk, sv = inp
+            x, ck, cv, sk, sv = block_decode(lp, cfg, x, ck, cv, pos, sk, sv)
+            return x, (ck, cv, sk, sv)
+
+        x, (k8, v8, sk, sv) = L.scan(
+            layer_fn, x, (params["layers"], cache["k"], cache["v"],
+                          cache["k_s"], cache["v_s"]))
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return unembed(params, cfg, x), {"k": k8, "v": v8,
+                                         "k_s": sk, "v_s": sv}
+
+    def layer_fn(x, inp):
+        lp, ck, cv = inp
+        x, ck, cv = block_decode(lp, cfg, x, ck, cv, pos)
+        return x, (ck, cv)
+
+    x, (ks, vs) = L.scan(layer_fn, x,
+                         (params["layers"], cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, cfg, x), {"k": ks, "v": vs}
+
+
+def chunk_step(params, cfg, cache, tokens, pos):
+    """Score a k-token chunk against the cache (speculative-decode verify).
+
+    tokens: (B, k); pos: scalar — chunk occupies [pos, pos+k).
+    Returns (logits (B, k, V), cache with the chunk's K/V written).
+    Positions ≥ pos+k in the cache are ignored by masking, so a later
+    overwrite at a smaller pos implements rollback (the paper's TM discard).
+    """
+    x = embed_tokens(params, tokens)
+    B, k, _ = x.shape
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Tmax = cache["k"].shape[3]
+    positions = pos + jnp.arange(k)
+
+    def layer_fn(x, inp):
+        lp, ck, cv = inp
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, kk, vv = L.attn_qkv(lp["attn"], cfg, h, positions)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, kk.astype(ck.dtype), pos, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, vv.astype(cv.dtype), pos, axis=2)
+        kr = jnp.repeat(ck, Hq // Hkv, axis=1)
+        vr = jnp.repeat(cv, Hq // Hkv, axis=1)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       kr.astype(jnp.float32)) * (Dh ** -0.5)
+        cols = jnp.arange(Tmax)[None, None, None, :]
+        rows = positions[None, None, :, None]
+        s = jnp.where(cols <= rows, s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", w,
+                       vr.astype(jnp.float32)).astype(x.dtype)
+        x = x + L.attn_out(lp["attn"], o)
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            y, _ = moe_apply(lp["moe"], cfg, h)
+        else:
+            y = L.swiglu(h, **{kk2: lp["mlp"][kk2] for kk2 in
+                               ("w_gate", "w_up", "w_down")})
+        return x + y, (ck, cv)
+
+    x, (ks, vs) = L.scan(layer_fn, x,
+                         (params["layers"], cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, cfg, x), {"k": ks, "v": vs}
+
+
+def prefill(params, cfg, tokens, max_len: int,
+            prefix_embeds: Optional[jax.Array] = None):
+    """Run the full prompt, returning logits and a populated KV cache."""
+    x = embed_tokens(params, tokens)
+    prefix_len = 0
+    if prefix_embeds is not None:
+        prefix_len = prefix_embeds.shape[1]
+        x = jnp.concatenate([cast(prefix_embeds), x], axis=1)
+    B, T, _ = x.shape
+    positions = jnp.arange(T)
+    pad = max_len - T
+
+    def layer_fn(x, lp):
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["attn"], cfg, h, positions)
+        from repro.kernels import ops as kops
+        if prefix_len > 0:
+            o_pre = kops.flash_attention(q[:, :, :prefix_len],
+                                         k[:, :, :prefix_len],
+                                         v[:, :, :prefix_len], causal=False)
+            o_suf = kops.flash_attention(q[:, :, prefix_len:], k, v,
+                                         causal=True, q_offset=prefix_len)
+            o = jnp.concatenate([o_pre, o_suf], axis=2)
+        else:
+            o = kops.flash_attention(q, k, v, causal=True)
+        x = x + L.attn_out(lp["attn"], o)
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            y, _ = moe_apply(lp["moe"], cfg, h)
+        else:
+            y = L.swiglu(h, **{kk: lp["mlp"][kk] for kk in
+                               ("w_gate", "w_up", "w_down")})
+        ck = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return x + y, (ck, cv)
+
+    x, (ks, vs) = L.scan(layer_fn, x, params["layers"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, cfg, x), {"k": ks, "v": vs}

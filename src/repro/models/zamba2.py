@@ -1,0 +1,262 @@
+"""Zamba2-style hybrid: Mamba-2 backbone with alternating *shared* attention
+blocks every ``shared_attn_period`` layers.
+
+Layer structure (L = 81, period 6): 13 groups of [6 mamba layers + one shared
+attention block], plus a 3-layer mamba tail.  The two shared blocks alternate
+across groups — shared *weights*, but each invocation site keeps its own KV
+cache.  Decode state: per-mamba-layer (conv window, SSD state) — O(1) — plus
+13 site-local KV caches, which is what makes the ``long_500k`` cell feasible
+(only 13 attention caches instead of 81).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.sharding.rules import constraint
+from . import layers as L
+from . import transformer as T
+from .layers import Spec, cast
+
+
+def _dims(cfg):
+    d_in = cfg.ssm.expand * cfg.d_model
+    H = d_in // cfg.ssm.head_dim
+    N = cfg.ssm.d_state
+    return d_in, H, N
+
+
+def mamba_template(cfg) -> dict:
+    D = cfg.d_model
+    d_in, H, N = _dims(cfg)
+    kconv = cfg.ssm.conv_kernel
+    return {
+        "ln": Spec((D,), (None,), init="ones"),
+        "in_proj": Spec((D, 2 * d_in + 2 * N + H), ("embed_fsdp", "heads")),
+        "conv_w": Spec((kconv, d_in + 2 * N), (None, "heads")),
+        "conv_b": Spec((d_in + 2 * N,), ("heads",), init="zeros"),
+        "a_log": Spec((H,), ("heads",), init="zeros"),
+        "dt_bias": Spec((H,), ("heads",), init="zeros"),
+        "d_skip": Spec((H,), ("heads",), init="zeros"),
+        "out_norm": Spec((d_in,), ("heads",), init="ones"),
+        "out_proj": Spec((d_in, D), ("heads", "embed_fsdp")),
+    }
+
+
+def template(cfg) -> dict:
+    period = cfg.shared_attn_period
+    n_groups = cfg.n_layers // period
+    tail = cfg.n_layers - n_groups * period
+    shared_block = {
+        "ln1": Spec((cfg.d_model,), (None,), init="ones"),
+        "attn": L.attn_template(cfg),
+        "ln2": Spec((cfg.d_model,), (None,), init="ones"),
+        "mlp": T.mlp_template(cfg),
+    }
+    t = {
+        "embed": Spec((cfg.vocab, cfg.d_model), ("vocab", "embed_fsdp"),
+                      scale=1.0),
+        "groups": L.stack_layers(
+            L.stack_layers(mamba_template(cfg), period), n_groups),
+        "shared": L.stack_layers(shared_block, cfg.n_shared_blocks),
+        "final_norm": Spec((cfg.d_model,), (None,), init="ones"),
+        "lm_head": Spec((cfg.d_model, cfg.vocab), ("embed_fsdp", "vocab")),
+    }
+    if tail:
+        t["tail"] = L.stack_layers(mamba_template(cfg), tail)
+    return t
+
+
+def _split_proj(cfg, proj):
+    d_in, H, N = _dims(cfg)
+    z, xbc, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over time. xbc: (B, T, C); w: (k, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def mamba_apply(lp, cfg, x):
+    """One Mamba-2 layer, sequence path. x: (B, T, D)."""
+    d_in, H, N = _dims(cfg)
+    P = cfg.ssm.head_dim
+    B, Tt, D = x.shape
+    h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+    z, xbc, dt = _split_proj(cfg, h @ cast(lp["in_proj"]))
+    xbc = _causal_conv(xbc, cast(lp["conv_w"]), cast(lp["conv_b"]))
+    xin, bmat, cmat = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])  # (B,T,H)
+    a = (-jnp.exp(lp["a_log"]) * dt)                              # ≤ 0
+    xh = xin.reshape(B, Tt, H, P) * dt[..., None].astype(xin.dtype)
+    y = ops.mamba2_ssd(xh, a, bmat, cmat)                         # (B,T,H,P)
+    y = y + xin.reshape(B, Tt, H, P) * cast(lp["d_skip"])[:, None]
+    y = y.reshape(B, Tt, d_in)
+    y = y * jax.nn.silu(z)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y.astype(jnp.float32)), -1,
+                                   keepdims=True) + cfg.norm_eps).astype(y.dtype)
+    y = y * cast(lp["out_norm"])
+    return x + constraint(y @ cast(lp["out_proj"]), ("batch", "seq", None))
+
+
+def _shared_apply(params, cfg, x, gi, positions):
+    """Apply the (gi % n_shared)-th shared attention block.
+
+    Selects the block's *weights* with a dynamic gather instead of
+    ``lax.switch`` — one block computation in the HLO rather than one per
+    branch (compile-time and code-size win; numerically identical)."""
+    lp = jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(
+            a, gi % cfg.n_shared_blocks, 0, keepdims=False),
+        params["shared"])
+    y, _ = T.block_apply(lp, cfg, x, positions)
+    return y
+
+
+def forward(params, cfg, tokens, remat_policy: str = "nothing"):
+    x = jnp.take(cast(params["embed"]), tokens, axis=0)
+    x = constraint(x, ("batch", "seq", None))
+    positions = jnp.arange(x.shape[1])
+
+    def group_fn(carry, inp):
+        x = carry
+        glp, gi = inp
+
+        def mamba_fn(x, lp):
+            return mamba_apply(lp, cfg, x), None
+
+        x, _ = L.scan(mamba_fn, x, glp)
+        x = _shared_apply(params, cfg, x, gi, positions)
+        return x, None
+
+    group_fn = T.remat(group_fn, remat_policy)
+    n_groups = cfg.n_layers // cfg.shared_attn_period
+    x, _ = L.scan(group_fn, x,
+                  (params["groups"], jnp.arange(n_groups)))
+    if "tail" in params:
+        def mamba_fn(x, lp):
+            return mamba_apply(lp, cfg, x), None
+        x, _ = L.scan(mamba_fn, x, params["tail"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return T.unembed(params, cfg, x), jnp.float32(0.0)
+
+
+def train_loss(params, cfg, batch, remat_policy: str = "nothing"):
+    logits, _ = forward(params, cfg, batch["tokens"], remat_policy)
+    return L.softmax_xent(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, dtype=L.COMPUTE_DTYPE):
+    d_in, H, N = _dims(cfg)
+    P = cfg.ssm.head_dim
+    period = cfg.shared_attn_period
+    n_groups = cfg.n_layers // period
+    tail = cfg.n_layers - n_groups * period
+    kconv = cfg.ssm.conv_kernel
+    cache = {
+        "conv": jnp.zeros((n_groups, period, batch, kconv - 1, d_in + 2 * N),
+                          dtype),
+        "ssd": jnp.zeros((n_groups, period, batch, H, N, P), jnp.float32),
+        "attn_k": jnp.zeros((n_groups, batch, cfg.n_kv_heads, max_len,
+                             cfg.head_dim), dtype),
+        "attn_v": jnp.zeros((n_groups, batch, cfg.n_kv_heads, max_len,
+                             cfg.head_dim), dtype),
+    }
+    if tail:
+        cache["conv_tail"] = jnp.zeros((tail, batch, kconv - 1, d_in + 2 * N),
+                                       dtype)
+        cache["ssd_tail"] = jnp.zeros((tail, batch, H, N, P), jnp.float32)
+    return cache
+
+
+def cache_axes(cfg):
+    axes = {
+        "conv": ("layers", None, "cache_batch", None, "heads"),
+        "ssd": ("layers", None, "cache_batch", "heads", None, None),
+        "attn_k": ("layers", "cache_batch", "kv_heads", "kv_seq", None),
+        "attn_v": ("layers", "cache_batch", "kv_heads", "kv_seq", None),
+    }
+    period = cfg.shared_attn_period
+    if cfg.n_layers % period:
+        axes["conv_tail"] = ("layers", "cache_batch", None, "heads")
+        axes["ssd_tail"] = ("layers", "cache_batch", "heads", None, None)
+    return axes
+
+
+def _mamba_decode(lp, cfg, x, conv_st, ssd_st):
+    """x: (B, 1, D); conv_st: (B, k-1, C); ssd_st: (B, H, N, P)."""
+    d_in, H, N = _dims(cfg)
+    P = cfg.ssm.head_dim
+    B = x.shape[0]
+    h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+    z, xbc, dt = _split_proj(cfg, h[:, 0] @ cast(lp["in_proj"]))
+    w = cast(lp["conv_w"])
+    k = w.shape[0]
+    window = jnp.concatenate([conv_st, xbc[:, None]], axis=1)  # (B, k, C)
+    conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w) + cast(lp["conv_b"]))
+    xin, bvec, cvec = jnp.split(conv, [d_in, d_in + N], axis=-1)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])  # (B, H)
+    decay = jnp.exp(-jnp.exp(lp["a_log"]) * dtf)                   # (B, H)
+    xh = (xin.reshape(B, H, P) * dtf[..., None]).astype(jnp.float32)
+    ssd_st = (decay[..., None, None] * ssd_st
+              + bvec.astype(jnp.float32)[:, None, :, None] * xh[:, :, None, :])
+    y = jnp.einsum("bn,bhnp->bhp", cvec.astype(jnp.float32), ssd_st)
+    y = (y.astype(x.dtype) + xin.reshape(B, H, P) * cast(lp["d_skip"])[:, None])
+    y = y.reshape(B, d_in) * jax.nn.silu(z)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y.astype(jnp.float32)), -1,
+                                   keepdims=True) + cfg.norm_eps).astype(y.dtype)
+    y = y * cast(lp["out_norm"])
+    x = x + (y @ cast(lp["out_proj"]))[:, None]
+    return x, window[:, 1:], ssd_st
+
+
+def _shared_decode(params, cfg, x, gi, ck, cv, pos):
+    lp = jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(
+            a, gi % cfg.n_shared_blocks, 0, keepdims=False),
+        params["shared"])
+    return T.block_decode(lp, cfg, x, ck, cv, pos)
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    x = jnp.take(cast(params["embed"]), tokens, axis=0)   # (B, 1, D)
+    n_groups = cfg.n_layers // cfg.shared_attn_period
+
+    def group_fn(x, inp):
+        glp, gi, conv_g, ssd_g, ck, cv = inp
+
+        def mamba_fn(carry, inp2):
+            x = carry
+            lp, cst, sst = inp2
+            x, cst, sst = _mamba_decode(lp, cfg, x, cst, sst)
+            return x, (cst, sst)
+
+        x, (conv_g, ssd_g) = L.scan(mamba_fn, x, (glp, conv_g, ssd_g))
+        x, ck, cv = _shared_decode(params, cfg, x, gi, ck, cv, pos)
+        return x, (conv_g, ssd_g, ck, cv)
+
+    x, (conv, ssd, ck, cv) = L.scan(
+        group_fn, x,
+        (params["groups"], jnp.arange(n_groups), cache["conv"], cache["ssd"],
+         cache["attn_k"], cache["attn_v"]))
+    new_cache = dict(cache, conv=conv, ssd=ssd, attn_k=ck, attn_v=cv)
+    if "tail" in params:
+        def mamba_fn(carry, inp2):
+            x = carry
+            lp, cst, sst = inp2
+            x, cst, sst = _mamba_decode(lp, cfg, x, cst, sst)
+            return x, (cst, sst)
+        x, (ct, st) = L.scan(
+            mamba_fn, x, (params["tail"], cache["conv_tail"],
+                          cache["ssd_tail"]))
+        new_cache.update(conv_tail=ct, ssd_tail=st)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return T.unembed(params, cfg, x), new_cache

@@ -1,0 +1,16 @@
+"""Learning-rate schedules (scale factors applied to AdamWConfig.lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, warmup: int, total: int, floor: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos
+
+
+def linear_warmup(step, warmup: int):
+    return jnp.minimum(jnp.asarray(step, jnp.float32) / max(warmup, 1), 1.0)

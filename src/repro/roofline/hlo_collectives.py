@@ -1,0 +1,65 @@
+"""Collective-traffic extraction from optimized (post-SPMD) HLO text.
+
+``cost_analysis()`` does not report collective bytes, so we parse
+``compiled.as_text()`` — the per-device program — and sum the result-shape
+bytes of every collective op, by kind.  Shapes in post-SPMD HLO are
+*per-device* shapes; ``collective_bytes`` in the roofline table is the global
+figure (per-device × chips) so the assignment's
+``collective_bytes / (chips × link_bw)`` formula reduces to per-device bytes
+over link bandwidth.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# one HLO instruction per line:  %name = <result-type> <op-name>(...)
+_LINE = re.compile(
+    r"=\s*(.*?)\s(" + "|".join(re.escape(op) for op in COLLECTIVE_OPS)
+    + r")(?:-(?:start|done))?[.\s(]")
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_per_device(hlo_text: str) -> dict[str, Any]:
+    """Sum per-device result bytes of every collective op, by kind.
+
+    Handles tuple results (multi-operand all-reduce) by summing every
+    dtype[dims] in the result type.  ``-start``/``-done`` async pairs are
+    counted once (the -done result duplicates the -start; we skip -done).
+    """
+    out = {op: 0 for op in COLLECTIVE_OPS}
+    count = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        if "-done" in line or " fusion(" in line:
+            # async -done duplicates the -start result shape
+            if not any(op + "-start" in line or op + "(" in line
+                       for op in COLLECTIVE_OPS):
+                continue
+            if any(op + "-done" in line for op in COLLECTIVE_OPS):
+                continue
+        m = _LINE.search(line)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE.findall(result_type))
+        out[op] += nbytes
+        count[op] += 1
+    total = sum(out.values())
+    return {"per_op": out, "counts": count, "total_per_device": total}

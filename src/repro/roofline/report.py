@@ -1,0 +1,91 @@
+"""Render the EXPERIMENTS.md roofline table from experiments/dryrun JSONs.
+
+    PYTHONPATH=src python -m repro.roofline.report experiments/dryrun
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def _fmt(x, unit=""):
+    if x is None:
+        return "-"
+    for s, d in (("P", 1e15), ("T", 1e12), ("G", 1e9), ("M", 1e6), ("k", 1e3)):
+        if abs(x) >= d:
+            return f"{x / d:.2f}{s}{unit}"
+    return f"{x:.2f}{unit}"
+
+
+def load(dirpath: str, mesh: str = "single") -> list[dict]:
+    recs = []
+    for fn in sorted(os.listdir(dirpath)):
+        if fn.endswith(f"_{mesh}.json"):
+            with open(os.path.join(dirpath, fn)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def table(recs: list[dict]) -> str:
+    rows = ["| arch | shape | status | t_comp (s) | t_mem (s) | t_coll (s) | "
+            "bottleneck | max/Σ | MODEL/HLO | HLO flops (global) | coll bytes |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "SKIP":
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP | - | - | - | "
+                        f"- | - | - | - | - |")
+            continue
+        if r["status"] != "OK":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | - | - | - | "
+                        f"- | - | - | - | - |")
+            continue
+        rf = r["roofline"]
+        ts = [rf["t_compute"], rf["t_memory"], rf["t_collective"]]
+        frac = max(ts) / max(sum(ts), 1e-30)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | OK "
+            f"| {rf['t_compute']:.3g} | {rf['t_memory']:.3g} "
+            f"| {rf['t_collective']:.3g} | **{rf['bottleneck']}** "
+            f"| {frac:.2f} | {rf['useful_flops_ratio']:.2f} "
+            f"| {_fmt(rf['flops_global'])} "
+            f"| {_fmt(rf['collective_global'], 'B')} |")
+    return "\n".join(rows)
+
+
+def summarize(recs: list[dict]) -> str:
+    ok = [r for r in recs if r["status"] == "OK"]
+    skip = [r for r in recs if r["status"] == "SKIP"]
+    fail = [r for r in recs if r["status"] not in ("OK", "SKIP")]
+    lines = [f"cells: {len(recs)}  OK: {len(ok)}  SKIP: {len(skip)}  "
+             f"FAIL: {len(fail)}"]
+    if ok:
+        by_frac = sorted(
+            ok, key=lambda r: (max(r['roofline'][k] for k in
+                                   ('t_compute', 't_memory', 't_collective'))
+                               / max(sum(r['roofline'][k] for k in
+                                         ('t_compute', 't_memory',
+                                          't_collective')), 1e-30)))
+        w = by_frac[0]
+        lines.append(f"worst roofline fraction: {w['arch']} × {w['shape']}")
+        by_coll = sorted(ok, key=lambda r: -(r['roofline']['t_collective']
+                                             / max(sum((r['roofline']['t_compute'],
+                                                        r['roofline']['t_memory'],
+                                                        r['roofline']['t_collective'])),
+                                                   1e-30)))
+        c = by_coll[0]
+        lines.append(f"most collective-bound: {c['arch']} × {c['shape']}")
+    return "\n".join(lines)
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "single"
+    recs = load(d, mesh)
+    print(table(recs))
+    print()
+    print(summarize(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Performance feature flags (§Perf hillclimbing: baseline vs optimized).
+
+The paper-faithful/baseline lowering keeps all flags False; each hillclimb
+iteration toggles one flag so EXPERIMENTS.md §Perf can record isolated
+before/after roofline terms (hypothesis → change → measure → validate).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+
+@dataclasses.dataclass
+class PerfFlags:
+    #: MoE: GShard-style grouped dispatch — per-sequence position cumsum
+    #: (data-sharded, short) instead of one global replicated cumsum.
+    moe_grouped: bool = False
+    #: decode attention: grouped-query einsum without materializing the
+    #: GQA-repeated (and fp32-cast) K/V cache.
+    decode_gqa_packed: bool = False
+    #: decode: shard the KV-cache sequence axis over "model" when kv_heads
+    #: cannot shard there (requires rules override, see dryrun --opt).
+    decode_kv_seq_shard: bool = False
+    #: decode: int8 KV cache with per-(token, head) scales — halves cache
+    #: bytes and cache-side collective traffic (transformer family,
+    #: scalar-pos decode path).
+    decode_kv_int8: bool = False
+
+
+FLAGS = PerfFlags()
+
+
+@contextlib.contextmanager
+def use_flags(**kw):
+    global FLAGS
+    prev = FLAGS
+    FLAGS = dataclasses.replace(prev, **kw)
+    try:
+        yield FLAGS
+    finally:
+        FLAGS = prev
+
+
+def optimized(level: int = 1) -> dict:
+    kw = dict(moe_grouped=True, decode_gqa_packed=True,
+              decode_kv_seq_shard=True)
+    if level >= 3:
+        kw["decode_kv_int8"] = True
+    return kw

@@ -1,0 +1,189 @@
+"""Distributed train-step builder + fault-tolerant training loop.
+
+``make_train_step`` builds the pjit'd step: bf16 compute over fp32 master
+params, optional gradient accumulation (microbatching), AdamW with
+warmup-cosine schedule, metrics.  ``TrainLoop`` adds checkpoint/restart
+(exact resume — data is (seed, step)-deterministic), async checkpointing,
+retry-on-failure, and a straggler watchdog.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.optim import adamw, schedule
+from repro.sharding import rules as rules_lib
+
+log = logging.getLogger("repro.train")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    remat_policy: str = "nothing"
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    microbatches: int = 1            # gradient-accumulation factor
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    max_restarts: int = 3
+    straggler_factor: float = 2.0    # step slower than factor×median → flagged
+
+
+def init_state(model, key):
+    params = model.init(key)
+    return {"params": params, "opt": adamw.init(params)}
+
+
+def abstract_state(model):
+    params = model.abstract_params()
+    opt = jax.eval_shape(adamw.init, params)
+    return {"params": params, "opt": opt}
+
+
+def state_pspecs(model, rules):
+    p = model.param_pspecs(rules)
+    return {"params": p,
+            "opt": {"m": p, "v": p, "step": PartitionSpec()}}
+
+
+def batch_pspecs(batch_tree, rules):
+    def leaf(x):
+        axes = ("batch",) + (None,) * (len(x.shape) - 1)
+        return rules.spec_for(x.shape, axes)
+    return jax.tree.map(leaf, batch_tree)
+
+
+def make_train_step(model, tcfg: TrainConfig) -> Callable:
+    """Pure train step: (state, batch) → (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.train_loss(params, batch, tcfg.remat_policy)
+
+    def train_step(state, batch):
+        if tcfg.microbatches > 1:
+            k = tcfg.microbatches
+
+            def micro(carry, mb):
+                acc, = carry
+                loss, g = jax.value_and_grad(loss_fn)(state["params"], mb)
+                acc = jax.tree.map(jnp.add, acc,
+                                   jax.tree.map(lambda x: x / k, g))
+                return (acc,), loss
+
+            split = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            (grads,), losses = jax.lax.scan(micro, (zeros,), split)
+            loss = losses.mean()
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+
+        lr_scale = schedule.warmup_cosine(state["opt"]["step"],
+                                          tcfg.warmup_steps, tcfg.total_steps)
+        params, opt, metrics = adamw.update(grads, state["opt"],
+                                            state["params"], tcfg.optimizer,
+                                            lr_scale)
+        metrics["loss"] = loss
+        return {"params": params, "opt": opt}, metrics
+
+    return train_step
+
+
+def jit_train_step(model, mesh, rules, tcfg: TrainConfig, batch_tree):
+    """pjit the train step with explicit in/out shardings."""
+    sspec = state_pspecs(model, rules)
+    bspec = batch_pspecs(batch_tree, rules)
+    to_shard = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    step = make_train_step(model, tcfg)
+
+    def wrapped(state, batch):
+        with rules_lib.use_rules(rules):
+            return step(state, batch)
+
+    return jax.jit(
+        wrapped,
+        in_shardings=(to_shard(sspec), to_shard(bspec)),
+        out_shardings=(to_shard(sspec), None),
+        donate_argnums=(0,),
+    )
+
+
+class TrainLoop:
+    """Fault-tolerant loop: restart-exact resume, async ckpt, stragglers."""
+
+    def __init__(self, model, source, train_step, tcfg: TrainConfig,
+                 ckpt_dir: str, init_fn: Callable[[], Any],
+                 failure_injector: Optional[Callable[[int], None]] = None):
+        self.model = model
+        self.source = source
+        self.train_step = train_step
+        self.tcfg = tcfg
+        self.ckpt_dir = ckpt_dir
+        self.init_fn = init_fn
+        self.failure_injector = failure_injector
+        self.saver = ckpt_lib.AsyncCheckpointer(ckpt_dir, keep=tcfg.ckpt_keep)
+        self.step_times: list[float] = []
+        self.stragglers: list[int] = []
+        self.restarts = 0
+        self.history: list[dict] = []
+
+    def _load_or_init(self):
+        last = ckpt_lib.latest_step(self.ckpt_dir)
+        if last is not None:
+            template = jax.eval_shape(self.init_fn)
+            state, _ = ckpt_lib.restore(self.ckpt_dir, template, last)
+            log.info("restored step %d", last)
+            return state, last + 1
+        return self.init_fn(), 0
+
+    def run(self, steps: int):
+        state, start = self._load_or_init()
+        step = start
+        while step < steps:
+            try:
+                t0 = time.monotonic()
+                if self.failure_injector is not None:
+                    self.failure_injector(step)
+                batch = self.source.batch(step)
+                state, metrics = self.train_step(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.monotonic() - t0
+                self._watch(step, dt)
+                self.history.append(
+                    {"step": step,
+                     **{k: float(v) for k, v in metrics.items()}})
+                if (step + 1) % self.tcfg.ckpt_every == 0 or step + 1 == steps:
+                    self.saver.save(step, state)
+                step += 1
+            except (ckpt_lib.json.JSONDecodeError, OSError):
+                raise
+            except RuntimeError as e:       # injected / device failure
+                self.restarts += 1
+                log.warning("step %d failed (%s); restart %d", step, e,
+                            self.restarts)
+                if self.restarts > self.tcfg.max_restarts:
+                    raise
+                self.saver.wait()
+                state, step = self._load_or_init()
+        self.saver.wait()
+        return state
+
+    def _watch(self, step: int, dt: float):
+        self.step_times.append(dt)
+        if len(self.step_times) >= 8:
+            med = sorted(self.step_times)[len(self.step_times) // 2]
+            if dt > self.tcfg.straggler_factor * med:
+                self.stragglers.append(step)
+                log.warning("straggler: step %d took %.3fs (median %.3fs)",
+                            step, dt, med)

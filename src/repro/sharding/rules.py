@@ -1,0 +1,162 @@
+"""Logical-axis sharding rules (MaxText-style), with automatic divisibility
+fallback and per-(arch × shape) overrides.
+
+Every tensor in the framework carries *logical* axis names; rules map them to
+mesh axes.  ``spec_for(shape, axes)`` silently drops a mapping whose mesh-axis
+product does not divide the dimension (replicating instead) and records the
+drop — a framework must not hard-fail because e.g. kv_heads=8 < model=16.
+
+Default mapping rationale (DESIGN.md §7):
+  * ``batch``     → ("pod", "data")   — plain data parallelism across pods;
+  * weight fsdp axes (``embed_fsdp``) → "data" — ZeRO-3 style weight/optimizer
+    sharding over the *intra-pod* data axis only, so the per-layer weight
+    all-gathers ride the fast intra-pod ICI and only gradient all-reduces
+    cross the pod axis;
+  * ``heads``/``mlp``/``vocab``/``expert`` → "model" — tensor parallelism;
+  * ``kv_seq``    → "data" only for single-sequence long-context decode.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+LogicalAxes = tuple[Optional[str], ...]
+
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "kv_seq": (),
+    "embed": (),
+    "embed_fsdp": ("data",),       # weight dim carrying the ZeRO shard
+    "heads": ("model",),
+    "kv_heads": ("model",),        # auto-dropped when not divisible
+    "head_dim": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "layers": (),
+    "state": (),
+    "frames": (),
+    "cache_batch": ("data",),
+    "stage": ("stage",),
+}
+
+#: per-shape overrides (merged over DEFAULT_RULES by the launch layer)
+LONG_CONTEXT_RULES = {
+    "cache_batch": (),             # batch=1: can't shard batch…
+    "kv_seq": ("data",),           # …shard the KV length instead (SP)
+}
+
+#: §Perf (decode_kv_seq_shard): when kv_heads cannot shard over "model"
+#: (GQA kv ∈ {1, 2, 8} < 16), shard the cache's sequence axis there instead —
+#: the duplicate-axis guard in ``spec_for`` keeps whichever binds first, so
+#: archs with shardable kv_heads are unaffected.
+DECODE_OPT_RULES = {
+    "kv_seq": ("model",),
+}
+
+#: §Perf iteration 2 (decode): ZeRO/fsdp weight sharding is wrong for serving
+#: — it all-gathers the full weights every step.  Inference-TP instead:
+#: weights 2D-sharded over (model × data) on their output dims, activations
+#: (tiny at decode) gathered instead of weights.  Activation constraints bind
+#: "data" to batch first, so only *weight* tensors pick up the extra axis
+#: (duplicate-axis guard).
+DECODE_OPT2_RULES = {
+    "kv_seq": ("model",),
+    "embed_fsdp": (),
+    "heads": ("model", "data"),
+    "mlp": ("model", "data"),
+    "vocab": ("model", "data"),
+    "expert": ("model", "data"),
+}
+
+
+@dataclasses.dataclass
+class Rules:
+    mapping: dict[str, tuple[str, ...]]
+    mesh: Optional[Mesh] = None
+    dropped: set = dataclasses.field(default_factory=set)
+
+    def _axes_in_mesh(self, axes: tuple[str, ...]) -> tuple[str, ...]:
+        if self.mesh is None:
+            return axes
+        return tuple(a for a in axes if a in self.mesh.axis_names)
+
+    def spec_for(self, shape: tuple[int, ...], axes: LogicalAxes) -> PartitionSpec:
+        """PartitionSpec for a tensor of ``shape`` with logical ``axes``.
+
+        Drops (→ replicate) any mapping whose mesh-axis product does not
+        divide the dim, and any mesh axis already consumed by an earlier dim
+        of the same tensor (first binding wins); both are recorded in
+        ``self.dropped``.
+        """
+        assert len(shape) == len(axes), (shape, axes)
+        parts: list[Any] = []
+        used: set[str] = set()
+        for dim, name in zip(shape, axes):
+            if name is None:
+                parts.append(None)
+                continue
+            mesh_axes = self._axes_in_mesh(self.mapping.get(name, ()))
+            if any(a in used for a in mesh_axes):
+                self.dropped.add((name, dim, mesh_axes, "duplicate"))
+                mesh_axes = tuple(a for a in mesh_axes if a not in used)
+            if not mesh_axes:
+                parts.append(None)
+                continue
+            size = 1
+            if self.mesh is not None:
+                for a in mesh_axes:
+                    size *= self.mesh.shape[a]
+            if self.mesh is not None and dim % size != 0:
+                self.dropped.add((name, dim, mesh_axes))
+                parts.append(None)
+                continue
+            used.update(mesh_axes)
+            parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        return PartitionSpec(*parts)
+
+    def sharding_for(self, shape, axes) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec_for(shape, axes))
+
+
+_ctx = threading.local()
+
+
+def current() -> Optional[Rules]:
+    return getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules):
+    prev = getattr(_ctx, "rules", None)
+    _ctx.rules = rules
+    try:
+        yield rules
+    finally:
+        _ctx.rules = prev
+
+
+def make_rules(mesh: Optional[Mesh] = None,
+               overrides: Optional[dict[str, tuple[str, ...]]] = None) -> Rules:
+    mapping = dict(DEFAULT_RULES)
+    mapping.update(overrides or {})
+    return Rules(mapping=mapping, mesh=mesh)
+
+
+def constraint(x: jax.Array, axes: LogicalAxes) -> jax.Array:
+    """Annotate activation ``x`` with logical ``axes`` under the active rules.
+
+    No-op when no rules context is active (unit tests, single-device smoke).
+    """
+    rules = current()
+    if rules is None or rules.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding_for(x.shape, axes))

@@ -1,0 +1,173 @@
+"""Per-architecture smoke tests: reduced configs, one train step + one decode
+step on CPU, asserting output shapes and finiteness (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, applicable_shapes
+from repro.configs.registry import all_archs, get_config
+from repro.models import registry
+
+B, S = 2, 32
+
+
+def _batch(model, key):
+    cfg = model.cfg
+    if cfg.family == "audio":
+        return {
+            "frames": jax.random.normal(key, (B, S, cfg.d_model)),
+            "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+            "labels": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        }
+    if cfg.family == "vlm":
+        text = S - cfg.prefix_len
+        return {
+            "prefix_embeds": jax.random.normal(key, (B, cfg.prefix_len,
+                                                     cfg.d_model)),
+            "tokens": jax.random.randint(key, (B, text), 0, cfg.vocab),
+            "labels": jax.random.randint(key, (B, text), 0, cfg.vocab),
+        }
+    return {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab),
+    }
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_train_step_smoke(arch):
+    model = registry.build_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(model, jax.random.PRNGKey(1))
+
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: model.train_loss(p, batch)))(params)
+    assert np.isfinite(float(loss)), f"{arch}: loss={loss}"
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)), f"{arch}: grad norm not finite"
+    assert float(gnorm) > 0, f"{arch}: zero gradients"
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_decode_step_smoke(arch):
+    model = registry.build_smoke(arch)
+    cfg = model.cfg
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(B, S)
+    tokens = jnp.zeros((B, 1), jnp.int32)
+    if cfg.family == "audio":
+        # populate cross K/V as prefill would (zeros suffice for smoke)
+        pass
+    logits, cache2 = jax.jit(model.decode_step)(params, cache, tokens,
+                                                jnp.int32(3))
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    # cache must be structurally unchanged
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_decode_matches_forward_tail(arch, monkeypatch):
+    """Greedy next-token logits from decode_step must match the sequence
+    forward pass at the same position (cache correctness).
+
+    Runs in fp32 compute: this test checks *logic* equivalence; bf16
+    accumulation-order noise between the chunked kernels and the stepwise
+    decode path is expected and not what is under test.
+    """
+    from repro.models import layers as Lmod
+    monkeypatch.setattr(Lmod, "COMPUTE_DTYPE", jnp.float32)
+    if arch == "whisper-base":
+        pytest.skip("enc-dec decode requires populated cross-KV (covered in "
+                    "test_runtime_serving)")
+    cfg = get_config(arch).smoke()
+    if cfg.moe:
+        # capacity dropping is a train-time approximation; decode never drops,
+        # so compare at a no-drop capacity factor
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    model = registry.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    T_ = 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, T_), 0, cfg.vocab)
+
+    # sequence forward logits
+    from repro.models import transformer, rwkv6, zamba2
+    if cfg.family in ("dense", "moe"):
+        seq_logits, _ = transformer.forward(params, cfg, toks)
+    elif cfg.family == "vlm":
+        pe = jnp.zeros((B, cfg.prefix_len, cfg.d_model))
+        seq_logits, _ = transformer.forward(params, cfg, toks, pe)
+        seq_logits = seq_logits[:, cfg.prefix_len:]
+    elif cfg.family == "ssm":
+        seq_logits, _ = rwkv6.forward(params, cfg, toks)
+    else:
+        seq_logits, _ = zamba2.forward(params, cfg, toks)
+
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode over prefix exercised separately")
+
+    # token-by-token decode
+    cache = model.init_cache(B, T_)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(T_):
+        lg, cache = step(params, toks[:, t:t + 1], cache, jnp.int32(t)) \
+            if False else step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits, np.float32),
+                               np.asarray(seq_logits, np.float32),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_applicable_shapes_cells():
+    """40-cell bookkeeping: every arch × shape is either runnable or a
+    documented skip; long_500k only runs for sub-quadratic archs."""
+    cells = 0
+    runs = 0
+    for arch in all_archs():
+        cfg = get_config(arch)
+        app = applicable_shapes(cfg)
+        assert set(app) == set(SHAPES)
+        cells += len(app)
+        runs += sum(1 for ok, _ in app.values() if ok)
+        if cfg.family in ("ssm", "hybrid"):
+            assert app["long_500k"][0]
+        else:
+            assert not app["long_500k"][0] and app["long_500k"][1]
+    assert cells == 40
+    assert runs == 32
+
+
+def test_full_configs_exact():
+    """Exact published dims (assignment block)."""
+    c = get_config("yi-34b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (60, 7168, 56, 8, 20480, 64000)
+    c = get_config("command-r-plus-104b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (64, 12288, 96, 8, 33792, 256000)
+    c = get_config("phi3-mini-3.8b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (32, 3072, 32, 32, 8192, 32064)
+    c = get_config("qwen2-1.5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (28, 1536, 12, 2, 8960, 151936)
+    assert c.qkv_bias
+    c = get_config("rwkv6-3b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (32, 2560, 8960, 65536)
+    c = get_config("olmoe-1b-7b")
+    assert (c.moe.num_experts, c.moe.top_k) == (64, 8)
+    c = get_config("qwen2-moe-a2.7b")
+    assert (c.moe.num_experts, c.moe.top_k, c.moe.num_shared) == (60, 4, 4)
+    c = get_config("paligemma-3b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (18, 2048, 8, 1, 16384, 257216)
+    c = get_config("zamba2-7b")
+    assert (c.n_layers, c.d_model, c.ssm.d_state) == (81, 3584, 64)
+    c = get_config("whisper-base")
+    assert (c.n_layers, c.enc_layers, c.d_model, c.vocab) == (6, 6, 512, 51865)

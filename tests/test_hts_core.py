@@ -1,0 +1,196 @@
+"""HTS core: ISA round-trip, assembler, golden-vs-machine equivalence
+(including hypothesis-generated random programs), scheduler cost-model
+invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hts import assembler, costs, golden, isa, machine, programs
+
+PARAMS = golden.HtsParams(n_fu=(2,) * 10)
+N_FU = np.array([2] * 10)
+
+
+# ---------------------------------------------------------------------------
+# ISA
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 0xEF), st.integers(0, 0xFFFF), st.integers(0, 0xFF),
+       st.integers(0, 0xFFFF), st.integers(0, 0xFF), st.integers(0, 0xF),
+       st.integers(0, 0xF), st.integers(0, 0xF))
+def test_isa_roundtrip_task(acc, a, asz, b, bsz, tid, pid, ctl):
+    ins = isa.Instr(op=isa.OP_TASK, acc=acc, a=a, asz=asz, b=b, bsz=bsz,
+                    tid=tid, pid=pid, ctl=ctl)
+    got = isa.decode_word(ins.encode())
+    assert got == ins
+
+
+@given(st.sampled_from([isa.OP_ADD, isa.OP_MUL, isa.OP_MOV, isa.OP_JUMP,
+                        isa.OP_IF, isa.OP_LBEG, isa.OP_LEND]),
+       st.integers(0, 0xFFFF), st.integers(0, 0xFF), st.integers(0, 0xFFFF))
+def test_isa_roundtrip_ctrl(op, a, asz, b):
+    ins = isa.Instr(op=op, a=a, asz=asz, b=b)
+    assert isa.decode_word(ins.encode()) == ins
+
+
+def test_assembler_matches_paper_example():
+    """The §V-B independent-nodes example assembles and disassembles."""
+    text = """\
+real_fir 10 2 13 2 0 0 0 0000
+complex_fir 16 2 19 2 1 0 0 0000
+adaptive_fir 23 3 28 3 2 0 0 0000
+vector_dot 40 4 48 4 3 0 0 0000
+iir 32 3 36 3 4 0 0 0000"""
+    code = assembler.assemble(text)
+    assert code.shape == (5, 4)
+    back = assembler.disassemble(code)
+    assert back.splitlines()[0].startswith("real_fir 10 2 13 2")
+    ins = isa.decode_program(code)
+    assert ins[3].acc == costs.FUNC_IDS["vector_dot"]
+    assert ins[3].a == 0x40 and ins[3].b == 0x48
+
+
+def test_assembler_labels_and_errors():
+    code = assembler.assemble("jump @end 0 0 0\n@end\nnop")
+    assert isa.decode_program(code)[0].a == 1
+    with pytest.raises(assembler.AsmError):
+        assembler.assemble("bogus_acc 0 0 0 0")
+    with pytest.raises(assembler.AsmError):
+        assembler.assemble("jump @missing")
+
+
+# ---------------------------------------------------------------------------
+# scheduler cost-model invariants over all benchmarks
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def bench_cycles():
+    out = {}
+    for bench in programs.all_benches():
+        code = assembler.assemble(bench.asm)
+        out[bench.name] = {
+            s: golden.run(code, costs.costs_by_name(s), PARAMS,
+                          bench.mem_init, bench.effects)
+            for s in costs.ALL_SCHEDULERS
+        }
+    return out
+
+
+def test_hts_never_slower_than_naive(bench_cycles):
+    for name, rs in bench_cycles.items():
+        assert rs["hts_nospec"].cycles <= rs["naive"].cycles, name
+        assert rs["hts_spec"].cycles <= rs["naive"].cycles, name
+
+
+def test_naive_matches_closed_form(bench_cycles):
+    """Naive = Σ(exec + interrupt) + per-task dispatch cycle (paper §VI-C)."""
+    r = bench_cycles["no_dependency"]["naive"]
+    total_exec = sum(costs.FUNC_CYCLES[t.func] for t in r.tasks)
+    n = len(r.tasks)
+    expect = total_exec + n * (costs.INTERRUPT_LATENCY + 2) + 1
+    assert abs(r.cycles - expect) <= n          # ±1 cycle/task bookkeeping
+
+
+def test_speculation_only_helps_or_is_free(bench_cycles):
+    for name, rs in bench_cycles.items():
+        # mis-speculation must be ~free (paper Fig 8 observation)
+        assert rs["hts_spec"].cycles <= rs["hts_nospec"].cycles + 5, name
+
+
+def test_correct_speculation_wins(bench_cycles):
+    rs = bench_cycles["branch_not_taken_no_dep"]
+    assert rs["hts_spec"].cycles < rs["hts_nospec"].cycles
+
+
+def test_spec_aborts_only_on_taken_branches(bench_cycles):
+    assert bench_cycles["branch_taken_no_dep"]["hts_spec"].spec_aborted > 0
+    assert bench_cycles["branch_not_taken_no_dep"]["hts_spec"].spec_aborted == 0
+
+
+# ---------------------------------------------------------------------------
+# golden ≡ machine (fixed corpus, both event-skip modes)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("bench_idx", range(len(programs.ALL_SYNTHETIC)))
+@pytest.mark.parametrize("sched", ["naive", "hts_spec"])
+def test_machine_equals_golden(bench_idx, sched):
+    bench = programs.ALL_SYNTHETIC[bench_idx]()
+    code = assembler.assemble(bench.asm)
+    cm = costs.costs_by_name(sched)
+    g = golden.run(code, cm, PARAMS, bench.mem_init, bench.effects)
+    m = machine.simulate(code, cm, PARAMS, n_fu=N_FU,
+                         mem_init=bench.mem_init, effects=bench.effects)
+    assert m["halted"] and int(m["cycles"]) == g.cycles
+    assert machine.schedule_tuple(m) == g.schedule_tuple()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random straight-line task programs
+# ---------------------------------------------------------------------------
+@st.composite
+def random_program(draw):
+    n = draw(st.integers(2, 14))
+    lines = []
+    for i in range(n):
+        func = draw(st.sampled_from(list(costs.FUNC_IDS)))
+        if i and draw(st.booleans()):
+            src = 0x100 + draw(st.integers(0, i - 1)) * 8       # RAW dep
+        else:
+            src = 0x10
+        dst = 0x100 + i * 8
+        # occasional WAW: write an earlier task's region
+        if i and draw(st.integers(0, 4)) == 0:
+            dst = 0x100 + draw(st.integers(0, i - 1)) * 8
+        lines.append(f"{func} {src:x} 4 {dst:x} 4 {i & 0xF:x} 0 0 0")
+    return "\n".join(lines)
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_program(),
+       st.sampled_from(["naive", "software", "hts_spec"]),
+       st.sampled_from([1, 3]))
+def test_machine_equals_golden_random(asm, sched, n_fu):
+    code = assembler.assemble(asm)
+    cm = costs.costs_by_name(sched)
+    p = golden.HtsParams(n_fu=(n_fu,) * 10)
+    g = golden.run(code, cm, p, None, None)
+    m = machine.simulate(code, cm, p, n_fu=np.array([n_fu] * 10))
+    assert m["halted"]
+    assert int(m["cycles"]) == g.cycles
+    assert machine.schedule_tuple(m) == g.schedule_tuple()
+
+
+@settings(max_examples=10, deadline=None)
+@given(random_program())
+def test_event_skip_is_exact(asm):
+    """Event-skip mode must produce bit-identical schedules."""
+    code = assembler.assemble(asm)
+    cm = costs.costs_by_name("hts_spec")
+    a = machine.simulate(code, cm, PARAMS, n_fu=N_FU, event_skip=True)
+    b = machine.simulate(code, cm, PARAMS, n_fu=N_FU, event_skip=False)
+    assert machine.schedule_tuple(a) == machine.schedule_tuple(b)
+    assert int(a["cycles"]) == int(b["cycles"])
+
+
+# ---------------------------------------------------------------------------
+# vmap over FU configurations (Fig-10 machinery)
+# ---------------------------------------------------------------------------
+def test_vmap_over_fu_configs():
+    import jax
+    import jax.numpy as jnp
+    bench = programs.no_dependency(12)
+    code = assembler.assemble(bench.asm)
+    ftab, p_len = machine.pack_program(code, 64)
+    mem, eff = machine.images(PARAMS, bench.mem_init, bench.effects)
+    ms = machine.MachineSpec(params=PARAMS,
+                             costs=costs.costs_by_name("hts_spec"))
+    run = jax.jit(jax.vmap(machine.make_machine(ms, 64),
+                           in_axes=(None, None, 0, None, None)))
+    n_fus = jnp.asarray([[1] * 10, [2] * 10, [4] * 10], jnp.int32)
+    out = run(jnp.asarray(ftab), p_len, n_fus, jnp.asarray(mem),
+              jnp.asarray(eff))
+    cycles = np.asarray(out["cycles"])
+    assert (cycles[0] >= cycles[1]).all() and cycles[1] >= cycles[2]
+    # each vmapped row equals its standalone simulation
+    for i, k in enumerate((1, 2, 4)):
+        solo = machine.simulate(code, costs.costs_by_name("hts_spec"),
+                                PARAMS, n_fu=np.array([k] * 10),
+                                max_prog=64)
+        assert int(solo["cycles"]) == int(cycles[i])

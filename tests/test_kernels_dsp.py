@@ -1,0 +1,92 @@
+"""Per-kernel allclose sweeps: DSP Pallas kernels vs ref.py oracles."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def r(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(dtype))
+
+
+BATCHES = [1, 7, 256, 300]
+
+
+@pytest.mark.parametrize("b", BATCHES)
+@pytest.mark.parametrize("n,k", [(40, 8), (64, 16), (128, 5)])
+def test_real_fir(b, n, k):
+    x, h = r(b, n), r(k)
+    np.testing.assert_allclose(ops.real_fir(x, h), ref.real_fir(x, h),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b", [1, 64])
+@pytest.mark.parametrize("n,k", [(40, 8), (96, 12)])
+def test_complex_fir(b, n, k):
+    x, h = r(b, n, 2), r(k, 2)
+    np.testing.assert_allclose(ops.complex_fir(x, h), ref.complex_fir(x, h),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b", [1, 32])
+@pytest.mark.parametrize("n,k", [(40, 8), (64, 4)])
+def test_adaptive_fir(b, n, k):
+    x, d = r(b, n), r(b, n)
+    got = ops.adaptive_fir(x, d, 0.01, k)
+    want = ref.adaptive_fir(x, d, 0.01, k)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b", [1, 33])
+@pytest.mark.parametrize("n", [40, 80])
+def test_iir(b, n):
+    x = r(b, n)
+    bc = jnp.asarray([0.2, 0.3, 0.1], jnp.float32)
+    ac = jnp.asarray([1.0, -0.4, 0.05], jnp.float32)
+    np.testing.assert_allclose(ops.iir(x, bc, ac), ref.iir(x, bc, ac),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b", BATCHES)
+@pytest.mark.parametrize("n", [40, 128])
+def test_vector_ops(b, n):
+    x, y = r(b, n), r(b, n)
+    np.testing.assert_allclose(ops.vector_dot(x, y), ref.vector_dot(x, y),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ops.vector_add(x, y), ref.vector_add(x, y))
+    np.testing.assert_allclose(ops.vector_max(x), ref.vector_max(x))
+
+
+@pytest.mark.parametrize("b", [1, 17])
+@pytest.mark.parametrize("lag", [4, 10])
+def test_correlation(b, lag):
+    x, y = r(b, 40), r(b, 40)
+    np.testing.assert_allclose(ops.correlation(x, y, lag),
+                               ref.correlation(x, y, lag),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b", [1, 9, 128])
+def test_fft_256(b):
+    x = r(b, 256, 2)
+    np.testing.assert_allclose(ops.fft_256(x), ref.fft_256(x),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("b", [1, 65])
+@pytest.mark.parametrize("n", [64, 128])
+def test_dct(b, n):
+    x = r(b, n)
+    np.testing.assert_allclose(ops.dct(x), ref.dct(x), rtol=1e-4, atol=1e-4)
+
+
+def test_fft_matches_numpy():
+    x = r(4, 256, 2)
+    z = np.asarray(x[..., 0]) + 1j * np.asarray(x[..., 1])
+    want = np.fft.fft(z, axis=-1)
+    got = np.asarray(ops.fft_256(x))
+    np.testing.assert_allclose(got[..., 0], want.real, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(got[..., 1], want.imag, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,81 @@
+"""Per-kernel allclose sweeps: transformer Pallas kernels vs ref.py oracles."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(1)
+
+
+def r(*shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((RNG.standard_normal(shape) * scale).astype(dtype))
+
+
+@pytest.mark.parametrize("rows,d", [(1, 128), (300, 256), (8, 512)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_rmsnorm(rows, d, dtype):
+    x, w = r(rows, d, dtype=dtype), r(d, dtype=dtype)
+    tol = 1e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(ops.rmsnorm(x, w), ref.rmsnorm(x, w),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("b,hq,hkv,t,d", [
+    (1, 4, 4, 128, 64),
+    (2, 8, 2, 256, 64),       # GQA
+    (1, 2, 1, 384, 128),      # MQA, non-multiple of block
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(b, hq, hkv, t, d, causal):
+    q = r(b, hq, t, d, scale=0.3)
+    k = r(b, hkv, t, d, scale=0.3)
+    v = r(b, hkv, t, d)
+    got = ops.flash_attention(q, k, v, causal=causal)
+    kr = jnp.repeat(k, hq // hkv, axis=1)
+    vr = jnp.repeat(v, hq // hkv, axis=1)
+    want = ref.flash_attention(q, kr, vr, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_q_offset_decode_chunk():
+    """Chunked decode: q is the last 64 positions against a 256-long cache."""
+    b, h, d = 2, 4, 64
+    q = r(b, h, 64, d, scale=0.3)
+    k = r(b, h, 256, d, scale=0.3)
+    v = r(b, h, 256, d)
+    got = ops.flash_attention(q, k, v, causal=True, q_offset=192)
+    want = ref.flash_attention(q, k, v, causal=True, q_offset=192)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("b,t,h,kdim,vdim", [
+    (1, 64, 2, 32, 32),
+    (2, 128, 4, 64, 64),
+    (1, 96, 1, 64, 128),      # T not a chunk multiple
+])
+def test_rwkv6(b, t, h, kdim, vdim):
+    rr = r(b, t, h, kdim, scale=0.5)
+    k = r(b, t, h, kdim, scale=0.5)
+    v = r(b, t, h, vdim, scale=0.5)
+    w = jnp.asarray(1.0 / (1.0 + np.exp(-RNG.standard_normal((b, t, h, kdim)))),
+                    jnp.float32) * 0.5 + 0.5      # decay in (0.5, 1)
+    u = r(h, kdim, scale=0.3)
+    got = ops.rwkv6_scan(rr, k, v, w, u)
+    want = ref.rwkv6_scan(rr, k, v, w, u)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("b,t,h,p,n", [
+    (1, 64, 2, 32, 16),
+    (2, 128, 4, 64, 64),
+    (1, 80, 3, 16, 32),       # odd sizes
+])
+def test_mamba2_ssd(b, t, h, p, n):
+    x = r(b, t, h, p, scale=0.5)
+    a = -jnp.abs(r(b, t, h, scale=0.5))           # decay exponent ≤ 0
+    bb = r(b, t, n, scale=0.5)
+    c = r(b, t, n, scale=0.5)
+    got = ops.mamba2_ssd(x, a, bb, c)
+    want = ref.mamba2_ssd(x, a, bb, c)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)

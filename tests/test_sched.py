@@ -1,0 +1,178 @@
+"""HTS-as-runtime tests: task-graph scheduling, pipeline schedules, serving,
+speculative decoding (TM-rollback analog)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.sched import pipeline, serving, specdecode, taskgraph
+from repro.models import registry
+
+
+# ---------------------------------------------------------------------------
+# taskgraph
+# ---------------------------------------------------------------------------
+def test_ooo_beats_inorder_on_independent_tasks():
+    tasks = [taskgraph.Task(i, "fu", 10.0) for i in range(8)]
+    ooo = taskgraph.schedule(tasks, {"fu": 4}, "ooo")
+    naive = taskgraph.schedule(tasks, {"fu": 4}, "inorder")
+    assert ooo.makespan == 20.0          # 8 tasks / 4 units × 10
+    assert naive.makespan == 80.0        # one at a time
+    assert naive.makespan / ooo.makespan == 4.0
+
+
+def test_dependency_chain_respected():
+    tasks = [taskgraph.Task(0, "a", 5.0),
+             taskgraph.Task(1, "b", 3.0, deps=(0,)),
+             taskgraph.Task(2, "a", 2.0)]
+    s = taskgraph.schedule(tasks, {"a": 1, "b": 1}, "ooo")
+    by = {p.uid: p for p in s.placements}
+    assert by[1].start >= by[0].end      # RAW respected
+    assert by[2].start == by[0].end      # OoO: unit reused immediately
+    assert s.makespan == 8.0
+
+
+def test_deadlock_detection():
+    tasks = [taskgraph.Task(0, "a", 1.0, deps=(1,)),
+             taskgraph.Task(1, "a", 1.0, deps=(0,))]
+    with pytest.raises(ValueError, match="deadlock"):
+        taskgraph.schedule(tasks, {"a": 1})
+
+
+# ---------------------------------------------------------------------------
+# pipeline schedules
+# ---------------------------------------------------------------------------
+def test_pipeline_schedule_is_dense_wavefront():
+    n_micro, n_stages = 8, 4
+    s = pipeline.pipeline_schedule(n_micro, n_stages, "ooo")
+    assert s.makespan == n_micro + n_stages - 1       # perfect fill
+    naive = pipeline.pipeline_schedule(n_micro, n_stages, "inorder")
+    assert naive.makespan == n_micro * n_stages       # full serialization
+    assert pipeline.bubble_ratio(s, n_stages) < pipeline.bubble_ratio(
+        naive, n_stages)
+
+
+def test_pipeline_schedule_matches_wavefront_issue_order():
+    """HTS-OoO must place task (m, s) at start time m + s (the wavefront
+    executed by run_pipeline)."""
+    s = pipeline.pipeline_schedule(6, 3, "ooo")
+    for p in s.placements:
+        _, m, stage = p.tag
+        assert p.start == m + stage
+
+
+def test_run_pipeline_matches_sequential():
+    devs = jax.devices()
+    if len(devs) < 2:
+        pytest.skip("needs >1 device (covered by test_multidevice.py "
+                    "subprocess run)")
+
+
+def test_pipeline_backward_schedule_valid():
+    s = pipeline.pipeline_schedule(4, 3, "ooo", backward=True)
+    by = {p.tag: p for p in s.placements}
+    for m in range(4):
+        for st in range(3):
+            assert by[("B", m, st)].start >= by[("F", m, st)].end
+            if st < 2:
+                assert by[("B", m, st)].start >= by[("B", m, st + 1)].end
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+def _serve_model():
+    model = registry.build_smoke("qwen2-1.5b")
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_server_completes_all_requests():
+    model, params = _serve_model()
+    srv = serving.Server(model, params, n_slots=4, max_len=64)
+    rng = np.random.default_rng(0)
+    for r in range(10):
+        prompt = rng.integers(0, model.cfg.vocab, rng.integers(2, 6)).tolist()
+        srv.submit(serving.Request(r, prompt, max_new=5))
+    stats = srv.run()
+    assert stats.completed == 10
+    assert all(r is None for r in srv.slot_req)
+
+
+def test_continuous_beats_naive_batching():
+    """OoO slot admission (ASR-style) sustains higher utilization than
+    drain-everything naive batching — the paper's claim at serving level."""
+    rng = np.random.default_rng(1)
+    reqs = [(rng.integers(0, 100, 3).tolist(), int(rng.integers(2, 12)))
+            for _ in range(12)]
+
+    def run(policy):
+        model, params = _serve_model()
+        srv = serving.Server(model, params, n_slots=4, max_len=64,
+                             policy=policy)
+        for i, (p, m) in enumerate(reqs):
+            srv.submit(serving.Request(i, list(p), m))
+        return srv.run()
+
+    ooo = run("ooo")
+    naive = run("naive")
+    assert ooo.completed == naive.completed == 12
+    assert ooo.steps < naive.steps
+    assert ooo.utilization(4) > naive.utilization(4)
+
+
+def test_server_output_matches_unbatched_decode():
+    """A slot's output must equal standalone greedy decoding even when lanes
+    are at different depths (per-lane positions make continuous batching
+    exact)."""
+    model, params = _serve_model()
+    prompt = [5, 17, 42]
+    want = specdecode.greedy_decode(model, params,
+                                    np.asarray([prompt]), 6, 64)[0]
+    srv = serving.Server(model, params, n_slots=3, max_len=64)
+    # stagger with another request so lanes sit at different positions
+    srv.submit(serving.Request(0, [9, 3], 3))
+    srv.step()
+    r1 = serving.Request(1, prompt, 6)
+    srv.submit(r1)
+    srv.run()
+    np.testing.assert_array_equal(np.asarray(r1.out), want)
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding
+# ---------------------------------------------------------------------------
+def test_speculative_equals_greedy():
+    """Spec-decode output must equal plain greedy decoding of the target —
+    speculation changes the schedule, never the result (paper §IV-C3:
+    functional correctness of the TM mechanism)."""
+    target = registry.build_smoke("qwen2-1.5b")
+    t_params = target.init(jax.random.PRNGKey(0))
+    # draft = same weights, fewer layers (self-speculation style)
+    draft = registry.build_smoke("qwen2-1.5b")
+    d_params = jax.tree.map(lambda x: x, t_params)
+    d_params["layers"] = jax.tree.map(lambda x: x[:1], t_params["layers"])
+    import dataclasses
+    d_cfg = dataclasses.replace(draft.cfg, n_layers=1)
+    draft = registry.build(d_cfg)
+
+    prompt = np.asarray([[3, 1, 4, 1, 5]])
+    n_new = 12
+    want = specdecode.greedy_decode(target, t_params, prompt, n_new, 64)
+    got, stats = specdecode.speculative_decode(
+        target, t_params, draft, d_params, prompt, n_new, k=4, max_len=64)
+    np.testing.assert_array_equal(got, want)
+    assert stats.chunks > 0
+    assert 0.0 <= stats.acceptance <= 1.0
+
+
+def test_speculative_perfect_draft_accepts_all():
+    """Draft == target ⇒ every proposal accepted (correct-speculation path)."""
+    target = registry.build_smoke("qwen2-1.5b")
+    t_params = target.init(jax.random.PRNGKey(0))
+    prompt = np.asarray([[7, 7, 7]])
+    want = specdecode.greedy_decode(target, t_params, prompt, 8, 64)
+    got, stats = specdecode.speculative_decode(
+        target, t_params, target, t_params, prompt, 8, k=4, max_len=64)
+    np.testing.assert_array_equal(got, want)
+    assert stats.acceptance == 1.0
