@@ -1,27 +1,19 @@
 """Beyond-figure benchmark sections: multi-application accelerator sharing
 (the paper's abstract motivation) and HTS design-parameter ablations (the
-paper names dispatch width / window size as design-time parameters)."""
+paper names dispatch width / window size as design-time parameters).
+
+All simulation goes through the ``hts.run`` facade — no per-file ``_sim``
+wrapper, and non-halting runs raise ``hts.SimulationError`` naming the
+offending program/scheduler instead of a bare assert.
+"""
 from __future__ import annotations
 
 import dataclasses
-import time
 
-import numpy as np
+from repro.core import hts
+from repro.core.hts import costs, multiapp
 
-from repro.core.hts import assembler, costs, machine, multiapp
-from repro.core.hts.golden import HtsParams
-
-PARAMS = HtsParams(mem_words=4096, tracker_entries=128)
-
-
-def _cycles(bench, sched="hts_spec", n_fu=2, cost_obj=None, params=None):
-    code = assembler.assemble(bench.asm)
-    t0 = time.perf_counter()
-    out = machine.simulate(code, cost_obj or costs.costs_by_name(sched),
-                           params or PARAMS, n_fu=np.array([n_fu] * 10),
-                           mem_init=bench.mem_init, effects=bench.effects)
-    assert out["halted"], bench.name
-    return int(out["cycles"]), (time.perf_counter() - t0) * 1e6
+PARAMS = hts.HtsParams(mem_words=4096, tracker_entries=128)
 
 
 def multi_app_sharing(bands: int = 2, tiles: int = 40):
@@ -35,14 +27,15 @@ def multi_app_sharing(bands: int = 2, tiles: int = 40):
     image = multiapp.image_compression(tiles)
     shared = multiapp.interleave(audio, image)
     for n_fu in (1, 2, 4):
-        ca, _ = _cycles(audio, n_fu=n_fu)
-        ci, _ = _cycles(image, n_fu=n_fu)
-        cs, us = _cycles(shared, n_fu=n_fu)
-        rows.append((f"multiapp/shared_vs_serial/fu{n_fu}", us, {
+        ca = hts.run(audio, n_fu=n_fu, params=PARAMS).cycles
+        ci = hts.run(image, n_fu=n_fu, params=PARAMS).cycles
+        rs = hts.run(shared, n_fu=n_fu, params=PARAMS)
+        rows.append((f"multiapp/shared_vs_serial/fu{n_fu}", rs.wall_us, {
             "audio_cycles": ca, "image_cycles": ci,
-            "serial_cycles": ca + ci, "shared_cycles": cs,
-            "sharing_gain": (ca + ci) / cs,
+            "serial_cycles": ca + ci, "shared_cycles": rs.cycles,
+            "sharing_gain": (ca + ci) / rs.cycles,
             "ideal_max": max(ca, ci),
+            "utilization": rs.utilization,
         }))
     return rows
 
@@ -55,19 +48,23 @@ def design_ablation(bands: int = 8):
     base = costs.hts_costs(True)
     for issue_w in (1, 2, 4, 8):
         c = dataclasses.replace(base, issue_width=issue_w)
-        cyc, us = _cycles(bench, cost_obj=c, n_fu=4)
-        rows.append((f"ablation/issue_width{issue_w}", us, {"cycles": cyc}))
+        r = hts.run(bench, scheduler=c, n_fu=4, params=PARAMS)
+        rows.append((f"ablation/issue_width{issue_w}", r.wall_us,
+                     {"cycles": r.cycles}))
     for cdb_w in (1, 2, 4):
         c = dataclasses.replace(base, cdb_width=cdb_w)
-        cyc, us = _cycles(bench, cost_obj=c, n_fu=4)
-        rows.append((f"ablation/cdb_width{cdb_w}", us, {"cycles": cyc}))
+        r = hts.run(bench, scheduler=c, n_fu=4, params=PARAMS)
+        rows.append((f"ablation/cdb_width{cdb_w}", r.wall_us,
+                     {"cycles": r.cycles}))
     for rs in (4, 8, 16, 64):
         p = dataclasses.replace(PARAMS, rs_entries=rs)
-        cyc, us = _cycles(bench, n_fu=4, params=p)
-        rows.append((f"ablation/rs_entries{rs}", us, {"cycles": cyc}))
+        r = hts.run(bench, n_fu=4, params=p)
+        rows.append((f"ablation/rs_entries{rs}", r.wall_us,
+                     {"cycles": r.cycles}))
     for tlb in (2, 4, 16):
         p = dataclasses.replace(PARAMS, tlb_entries=tlb,
                                 tm_slots=max(tlb, 2))
-        cyc, us = _cycles(bench, n_fu=4, params=p)
-        rows.append((f"ablation/tlb_entries{tlb}", us, {"cycles": cyc}))
+        r = hts.run(bench, n_fu=4, params=p)
+        rows.append((f"ablation/tlb_entries{tlb}", r.wall_us,
+                     {"cycles": r.cycles}))
     return rows

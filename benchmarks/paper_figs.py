@@ -1,33 +1,18 @@
 """Reproductions of the paper's evaluation (Figs 7-10, Table II).
 
-All cycle numbers come from the compiled JAX machine (event-skip mode,
-schedule-equivalence-tested against the golden simulator).  Each function
-returns rows of (name, us_per_call, derived) for benchmarks/run.py.
+All cycle numbers come through the unified ``hts.run`` / ``hts.sweep``
+facade (compiled JAX machine, event-skip mode, schedule-equivalence-tested
+against the golden simulator).  Each function returns rows of
+(name, us_per_call, derived) for benchmarks/run.py.
 """
 from __future__ import annotations
 
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.hts import assembler, costs, machine, programs
-from repro.core.hts.golden import HtsParams
+from repro.core import hts
+from repro.core.hts import costs, programs
 
 SCHEDULERS = costs.ALL_SCHEDULERS
-
-
-def _sim(bench, sched: str, n_fu: int, params=None):
-    params = params or HtsParams()
-    code = assembler.assemble(bench.asm)
-    t0 = time.perf_counter()
-    out = machine.simulate(code, costs.costs_by_name(sched), params,
-                           n_fu=np.array([n_fu] * 10),
-                           mem_init=bench.mem_init, effects=bench.effects)
-    dt = (time.perf_counter() - t0) * 1e6
-    assert out["halted"], (bench.name, sched)
-    return int(out["cycles"]), dt, out
 
 
 def fig7(n_fu_list=(1, 2, 4)):
@@ -38,10 +23,12 @@ def fig7(n_fu_list=(1, 2, 4)):
         for n_fu in n_fu_list:
             base = None
             for sched in SCHEDULERS:
-                cyc, us, _ = _sim(bench, sched, n_fu)
-                base = base or cyc                 # naive first
-                rows.append((f"fig7/{bench.name}/{sched}/fu{n_fu}", us,
-                             {"cycles": cyc, "speedup_vs_naive": base / cyc}))
+                r = hts.run(bench, scheduler=sched, n_fu=n_fu)
+                if base is None:                   # naive first
+                    base = r.cycles
+                rows.append((f"fig7/{bench.name}/{sched}/fu{n_fu}", r.wall_us,
+                             {"cycles": r.cycles,
+                              "speedup_vs_naive": base / r.cycles}))
     return rows
 
 
@@ -52,11 +39,13 @@ def fig8(n_fu: int = 2):
         bench = gen()
         base = None
         for sched in SCHEDULERS:
-            cyc, us, out = _sim(bench, sched, n_fu)
-            base = base or cyc
-            rows.append((f"fig8/{bench.name}/{sched}/fu{n_fu}", us,
-                         {"cycles": cyc, "speedup_vs_naive": base / cyc,
-                          "spec_aborted": int(out["spec_aborted"])}))
+            r = hts.run(bench, scheduler=sched, n_fu=n_fu)
+            if base is None:
+                base = r.cycles
+            rows.append((f"fig8/{bench.name}/{sched}/fu{n_fu}", r.wall_us,
+                         {"cycles": r.cycles,
+                          "speedup_vs_naive": base / r.cycles,
+                          "spec_aborted": r.spec_aborted}))
     return rows
 
 
@@ -67,62 +56,37 @@ def fig9(bands: int = 8, n_fu: int = 2):
         bench = programs.audio_compression(bands, time_domain)
         base = None
         for sched in SCHEDULERS:
-            cyc, us, _ = _sim(bench, sched, n_fu)
-            base = base or cyc
-            rows.append((f"fig9/{bench.name}/{sched}", us,
-                         {"cycles": cyc, "speedup_vs_naive": base / cyc}))
+            r = hts.run(bench, scheduler=sched, n_fu=n_fu)
+            if base is None:
+                base = r.cycles
+            rows.append((f"fig9/{bench.name}/{sched}", r.wall_us,
+                         {"cycles": r.cycles,
+                          "speedup_vs_naive": base / r.cycles}))
     return rows
 
 
-import functools
-
-
-@functools.lru_cache(maxsize=8)
-def _vmapped_runner(sched: str, max_prog: int, params: HtsParams):
-    """One compiled vmapped machine per scheduler — the program, FU configs
-    and memory images are all runtime arguments, so every (bands × FU) point
-    reuses it."""
-    ms = machine.MachineSpec(params=params, costs=costs.costs_by_name(sched),
-                             event_skip=True, max_cycles=50_000_000)
-    return jax.jit(jax.vmap(machine.make_machine(ms, max_prog),
-                            in_axes=(None, None, 0, None, None)))
-
-
 def fig10(bands_list=(8, 16, 32), n_fu_list=(1, 2, 4, 8, 16)):
-    """Strong scaling with FU count × number of bands — executed as ONE
-    vmapped machine per scheduler: the FU axis is vmapped, the program
-    (bands) is a runtime input."""
+    """Strong scaling with FU count × number of bands — one ``hts.sweep``
+    (a single vmapped machine per scheduler) per program size."""
     rows = []
     max_speedup = 0.0
-    # the looped program is ~42 instructions; right-size the machine state so
+    # the looped program is ~45 instructions; right-size the machine state so
     # the vmapped compile stays cheap (max 32 bands × 5 tasks + 1 = 161 tasks).
     # tracker = 256 so high-FU configs never crawl on structural stalls.
-    params = HtsParams(max_tasks=256, mem_words=2048, tracker_entries=256,
-                       rs_entries=64)
+    params = hts.HtsParams(max_tasks=256, mem_words=2048, tracker_entries=256,
+                           rs_entries=64)
     for bands in bands_list:
         bench = programs.audio_compression(bands, time_domain=False)
-        code = assembler.assemble(bench.asm)
-        ftab, p_len = machine.pack_program(code, 64)
-        mem, eff = machine.images(params, bench.mem_init, bench.effects)
-        n_fu_arr = jnp.asarray([[k] * 10 for k in n_fu_list], jnp.int32)
-
-        results = {}
-        for sched in ("naive", "hts_spec"):
-            run = _vmapped_runner(sched, 64, params)
-            t0 = time.perf_counter()
-            out = run(jnp.asarray(ftab), p_len, n_fu_arr,
-                      jnp.asarray(mem), jnp.asarray(eff))
-            cycles = np.asarray(out["cycles"])
-            dt = (time.perf_counter() - t0) * 1e6 / len(n_fu_list)
-            assert np.asarray(out["halted"]).all()
-            results[sched] = (cycles, dt)
+        sw = hts.sweep(bench, n_fu=n_fu_list,
+                       schedulers=("naive", "hts_spec"), params=params,
+                       max_prog=64)
         for i, k in enumerate(n_fu_list):
-            naive_c = int(results["naive"][0][i])
-            hts_c = int(results["hts_spec"][0][i])
+            naive_c = int(sw.cycles["naive"][i])
+            hts_c = int(sw.cycles["hts_spec"][i])
             sp = naive_c / hts_c
             max_speedup = max(max_speedup, sp)
             rows.append((f"fig10/audio_bands{bands}/fu{k}",
-                         results["hts_spec"][1],
+                         sw.wall_us["hts_spec"] / len(n_fu_list),
                          {"hts_cycles": hts_c, "naive_cycles": naive_c,
                           "speedup": sp}))
     rows.append(("fig10/max_speedup_vs_naive", 0.0,
@@ -134,6 +98,9 @@ def fig10(bands_list=(8, 16, 32), n_fu_list=(1, 2, 4, 8, 16)):
 def table2():
     """Table II: execute each DSP accelerator function as its Pallas kernel
     and report wall time; 'derived' carries the paper's cycle cost."""
+    import jax.numpy as jnp
+    import numpy as np
+
     from repro.kernels import ops
     rows = []
     table = ops.dsp_dispatch_table()

@@ -9,11 +9,8 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 
-sys.path.insert(0, "src")
-
-from benchmarks import extensions, paper_figs  # noqa: E402
+from benchmarks import extensions, paper_figs
 
 SECTIONS = {
     "tableII": paper_figs.table2,
@@ -32,6 +29,10 @@ def main() -> None:
                     help="comma-separated section names")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(SECTIONS))
+    unknown = [n for n in names if n not in SECTIONS]
+    if unknown:
+        raise SystemExit(f"unknown section(s) {unknown}; "
+                         f"choose from {list(SECTIONS)}")
 
     print("name,us_per_call,derived")
     for name in names:

@@ -1,23 +1,22 @@
 """End-to-end DSP pipeline: the HTS schedule *actually executes* the Pallas
 TPU kernels.
 
-The audio-compression program (paper Algorithm 1) is assembled, scheduled by
-the cycle-accurate HTS machine, and then each scheduled task runs its real
-accelerator kernel (kernels/dsp_*.py) over a batch of audio frames, in issue
-order.  This is the full loop: ISA → OoO schedule → Function accelerators.
+The audio-compression program (paper Algorithm 1) is built with the Program
+Builder, scheduled by the cycle-accurate HTS machine via ``hts.run``, and
+then each scheduled task runs its real accelerator kernel (kernels/dsp_*.py)
+over a batch of audio frames, in issue order.  This is the full loop:
+builder → ISA → OoO schedule → Function accelerators.
 
     PYTHONPATH=src python examples/dsp_pipeline.py --bands 4
 """
 import argparse
-import sys
 
-sys.path.insert(0, "src")
+import jax.numpy as jnp
+import numpy as np
 
-import numpy as np                                        # noqa: E402
-import jax.numpy as jnp                                   # noqa: E402
-
-from repro.core.hts import assembler, costs, machine, programs  # noqa: E402
-from repro.kernels import ops                             # noqa: E402
+from repro.core import hts
+from repro.core.hts import programs
+from repro.kernels import ops
 
 
 def main():
@@ -27,26 +26,22 @@ def main():
     args = ap.parse_args()
 
     bench = programs.audio_compression(args.bands, time_domain=False)
-    code = assembler.assemble(bench.asm)
-    out = machine.simulate(code, costs.costs_by_name("hts_spec"),
-                           n_fu=np.array([2] * 10),
-                           mem_init=bench.mem_init, effects=bench.effects)
-    sched = machine.schedule_tuple(out)
-    print(f"scheduled {len(sched)} tasks in {int(out['cycles'])} cycles "
-          f"(aborted speculative: {int(out['spec_aborted'])})")
+    r = hts.run(bench, scheduler="hts_spec", n_fu=2)
+    print(f"scheduled {r.n_tasks} tasks in {r.cycles} cycles "
+          f"(aborted speculative: {r.spec_aborted}, "
+          f"utilization {r.utilization:.1%})")
 
     # execute the schedule: every completed task runs its Pallas kernel
     table = ops.dsp_dispatch_table()
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.standard_normal((args.frames, 256), np.float32))
-    issued = [row for row in sched if not row[6]]          # drop aborted
-    issued.sort(key=lambda r: r[3])                        # issue order
-    for uid, func, _, issue, complete, _, _ in issued:
-        name = costs.FUNC_NAMES[func]
-        x = table[name](x)
+    issued = sorted((t for t in r.schedule if not t.aborted),
+                    key=lambda t: t.issue)
+    for t in issued:
+        x = table[t.func_name](x)
         # renormalize between stages: raw filter chains amplify unboundedly
         x = x / jnp.maximum(jnp.max(jnp.abs(x)), 1e-6)
-        print(f"  t={issue:>7}: task {uid:>3} {name:<13} -> "
+        print(f"  t={t.issue:>7}: task {t.uid:>3} {t.func_name:<13} -> "
               f"out[0,:3]={np.asarray(x[0, :3]).round(3)}")
     print("pipeline output stats: mean=%.4f std=%.4f"
           % (float(x.mean()), float(x.std())))

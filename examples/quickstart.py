@@ -1,45 +1,46 @@
-"""Quickstart: write an HTS dataflow program, schedule it 4 ways, compare.
+"""Quickstart: build an HTS dataflow program, schedule it 4 ways, compare.
 
     PYTHONPATH=src python examples/quickstart.py
+
+(or ``pip install -e .`` once and drop the PYTHONPATH.)
 """
-import sys
+from repro.core import hts
 
-sys.path.insert(0, "src")
 
-import numpy as np                                   # noqa: E402
+def build_program() -> hts.Program:
+    """A little dataflow graph (paper §V-B): an FFT feeding three
+    vector-dots feeding an IIR, next to an independent FIR chain."""
+    p = hts.Program("quickstart")
+    frame = p.input(0x10, 4, "frame")
+    fft = p.task("fft_256", in_=frame, out=4, tid=0)
+    dots = p.region(3, name="dots")          # the three dot results, contiguous
+    for i in range(3):
+        p.task("vector_dot", in_=fft, out=dots.sub(i, 1), tid=1 + i)
+    p.task("iir", in_=dots, out=3, tid=4)    # RAW-dependent on ALL three dots
+    fir = p.task("real_fir", in_=frame, out=4, tid=5)
+    p.task("real_fir", in_=fir, out=4, tid=6)
+    return p
 
-from repro.core.hts import assembler, costs, machine  # noqa: E402
-
-# A little dataflow graph in the paper's assembly (§V-B): an FFT feeding
-# three vector-dots feeding an IIR, next to an independent FIR chain.
-ASM = """
-# keyname  in  isz out osz tid pid ctl meta
-fft_256     10  4   20  4   0   0   0   0
-vector_dot  20  4   30  1   1   0   0   0
-vector_dot  20  4   31  1   2   0   0   0
-vector_dot  20  4   32  1   3   0   0   0
-iir         30  3   40  3   4   0   0   0
-real_fir    10  4   50  4   5   0   0   0
-real_fir    50  4   58  4   6   0   0   0
-"""
 
 def main():
-    code = assembler.assemble(ASM)
+    program = build_program()
+
     print(f"{'scheduler':<12} {'cycles':>10} {'speedup':>8}")
     base = None
-    for sched in costs.ALL_SCHEDULERS:
-        out = machine.simulate(code, costs.costs_by_name(sched),
-                               n_fu=np.array([2] * 10))
-        cyc = int(out["cycles"])
-        base = base or cyc
-        print(f"{sched:<12} {cyc:>10} {base / cyc:>8.2f}x")
-    print("\nper-task schedule (hts_spec):")
-    out = machine.simulate(code, costs.costs_by_name("hts_spec"),
-                           n_fu=np.array([2] * 10))
-    for uid, func, disp, issue, comp, bcast, aborted in \
-            machine.schedule_tuple(out):
-        print(f"  task {uid} ({costs.FUNC_NAMES[func]:<12}) dispatch={disp:>4}"
-              f" issue={issue:>4} complete={comp:>6} broadcast={bcast:>6}")
+    for sched in hts.ALL_SCHEDULERS:
+        r = hts.run(program, scheduler=sched, n_fu=2)
+        if base is None:
+            base = r
+        print(f"{sched:<12} {r.cycles:>10} {r.speedup_vs(base):>8.2f}x")
+
+    # the compiled JAX machine and the pure-Python golden oracle produce
+    # identical schedules — run both backends and check
+    jax_r = hts.run(program, scheduler="hts_spec", n_fu=2, backend="jax")
+    gold_r = hts.run(program, scheduler="hts_spec", n_fu=2, backend="golden")
+    assert jax_r.schedule == gold_r.schedule, "backends disagree!"
+    print(f"\nbackends agree: jax == golden "
+          f"({jax_r.cycles} cycles, {jax_r.n_tasks} tasks)\n")
+    print(jax_r.table())
 
 
 if __name__ == "__main__":

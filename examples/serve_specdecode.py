@@ -3,17 +3,14 @@ decoding with KV rollback — the paper's speculation/TM mechanism on a server.
 
     PYTHONPATH=src python examples/serve_specdecode.py
 """
-import sys
 import time
 
-sys.path.insert(0, "src")
+import dataclasses
+import numpy as np
+import jax
 
-import dataclasses                                         # noqa: E402
-import numpy as np                                         # noqa: E402
-import jax                                                 # noqa: E402
-
-from repro.core.sched import serving, specdecode           # noqa: E402
-from repro.models import registry                          # noqa: E402
+from repro.core.sched import serving, specdecode
+from repro.models import registry
 
 
 def main():

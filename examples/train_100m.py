@@ -5,18 +5,15 @@ checkpoint/restart, straggler watchdog — the full runtime stack on CPU.
     PYTHONPATH=src python examples/train_100m.py --steps 8 --tiny  # CI smoke
 """
 import argparse
-import sys
 import tempfile
 
-sys.path.insert(0, "src")
+import jax
 
-import jax                                                 # noqa: E402
-
-from repro.configs.base import ArchConfig                  # noqa: E402
-from repro.data import pipeline as data_lib                # noqa: E402
-from repro.models import registry                          # noqa: E402
-from repro.optim.adamw import AdamWConfig                  # noqa: E402
-from repro.runtime import train as train_rt                # noqa: E402
+from repro.configs.base import ArchConfig
+from repro.data import pipeline as data_lib
+from repro.models import registry
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import train as train_rt
 
 CFG_100M = ArchConfig(                     # ≈ 110M params (gpt2-medium-ish)
     name="lm-100m", family="dense",

@@ -1,0 +1,34 @@
+"""HTS: the paper's Hardware Task Scheduler as a typed, simulatable system.
+
+Public surface (the rest of the repo goes through this):
+
+* :class:`Program` / :class:`Region` / :class:`Reg` — the typed
+  Program-Builder front-end (``builder.py``): tasks, regions, loops,
+  branches, processes, lowered to the 128-bit Table-I ISA.
+* :func:`run` / :func:`sweep` — the unified simulation facade (``api.py``)
+  over the compiled JAX machine (``machine.py``) and the pure-Python golden
+  oracle (``golden.py``).
+
+    >>> from repro.core import hts
+    >>> p = hts.Program("demo")
+    >>> x = p.input(0x10, 4)
+    >>> fft = p.task("fft_256", in_=x, out=4)
+    >>> dot = p.task("vector_dot", in_=fft, out=1)
+    >>> print(hts.run(p, scheduler="hts_spec", n_fu=2).table())
+
+Lower layers remain importable directly (``isa``, ``assembler``, ``costs``,
+``golden``, ``machine``, ``programs``, ``multiapp``) for tests and tools.
+"""
+from .api import (ALL_SCHEDULERS, Result, SimulationError, SweepResult,
+                  TaskRow, run, sweep)
+from .builder import (BuilderError, BuiltProgram, Program, Reg, Region,
+                      TaskHandle, Walker)
+from .costs import SchedulerCosts, costs_by_name
+from .golden import HtsParams
+
+__all__ = [
+    "ALL_SCHEDULERS", "BuilderError", "BuiltProgram", "HtsParams", "Program",
+    "Reg", "Region", "Result", "SchedulerCosts", "SimulationError",
+    "SweepResult", "TaskHandle", "TaskRow", "Walker", "costs_by_name",
+    "run", "sweep",
+]

@@ -1,0 +1,331 @@
+"""Unified HTS simulation facade: ``hts.run`` and ``hts.sweep``.
+
+One entry point for every caller of the reproduction — benchmarks, examples
+and tests no longer thread ``assembler.assemble → machine.simulate(...)`` /
+``golden.run(...)`` by hand (each with a different signature):
+
+    >>> from repro.core import hts
+    >>> p = hts.Program("demo")
+    >>> x = p.input(0x10, 4)
+    >>> fft = p.task("fft_256", in_=x, out=4)
+    >>> r = hts.run(p, scheduler="hts_spec", n_fu=2)
+    >>> r.cycles, r.utilization, r.schedule[0].func_name
+    >>> r.speedup_vs(hts.run(p, scheduler="naive", n_fu=2))
+
+``run`` accepts a :class:`~repro.core.hts.builder.Program`, a built program,
+a ``Bench``, raw assembly text, or a (P, 4) machine-code array, and executes
+it on either backend:
+
+* ``backend="jax"``    — the compiled ``lax.while_loop`` machine
+  (:mod:`machine`), event-skip by default;
+* ``backend="golden"`` — the pure-Python cycle-accurate oracle
+  (:mod:`golden`).
+
+Both return the same :class:`Result` with identical per-task schedule rows
+(the two simulators are schedule-equivalence-tested).
+
+``sweep`` wraps the machine's ``vmap`` path: one compiled machine per
+scheduler, the FU-configuration axis batched — the Fig-10 strong-scaling
+experiment as a single call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Optional, Sequence, Union
+
+import numpy as np
+
+from . import golden, isa, machine
+from .builder import BuiltProgram, Program
+from .costs import (ALL_SCHEDULERS, FUNC_NAMES, NUM_FUNCS, SchedulerCosts,
+                    costs_by_name)
+from .golden import HtsParams
+
+
+class SimulationError(RuntimeError):
+    """A simulation did not halt (hit ``max_cycles``) or overflowed."""
+
+
+# ---------------------------------------------------------------------------
+# program normalisation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class _Prepared:
+    name: str
+    code: np.ndarray
+    mem_init: dict[int, int]
+    effects: dict[int, int]
+
+
+def _prepare(program) -> _Prepared:
+    """Accept Program | BuiltProgram | Bench-like | asm text | code array."""
+    if isinstance(program, Program):
+        program = program.build()
+    if isinstance(program, BuiltProgram):
+        return _Prepared(program.name, program.code, program.mem_init,
+                         program.effects)
+    if isinstance(program, str):                      # assembly text
+        from . import assembler
+        return _Prepared("<asm>", assembler.assemble(program), {}, {})
+    if isinstance(program, np.ndarray):               # raw machine code
+        return _Prepared("<code>", program, {}, {})
+    if hasattr(program, "asm"):                       # programs.Bench (duck)
+        from . import assembler
+        return _Prepared(getattr(program, "name", "<bench>"),
+                         assembler.assemble(program.asm),
+                         dict(getattr(program, "mem_init", {}) or {}),
+                         dict(getattr(program, "effects", {}) or {}))
+    raise TypeError(f"cannot interpret {type(program).__name__} as an HTS "
+                    "program")
+
+
+def _norm_n_fu(n_fu) -> tuple[int, ...]:
+    if isinstance(n_fu, (int, np.integer)):
+        return (int(n_fu),) * NUM_FUNCS
+    t = tuple(int(k) for k in n_fu)
+    if len(t) != NUM_FUNCS:
+        raise ValueError(f"n_fu must be an int or {NUM_FUNCS} per-class "
+                         f"counts, got {len(t)}")
+    return t
+
+
+def _norm_costs(scheduler) -> SchedulerCosts:
+    return (costs_by_name(scheduler) if isinstance(scheduler, str)
+            else scheduler)
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TaskRow:
+    """One scheduled task: dispatch/issue/complete/broadcast cycles."""
+    uid: int
+    func: int
+    dispatch: int
+    issue: int
+    complete: int
+    broadcast: int
+    aborted: bool
+
+    @property
+    def func_name(self) -> str:
+        return FUNC_NAMES.get(self.func, f"acc_{self.func:x}")
+
+    def astuple(self) -> tuple:
+        return (self.uid, self.func, self.dispatch, self.issue,
+                self.complete, self.broadcast, self.aborted)
+
+
+@dataclasses.dataclass(frozen=True)
+class Result:
+    """Uniform simulation outcome (either backend)."""
+    program: str
+    scheduler: str
+    backend: str
+    n_fu: tuple[int, ...]
+    cycles: int
+    halted: bool
+    schedule: tuple[TaskRow, ...]
+    spec_aborted: int
+    stall_cycles: int
+    fu_busy_cycles: tuple[int, ...]     # per existing unit, class-major order
+    wall_us: float
+    raw: Any = dataclasses.field(repr=False, compare=False, default=None)
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.schedule)
+
+    @property
+    def utilization(self) -> float:
+        """Mean busy fraction across the accelerator units that exist."""
+        units = sum(self.n_fu)
+        if units == 0 or self.cycles == 0:
+            return 0.0
+        return float(sum(self.fu_busy_cycles)) / (units * self.cycles)
+
+    def speedup_vs(self, other: "Result") -> float:
+        """How much faster this run is than ``other`` (>1 ⇒ faster)."""
+        return other.cycles / self.cycles
+
+    def schedule_tuple(self) -> list[tuple]:
+        """Canonical rows, comparable across backends."""
+        return [row.astuple() for row in self.schedule]
+
+    def table(self) -> str:
+        """Human-readable per-task schedule."""
+        lines = [f"{self.program} · {self.scheduler} · {self.backend} · "
+                 f"{self.cycles} cycles · utilization "
+                 f"{self.utilization:.1%}",
+                 f"{'uid':>4} {'function':<13} {'dispatch':>8} {'issue':>8} "
+                 f"{'complete':>9} {'broadcast':>9}"]
+        for t in self.schedule:
+            flag = "  (aborted)" if t.aborted else ""
+            lines.append(f"{t.uid:>4} {t.func_name:<13} {t.dispatch:>8} "
+                         f"{t.issue:>8} {t.complete:>9} {t.broadcast:>9}"
+                         f"{flag}")
+        return "\n".join(lines)
+
+
+def _machine_rows(out: dict[str, Any]) -> tuple[TaskRow, ...]:
+    return tuple(TaskRow(*row) for row in machine.schedule_tuple(out))
+
+
+def _golden_rows(res: golden.Result) -> tuple[TaskRow, ...]:
+    return tuple(TaskRow(*row) for row in res.schedule_tuple())
+
+
+# ---------------------------------------------------------------------------
+# run
+# ---------------------------------------------------------------------------
+def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
+        n_fu: Union[int, Sequence[int]] = 2, backend: str = "jax",
+        params: HtsParams = HtsParams(), event_skip: bool = True,
+        max_cycles: int = 5_000_000, max_prog: int = 256,
+        max_fu_per_class: int = 16, check: bool = True) -> Result:
+    """Simulate ``program`` under one scheduler cost model.
+
+    Raises :class:`SimulationError` (naming the program and scheduler) if the
+    machine fails to drain within ``max_cycles`` — pass ``check=False`` to
+    get the partial Result instead.
+    """
+    prep = _prepare(program)
+    cost = _norm_costs(scheduler)
+    fu = _norm_n_fu(n_fu)
+
+    t0 = time.perf_counter()
+    if backend == "jax":
+        out = machine.simulate(prep.code, cost, params,
+                               n_fu=np.asarray(fu, np.int32),
+                               mem_init=prep.mem_init, effects=prep.effects,
+                               event_skip=event_skip, max_cycles=max_cycles,
+                               max_fu_per_class=max_fu_per_class,
+                               max_prog=max_prog)
+        wall = (time.perf_counter() - t0) * 1e6
+        halted = bool(out["halted"]) and not bool(out["overflow"])
+        # keep only units that exist under fu (class-major, like golden)
+        busy = np.asarray(out["fu_busy_cycles"]).reshape(NUM_FUNCS,
+                                                         max_fu_per_class)
+        busy_exist = tuple(int(busy[c, u]) for c in range(NUM_FUNCS)
+                           for u in range(fu[c]))
+        result = Result(
+            program=prep.name, scheduler=cost.name, backend=backend,
+            n_fu=fu, cycles=int(out["cycles"]), halted=halted,
+            schedule=_machine_rows(out),
+            spec_aborted=int(out["spec_aborted"]),
+            stall_cycles=int(out["stall_cycles"]),
+            fu_busy_cycles=busy_exist, wall_us=wall, raw=out)
+    elif backend == "golden":
+        g = golden.run(prep.code, cost, dataclasses.replace(params, n_fu=fu),
+                       prep.mem_init, prep.effects, max_cycles=max_cycles)
+        wall = (time.perf_counter() - t0) * 1e6
+        result = Result(
+            program=prep.name, scheduler=cost.name, backend=backend,
+            n_fu=fu, cycles=int(g.cycles), halted=bool(g.halted),
+            schedule=_golden_rows(g), spec_aborted=int(g.spec_aborted),
+            stall_cycles=int(g.stall_cycles),
+            fu_busy_cycles=tuple(int(x) for x in g.fu_busy_cycles),
+            wall_us=wall, raw=g)
+    else:
+        raise ValueError(f'backend must be "jax" or "golden", got {backend!r}')
+
+    if check and not result.halted:
+        raise SimulationError(
+            f"program {prep.name!r} under scheduler {cost.name!r} "
+            f"(backend={backend}, n_fu={fu}) did not halt within "
+            f"{max_cycles} cycles — livelock, structural overflow, or "
+            "max_cycles too small")
+    return result
+
+
+# ---------------------------------------------------------------------------
+# sweep
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Strong-scaling sweep: cycles[scheduler][i] for n_fu_list[i]."""
+    program: str
+    n_fu_list: tuple[tuple[int, ...], ...]
+    schedulers: tuple[str, ...]
+    cycles: dict[str, np.ndarray]
+    wall_us: dict[str, float]           # total per scheduler (all FU points)
+
+    def speedup(self, scheduler: str, baseline: str) -> np.ndarray:
+        """Per-FU-point speedup of ``scheduler`` over ``baseline``."""
+        return self.cycles[baseline] / self.cycles[scheduler]
+
+    def table(self) -> str:
+        head = "n_fu       " + " ".join(f"{s:>12}" for s in self.schedulers)
+        lines = [f"{self.program} · strong scaling", head]
+        for i, fu in enumerate(self.n_fu_list):
+            k = fu[0] if len(set(fu)) == 1 else fu
+            lines.append(f"{str(k):<10} " + " ".join(
+                f"{int(self.cycles[s][i]):>12}" for s in self.schedulers))
+        return "\n".join(lines)
+
+
+@functools.lru_cache(maxsize=16)
+def _vmapped(spec: machine.MachineSpec, max_prog: int):
+    """One jitted machine per (spec, max_prog), FU axis vmapped."""
+    import jax
+    return jax.jit(jax.vmap(machine.make_machine(spec, max_prog),
+                            in_axes=(None, None, 0, None, None)))
+
+
+def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),
+          params: HtsParams = HtsParams(), event_skip: bool = True,
+          max_cycles: int = 50_000_000, max_prog: int = 64,
+          max_fu_per_class: Optional[int] = None) -> SweepResult:
+    """Simulate ``program`` across FU configurations in one compiled,
+    ``vmap``-batched machine per scheduler (the Fig-10 machinery).
+
+    ``n_fu`` is a sequence of points; each point is an int (uniform per
+    class) or a per-class tuple.  ``schedulers`` accepts names from
+    ``costs.ALL_SCHEDULERS`` or :class:`SchedulerCosts` objects.
+    """
+    import jax.numpy as jnp
+
+    prep = _prepare(program)
+    points = tuple(_norm_n_fu(k) for k in n_fu)
+    widest = max(max(p) for p in points)
+    if max_fu_per_class is None:
+        max_fu_per_class = max(16, widest)
+    elif widest > max_fu_per_class:
+        raise ValueError(f"n_fu point {widest} exceeds max_fu_per_class "
+                         f"{max_fu_per_class}")
+
+    ftab, p_len = machine.pack_program(prep.code, max_prog)
+    mem, eff = machine.images(params, prep.mem_init, prep.effects)
+    n_fu_arr = jnp.asarray(points, jnp.int32)
+
+    cost_objs = [_norm_costs(s) for s in schedulers]
+    cycles: dict[str, np.ndarray] = {}
+    wall: dict[str, float] = {}
+    for cost in cost_objs:
+        spec = machine.MachineSpec(params=params, costs=cost,
+                                   event_skip=event_skip,
+                                   max_cycles=max_cycles,
+                                   max_fu_per_class=max_fu_per_class)
+        runner = _vmapped(spec, max_prog)
+        t0 = time.perf_counter()
+        out = runner(jnp.asarray(ftab), p_len, n_fu_arr,
+                     jnp.asarray(mem), jnp.asarray(eff))
+        cyc = np.asarray(out["cycles"])
+        wall[cost.name] = (time.perf_counter() - t0) * 1e6
+        ok = np.asarray(out["halted"]) & ~np.asarray(out["overflow"])
+        if not ok.all():
+            bad = [points[i] for i in np.nonzero(~ok)[0]]
+            raise SimulationError(
+                f"sweep of {prep.name!r} under {cost.name!r}: FU points "
+                f"{bad} did not halt within {max_cycles} cycles")
+        cycles[cost.name] = cyc
+    return SweepResult(program=prep.name, n_fu_list=points,
+                       schedulers=tuple(c.name for c in cost_objs),
+                       cycles=cycles, wall_us=wall)
+
+
+__all__ = ["run", "sweep", "Result", "SweepResult", "TaskRow",
+           "SimulationError", "ALL_SCHEDULERS"]

@@ -113,12 +113,6 @@ def assemble(text: str, keynames: dict[str, int] | None = None) -> np.ndarray:
 
 
 def disassemble(code: np.ndarray, keynames: dict[str, int] | None = None) -> str:
+    """Machine code → assembly text (delegates to :func:`isa.disassemble`)."""
     keynames = dict(FUNC_IDS if keynames is None else keynames)
-    names = {v: k for k, v in keynames.items()}
-    lines = []
-    for ins in isa.decode_program(code):
-        mnem = names.get(ins.acc, f"acc_{ins.acc:x}") if ins.op == isa.OP_TASK \
-            else isa.OP_NAMES[ins.op]
-        lines.append(f"{mnem} {ins.a:x} {ins.asz:x} {ins.b:x} {ins.bsz:x} "
-                     f"{ins.tid:x} {ins.pid:x} {ins.ctl:x} {ins.meta:04x}")
-    return "\n".join(lines)
+    return isa.disassemble(code, {v: k for k, v in keynames.items()})

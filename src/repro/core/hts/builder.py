@@ -1,0 +1,590 @@
+"""Typed Program Builder for the HTS dataflow ISA (paper §V, Table I).
+
+Assembly vs builder
+-------------------
+The paper describes programs the way its compiler would emit them — one
+128-bit instruction per line, eight hex operand fields in Table-I order
+(``assembler.py`` accepts exactly that text).  Hand-writing those lines means
+hand-managing three machine resources at once:
+
+* **memory regions** — every task's ``<in_region> <in_size> <out_region>
+  <out_size>`` operands are raw addresses, so callers must do the
+  ``OUT_BASE + i * RSTRIDE`` arithmetic themselves and nothing checks two
+  live regions against overlapping by accident;
+* **GPRs** — loops and indirect addressing need scratch registers, picked
+  by hand and silently clobbered on reuse;
+* **control-flow offsets** — ``if`` takes a *forward PC delta* and ``lend``
+  a *backward body length* (Table I / Fig 6), which go stale on every edit.
+
+This module is the embedded-Python front-end that owns those resources:
+
+* :class:`Program` records a structured instruction stream;
+* :meth:`Program.region` bump-allocates non-overlapping memory regions
+  (:class:`Region`), with ``mem_init``/``effects`` images attached via
+  :meth:`Region.init` / :meth:`Region.effect`;
+* :meth:`Program.task` emits a typed task call (``p.task("fft_256",
+  in_=x, out=4)``) and returns a handle whose output region feeds the next
+  task — the dataflow graph reads like a dataflow graph;
+* ``with p.loop(n):`` / ``p.branch(...)`` / ``with p.process(pid):`` are
+  structured contexts lowered to ``lbeg``/``lend``/``if``/``jump`` with the
+  offsets computed for you; :class:`Walker` reproduces the paper's
+  walking-pointer idiom (a base register advanced by a stride each
+  iteration, §V-B's loop example);
+* registers are symbolic (:class:`Reg`) and numbered only at
+  :meth:`Program.build`, so two programs can be merged
+  (:meth:`Program.interleave`) without clobbering each other's GPRs.
+
+``build()`` lowers to the exact 128-bit encoding of ``isa.py`` and can also
+emit paper-style assembly text (``BuiltProgram.asm`` — byte-for-byte
+reassemblable, used by the round-trip property tests), so paper-fidelity
+assembly listings remain available for inspection and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from contextlib import contextmanager
+from typing import Iterator, Optional, Sequence, Union
+
+import numpy as np
+
+from . import isa
+from .costs import FUNC_IDS
+
+#: default start of the auto-allocated output-region space (matches the old
+#: hand-written ``OUT_BASE``) and its default alignment (old ``RSTRIDE``).
+REGION_BASE = 0x100
+REGION_ALIGN = 0x8
+
+_CONDS = {"==": isa.CND_EQ, "!=": isa.CND_NEQ, ">=": isa.CND_GE,
+          "<=": isa.CND_LE}
+_KINDS = {"reg": isa.BR_RR, "mem": isa.BR_MR, "bus": isa.BR_BR}
+
+
+class BuilderError(ValueError):
+    """Raised on malformed Program-Builder usage (bad operand, overlap...)."""
+
+
+# ---------------------------------------------------------------------------
+# operands
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """A contiguous span of task memory: ``[addr, addr + size)``."""
+    addr: int
+    size: int
+    name: str = ""
+    _prog: Optional["Program"] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def end(self) -> int:
+        return self.addr + self.size
+
+    def sub(self, offset: int, size: int, name: str = "") -> "Region":
+        """A sub-region view (no new reservation)."""
+        if offset < 0 or offset + size > self.size:
+            raise BuilderError(
+                f"sub-region [{offset}, {offset + size}) outside region "
+                f"{self.name or hex(self.addr)} of size {self.size}")
+        return Region(self.addr + offset, size, name or self.name,
+                      self._prog)
+
+    def init(self, values: Union[int, Sequence[int]], offset: int = 0):
+        """Attach initial memory contents (``mem_init`` image) to the region."""
+        self._attach("mem_init", values, offset)
+        return self
+
+    def effect(self, values: Union[int, Sequence[int]], offset: int = 0):
+        """Attach the values a producer task writes here on completion
+        (the simulator's ``effects`` image, golden.py docstring)."""
+        self._attach("effects", values, offset)
+        return self
+
+    def _attach(self, which: str, values, offset: int) -> None:
+        if self._prog is None:
+            raise BuilderError("region is not attached to a Program")
+        vals = [values] if isinstance(values, int) else list(values)
+        if offset + len(vals) > self.size:
+            raise BuilderError(
+                f"{which} image of {len(vals)} words at +{offset} exceeds "
+                f"region size {self.size}")
+        img = getattr(self._prog, which)
+        for i, v in enumerate(vals):
+            img[self.addr + offset + i] = int(v)
+
+
+@dataclasses.dataclass(eq=False)
+class Reg:
+    """A symbolic GPR; numbered at :meth:`Program.build` in first-use order."""
+    name: str = ""
+
+    def __repr__(self) -> str:
+        return f"Reg({self.name or hex(id(self))})"
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskHandle:
+    """Returned by :meth:`Program.task`; chains the task's output region."""
+    index: int
+    func: str
+    out: Optional[Region]
+
+
+# ---------------------------------------------------------------------------
+# recorded nodes (internal)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Op:
+    """One flat instruction with possibly-symbolic (Reg) operands."""
+    op: int
+    acc: int = 0
+    a: object = 0            # int | Reg
+    asz: object = 0          # int | Reg
+    b: object = 0            # int | Reg
+    bsz: int = 0
+    tid: int = 0
+    pid: int = 0
+    ctl: int = 0
+    meta: int = 0
+
+
+@dataclasses.dataclass
+class _Loop:
+    count: object            # int | Reg
+    counter: Reg
+    body: list
+
+
+@dataclasses.dataclass
+class _Branch:
+    kind: int
+    cond: int
+    on: object               # int address | Reg
+    thr: Reg
+    taken: list
+    not_taken: list
+
+
+# ---------------------------------------------------------------------------
+# walker
+# ---------------------------------------------------------------------------
+class Walker:
+    """The paper's loop idiom: a base register stepped by a stride register.
+
+    ``w.offset(k)`` materialises a register holding ``base + k`` at the
+    current point in the instruction stream; ``w.advance()`` steps the base.
+    Used as a task operand, a Walker is its (indirect) base register.
+    """
+
+    def __init__(self, prog: "Program", start: int, stride: int,
+                 name: str = "walker"):
+        self._prog = prog
+        self.start = start
+        self.stride = stride
+        self.name = name
+        self.base = Reg(f"{name}.base")
+        self._stride_reg = Reg(f"{name}.stride")
+        prog.mov(self.base, start)
+        prog.mov(self._stride_reg, stride)
+
+    def offset(self, k: int, name: str = "") -> Reg:
+        r = self._prog.mov(Reg(name or f"{self.name}+{k:#x}"), self.base)
+        if k:
+            scratch = self._prog._scratch_reg()
+            self._prog.mov(scratch, k)
+            self._prog.add(r, r, scratch)
+        return r
+
+    def advance(self) -> None:
+        self._prog.add(self.base, self.base, self._stride_reg)
+
+
+# ---------------------------------------------------------------------------
+# the builder
+# ---------------------------------------------------------------------------
+class Program:
+    """An HTS dataflow program under construction.
+
+    >>> p = Program("quickstart")
+    >>> x = p.input(0x10, 4)
+    >>> fft = p.task("fft_256", in_=x, out=4)
+    >>> dot = p.task("vector_dot", in_=fft, out=1)
+    >>> built = p.build()          # .code (P,4) uint32, .asm, .mem_init, ...
+    """
+
+    def __init__(self, name: str = "program", *,
+                 keynames: Optional[dict[str, int]] = None,
+                 region_base: int = REGION_BASE,
+                 region_align: int = REGION_ALIGN,
+                 num_regs: int = 32):
+        self.name = name
+        self.keynames = dict(FUNC_IDS if keynames is None else keynames)
+        self.num_regs = num_regs
+        self.mem_init: dict[int, int] = {}
+        self.effects: dict[int, int] = {}
+        self._nodes: list = []
+        self._blocks: list[list] = [self._nodes]
+        self._pids: list[int] = [0]
+        # (start, end, name, written): written=False marks external inputs,
+        # which two interleaved programs may legitimately share
+        self._reserved: list[tuple[int, int, str, bool]] = []
+        self._alloc_ptr = region_base
+        self._align = region_align
+        self._scratch: Optional[Reg] = None
+        self._n_tasks = 0
+        self._in_loop_or_branch = 0
+
+    # -------------------------------------------------------------- regions
+    def _overlap(self, s: int, e: int):
+        for entry in self._reserved:
+            if entry[0] < e and s < entry[1]:
+                return entry
+        return None
+
+    def _reserve(self, s: int, e: int, name: str, written: bool = True) -> None:
+        hit = self._overlap(s, e)
+        if hit is not None:
+            raise BuilderError(
+                f"region {name!r} [{s:#x}, {e:#x}) overlaps live region "
+                f"{hit[2]!r} [{hit[0]:#x}, {hit[1]:#x})")
+        self._reserved.append((s, e, name, written))
+
+    def region(self, size: int, *, at: Optional[int] = None,
+               align: Optional[int] = None, name: str = "") -> Region:
+        """Reserve a ``size``-word region; auto-placed unless ``at`` given."""
+        if size <= 0:
+            raise BuilderError(f"region size must be positive, got {size}")
+        if at is not None:
+            self._reserve(at, at + size, name or f"r@{at:#x}")
+            return Region(at, size, name, self)
+        align = self._align if align is None else align
+        addr = -(-self._alloc_ptr // align) * align
+        while True:
+            hit = self._overlap(addr, addr + size)
+            if hit is None:
+                break
+            addr = -(-hit[1] // align) * align
+        self._reserve(addr, addr + size, name or f"r{len(self._reserved)}")
+        self._alloc_ptr = addr + size
+        return Region(addr, size, name, self)
+
+    def input(self, addr: int, size: int, name: str = "") -> Region:
+        """Name an externally-provided input span (reserved like any region;
+        interleaved programs may share an identical input span)."""
+        self._reserve(addr, addr + size, name or f"in@{addr:#x}",
+                      written=False)
+        return Region(addr, size, name, self)
+
+    # ------------------------------------------------------------ registers
+    def reg(self, name: str = "") -> Reg:
+        return Reg(name)
+
+    def _scratch_reg(self) -> Reg:
+        if self._scratch is None:
+            self._scratch = Reg("scratch")
+        return self._scratch
+
+    # -------------------------------------------------------------- low-level
+    def _emit(self, node) -> None:
+        self._blocks[-1].append(node)
+
+    def mov(self, dst: Reg, src: Union[int, Reg]) -> Reg:
+        """``dst = src`` (immediate or register copy)."""
+        if isinstance(src, Reg):
+            self._emit(_Op(isa.OP_MOV, a=src, b=dst))
+        else:
+            self._emit(_Op(isa.OP_MOV, a=int(src), b=dst, ctl=isa.CTL_IMM))
+        return dst
+
+    def add(self, dst: Reg, x: Reg, y: Reg) -> Reg:
+        """``dst = x + y`` (register-register)."""
+        self._emit(_Op(isa.OP_ADD, a=x, asz=y, b=dst))
+        return dst
+
+    def mul(self, dst: Reg, x: Reg, y: Reg) -> Reg:
+        self._emit(_Op(isa.OP_MUL, a=x, asz=y, b=dst))
+        return dst
+
+    def let(self, value: int, name: str = "") -> Reg:
+        """Allocate a register and load an immediate into it."""
+        return self.mov(Reg(name or f"#{value:#x}"), value)
+
+    def nop(self) -> None:
+        self._emit(_Op(isa.OP_NOP))
+
+    # ----------------------------------------------------------------- tasks
+    def _in_operand(self, x, size) -> tuple[object, int, int]:
+        """→ (a_field, asz, ctl_bits) for a task input."""
+        if isinstance(x, TaskHandle):
+            if x.out is None:
+                raise BuilderError(
+                    f"task {x.func!r} has an indirect output; pass the "
+                    "region or register explicitly")
+            x = x.out
+        if isinstance(x, Region):
+            return x.addr, int(size if size is not None else x.size), 0
+        if isinstance(x, Walker):
+            x = x.base
+        if isinstance(x, Reg):
+            if size is None:
+                raise BuilderError(
+                    "indirect (register) operands need an explicit size")
+            return x, int(size), isa.CTL_IN_INDIRECT
+        raise BuilderError(f"bad task input operand: {x!r}")
+
+    def _out_operand(self, x, size) -> tuple[object, int, int, Optional[Region]]:
+        if isinstance(x, int):
+            x = self.region(x)
+        if isinstance(x, Region):
+            return x.addr, int(size if size is not None else x.size), 0, x
+        if isinstance(x, Walker):
+            x = x.base
+        if isinstance(x, Reg):
+            if size is None:
+                raise BuilderError(
+                    "indirect (register) outputs need an explicit size")
+            return x, int(size), isa.CTL_OUT_INDIRECT, None
+        raise BuilderError(f"bad task output operand: {x!r}")
+
+    def task(self, func: str, *, in_, out, in_size: Optional[int] = None,
+             out_size: Optional[int] = None, tid: int = 0,
+             pid: Optional[int] = None, meta: int = 0) -> TaskHandle:
+        """Emit a task call on accelerator ``func``.
+
+        ``in_``/``out`` accept a :class:`Region`, a :class:`TaskHandle`
+        (its output region — dataflow chaining), a :class:`Reg`/:class:`Walker`
+        (indirect addressing, ``in_size``/``out_size`` then required), or for
+        ``out`` an ``int`` size to auto-allocate a fresh region.
+        """
+        if func not in self.keynames:
+            raise BuilderError(f"unknown accelerator keyname {func!r} "
+                               f"(known: {sorted(self.keynames)})")
+        a, asz, ctl_in = self._in_operand(in_, in_size)
+        b, bsz, ctl_out, out_region = self._out_operand(out, out_size)
+        self._emit(_Op(isa.OP_TASK, acc=self.keynames[func], a=a, asz=asz,
+                       b=b, bsz=bsz, tid=tid & 0xF,
+                       pid=(self._pids[-1] if pid is None else pid) & 0xF,
+                       ctl=ctl_in | ctl_out, meta=meta))
+        if not self._in_loop_or_branch:
+            self._n_tasks += 1
+        return TaskHandle(len(self._blocks[-1]) - 1, func, out_region)
+
+    # ------------------------------------------------------- structured flow
+    @contextmanager
+    def loop(self, count: Union[int, Reg], counter: Optional[Reg] = None
+             ) -> Iterator[Reg]:
+        """``with p.loop(n):`` — body repeats ``n`` times (lbeg/lend)."""
+        counter = counter or Reg("loopctr")
+        body: list = []
+        self._blocks.append(body)
+        self._in_loop_or_branch += 1
+        try:
+            yield counter
+        finally:
+            self._in_loop_or_branch -= 1
+            self._blocks.pop()
+            self._emit(_Loop(count, counter, body))
+
+    def walker(self, *, stride: int, start: Optional[int] = None,
+               count: Optional[int] = None, name: str = "walker") -> Walker:
+        """A walking output pointer.  Auto-reserves ``count * stride`` words
+        when ``start`` is omitted; an explicit ``start`` reserves nothing
+        (e.g. both arms of a branch walking the same shared span)."""
+        if start is None:
+            if count is None:
+                raise BuilderError("walker needs either start= or count=")
+            start = self.region(count * stride, name=name).addr
+        return Walker(self, start, stride, name)
+
+    def branch(self, *, on: Union[Region, Reg], cond: str,
+               thr: Union[int, Reg], kind: str = "mem") -> "BranchCtx":
+        """Emit an ``if`` (paper §IV-C3).  ``kind``: ``"reg"`` (RR, inline),
+        ``"mem"`` (MR, spawned memory read), ``"bus"`` (BR, waits on the CDB
+        broadcast of the in-flight producer of ``on``).  The fall-through
+        block (``.not_taken()``) is the speculated path."""
+        if cond not in _CONDS:
+            raise BuilderError(f"bad condition {cond!r}; one of {list(_CONDS)}")
+        if kind not in _KINDS:
+            raise BuilderError(f"bad branch kind {kind!r}; one of {list(_KINDS)}")
+        k = _KINDS[kind]
+        if isinstance(on, Region):
+            if k == isa.BR_RR:
+                raise BuilderError('kind="reg" branches test a Reg, not a Region')
+            addr: object = on.addr
+        elif isinstance(on, Reg):
+            if k != isa.BR_RR:
+                raise BuilderError(f'kind={kind!r} branches test a Region')
+            addr = on
+        else:
+            raise BuilderError(f"bad branch operand: {on!r}")
+        if not isinstance(thr, Reg):
+            thr = self.let(int(thr), "thr")
+        node = _Branch(kind=k, cond=_CONDS[cond], on=addr, thr=thr,
+                       taken=[], not_taken=[])
+        self._emit(node)
+        return BranchCtx(self, node)
+
+    @contextmanager
+    def process(self, pid: int) -> Iterator[None]:
+        """Tag tasks emitted inside with process id ``pid`` (multi-app)."""
+        self._pids.append(pid & 0xF)
+        try:
+            yield
+        finally:
+            self._pids.pop()
+
+    # -------------------------------------------------------------- lowering
+    def _resolve_regs(self, flat_ops: list[_Op]) -> dict[Reg, int]:
+        """Number symbolic registers 1..num_regs-1 in first-use order."""
+        mapping: dict[Reg, int] = {}
+        ids = itertools.count(1)
+        for op in flat_ops:
+            for field in (op.a, op.asz, op.b):
+                if isinstance(field, Reg) and field not in mapping:
+                    mapping[field] = next(ids)
+        if mapping and max(mapping.values()) >= self.num_regs:
+            raise BuilderError(
+                f"program uses {len(mapping)} registers; only "
+                f"{self.num_regs - 1} available")
+        return mapping
+
+    def _flatten(self, nodes: list, out: list[_Op]) -> None:
+        for node in nodes:
+            if isinstance(node, _Op):
+                out.append(node)
+            elif isinstance(node, _Loop):
+                if isinstance(node.count, Reg):
+                    out.append(_Op(isa.OP_LBEG, a=node.count,
+                                   asz=node.counter, ctl=1))
+                else:
+                    out.append(_Op(isa.OP_LBEG, a=int(node.count),
+                                   asz=node.counter))
+                start = len(out)
+                self._flatten(node.body, out)
+                out.append(_Op(isa.OP_LEND, asz=node.counter,
+                               b=len(out) - start))
+            elif isinstance(node, _Branch):
+                if_op = _Op(isa.OP_IF, a=node.on, asz=node.thr,
+                            ctl=node.kind | (node.cond << 2))
+                out.append(if_op)
+                if_pc = len(out) - 1
+                self._flatten(node.not_taken, out)
+                if node.taken:
+                    jump_op = _Op(isa.OP_JUMP)
+                    out.append(jump_op)
+                    if_op.b = len(out) - if_pc
+                    self._flatten(node.taken, out)
+                    jump_op.a = len(out)
+                else:
+                    if_op.b = len(out) - if_pc
+            else:  # pragma: no cover - defensive
+                raise BuilderError(f"unknown node {node!r}")
+
+    def build(self) -> "BuiltProgram":
+        if len(self._blocks) != 1:
+            raise BuilderError("build() inside an open loop/branch/process "
+                               "context")
+        flat: list[_Op] = []
+        self._flatten(self._nodes, flat)
+        regmap = self._resolve_regs(flat)
+
+        def rr(x):
+            return regmap[x] if isinstance(x, Reg) else int(x)
+
+        instrs = [isa.Instr(op=o.op, acc=o.acc, a=rr(o.a), asz=rr(o.asz),
+                            b=rr(o.b), bsz=o.bsz, tid=o.tid, pid=o.pid,
+                            ctl=o.ctl, meta=o.meta) for o in flat]
+        return BuiltProgram(
+            name=self.name,
+            instrs=tuple(instrs),
+            code=isa.encode_program(instrs),
+            mem_init=dict(self.mem_init),
+            effects=dict(self.effects),
+            keynames=dict(self.keynames),
+            n_tasks_hint=self._n_tasks if self._n_tasks == sum(
+                1 for i in instrs if i.op == isa.OP_TASK) else 0,
+        )
+
+    # ------------------------------------------------------------ interleave
+    def interleave(self, other: "Program", name: str = "shared") -> "Program":
+        """Graph-level round-robin merge of two programs: two CPUs pushing
+        their task streams into the one Task Queue (pids mark the owners).
+
+        Structured nodes (a whole loop or branch) interleave atomically, so
+        labels/offsets can never be torn apart — unlike merging assembly
+        text line-by-line.  Register spaces stay disjoint automatically
+        (registers are symbolic until ``build()``); region reservations are
+        checked for overlap.
+        """
+        merged = Program(name, keynames={**self.keynames, **other.keynames},
+                         num_regs=max(self.num_regs, other.num_regs))
+        for (s, e, rn, wr) in self._reserved + other._reserved:
+            hit = merged._overlap(s, e)
+            shared_input = (hit is not None and not wr and not hit[3]
+                            and (hit[0], hit[1]) == (s, e))
+            if hit is not None and not shared_input:
+                raise BuilderError(
+                    f"interleave: region {rn!r} [{s:#x}, {e:#x}) of one "
+                    f"program overlaps {hit[2]!r} [{hit[0]:#x}, {hit[1]:#x}) "
+                    "of the other")
+            if hit is None:
+                merged._reserved.append((s, e, rn, wr))
+        la, lb = self._nodes, other._nodes
+        for i in range(max(len(la), len(lb))):
+            if i < len(la):
+                merged._nodes.append(la[i])
+            if i < len(lb):
+                merged._nodes.append(lb[i])
+        merged.mem_init = {**self.mem_init, **other.mem_init}
+        merged.effects = {**self.effects, **other.effects}
+        merged._n_tasks = self._n_tasks + other._n_tasks
+        merged._scratch = None   # distinct Reg objects per source program
+        return merged
+
+
+class BranchCtx:
+    """Handle returned by :meth:`Program.branch`; records the two arms."""
+
+    def __init__(self, prog: Program, node: _Branch):
+        self._prog = prog
+        self._node = node
+
+    @contextmanager
+    def _arm(self, block: list) -> Iterator[None]:
+        self._prog._blocks.append(block)
+        self._prog._in_loop_or_branch += 1
+        try:
+            yield
+        finally:
+            self._prog._in_loop_or_branch -= 1
+            self._prog._blocks.pop()
+
+    def taken(self):
+        """The branch-taken arm (jumped to; *not* speculated)."""
+        return self._arm(self._node.taken)
+
+    def not_taken(self):
+        """The fall-through arm — the path HTS speculates down (§IV-C3)."""
+        return self._arm(self._node.not_taken)
+
+
+@dataclasses.dataclass(frozen=True)
+class BuiltProgram:
+    """Immutable lowering result: machine code + images + asm text."""
+    name: str
+    instrs: tuple
+    code: np.ndarray
+    mem_init: dict[int, int]
+    effects: dict[int, int]
+    keynames: dict[str, int]
+    n_tasks_hint: int = 0
+
+    @property
+    def asm(self) -> str:
+        """Paper-style assembly text; reassembles to exactly ``self.code``."""
+        names = {v: k for k, v in self.keynames.items()}
+        return isa.disassemble(self.code, names)
+
+    def __len__(self) -> int:
+        return len(self.instrs)

@@ -102,6 +102,10 @@ class Instr:
     ctl: int = 0      # control nibble
     meta: int = 0     # accelerator metadata (low 32 bits retained)
 
+    def __str__(self) -> str:
+        """One assembler-compatible source line (see :func:`format_instr`)."""
+        return format_instr(self)
+
     def encode(self) -> np.ndarray:
         """Pack into 4 little-endian uint32 lanes (128 bits)."""
         acc = self.acc if self.op == OP_TASK else _CTRL_ACC[self.op]
@@ -146,6 +150,32 @@ def encode_program(instrs: Sequence[Instr]) -> np.ndarray:
 
 def decode_program(code: np.ndarray) -> list[Instr]:
     return [decode_word(row) for row in np.asarray(code)]
+
+
+def format_instr(ins: Instr, names: dict[int, str] | None = None) -> str:
+    """Disassemble one instruction to an assembler-compatible source line.
+
+    ``names`` maps accelerator id → keyname; defaults to the Table-II DSP
+    function set.  Unknown accelerator ids render as ``acc_<hex>`` (which
+    does *not* reassemble — pass the right ``names`` for round-trips).
+    """
+    if names is None:
+        from .costs import FUNC_NAMES
+        names = FUNC_NAMES
+    mnem = (names.get(ins.acc, f"acc_{ins.acc:x}") if ins.op == OP_TASK
+            else OP_NAMES[ins.op])
+    return (f"{mnem} {ins.a:x} {ins.asz:x} {ins.b:x} {ins.bsz:x} "
+            f"{ins.tid:x} {ins.pid:x} {ins.ctl:x} {ins.meta:04x}")
+
+
+def disassemble(code: np.ndarray, names: dict[int, str] | None = None) -> str:
+    """Machine code → assembly text, one line per instruction.
+
+    Inverse of ``assembler.assemble`` (for label-free numeric form):
+    ``assemble(disassemble(code))`` is the identity, property-tested in
+    tests/test_hts_builder.py.
+    """
+    return "\n".join(format_instr(i, names) for i in decode_program(code))
 
 
 #: Column layout of the pre-decoded field table used by both simulators.

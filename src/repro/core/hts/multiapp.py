@@ -8,71 +8,65 @@ example), interleaves it with the audio-compression stream under one HTS, and
 compares shared execution against running the two programs serially on the
 same accelerator pool.
 
+Programs are built with the Program Builder and merged at the *graph* level
+via :meth:`builder.Program.interleave` — structured nodes (whole loops /
+branches) stay atomic and register spaces cannot collide, unlike the old
+asm-line round-robin splice, which silently tore labels and branch offsets
+apart.
+
 Complementary mixes (audio = FIR/FFT-heavy, image = DCT-heavy) are where
 Function-level accelerators pay off: the shared makespan approaches
 max(app_a, app_b) rather than their sum.
 """
 from __future__ import annotations
 
-from .programs import Bench
+from .builder import Program
+from .programs import Bench, INPUT, INPUT_WORDS
 
 IMG_BASE = 0x800        # image app's region space (disjoint from audio's)
-
-
-def _ptask(func, in_s, in_sz, out_s, out_sz, tid=0, pid=0):
-    return f"{func} {in_s:x} {in_sz:x} {out_s:x} {out_sz:x} " \
-           f"{tid & 0xF:x} {pid:x} 0 0"
+TILE_WORDS = 0x20
 
 
 def image_compression(tiles: int = 8) -> Bench:
     """Per 8×8 tile: DCT → vector_max (quantization range proxy) →
-    correlation against the previous tile (inter-tile prediction) →
-    vector_add (residual).  Straight-line (unrolled), pid=1."""
-    lines = []
-    prev_out = 0
-    for t in range(tiles):
-        tile_in = IMG_BASE + t * 0x20
-        dct_out = tile_in + 0x8
-        max_out = tile_in + 0x10
-        cor_out = tile_in + 0x11
-        res_out = tile_in + 0x18
-        lines.append(_ptask("dct", tile_in, 8, dct_out, 8, tid=t, pid=1))
-        lines.append(_ptask("vector_max", dct_out, 8, max_out, 1, tid=t,
-                            pid=1))
-        if prev_out:
-            lines.append(_ptask("correlation", dct_out, 8, cor_out, 1,
-                                tid=t, pid=1))
-        lines.append(_ptask("vector_add", dct_out, 8, res_out, 8, tid=t,
-                            pid=1))
-        prev_out = dct_out
-    return Bench("image_compression", "\n".join(lines), {}, {})
+    correlation (inter-tile prediction) → vector_add (residual).
+    Straight-line (unrolled), pid=1."""
+    p = Program("image_compression", region_base=IMG_BASE)
+    with p.process(1):
+        prev = None
+        for t in range(tiles):
+            tile = p.region(TILE_WORDS, align=TILE_WORDS, name=f"tile{t}")
+            dct = p.task("dct", in_=tile.sub(0x0, 8), out=tile.sub(0x8, 8),
+                         tid=t)
+            p.task("vector_max", in_=dct, out=tile.sub(0x10, 1), tid=t)
+            if prev is not None:
+                p.task("correlation", in_=dct, out=tile.sub(0x11, 1), tid=t)
+            p.task("vector_add", in_=dct, out=tile.sub(0x18, 8), tid=t)
+            prev = dct
+    return Bench.of(p)
 
 
 def audio_straightline(bands: int = 8) -> Bench:
     """Unrolled audio compression, frequency-domain path (pid=0)."""
-    lines = [_ptask("correlation", 0x10, 4, 0x20, 1, tid=0)]
+    p = Program("audio_straightline")
+    frame = p.input(INPUT, INPUT_WORDS, "audio")
+    p.task("correlation", in_=frame, out=1, tid=0)
     for b in range(bands):
-        base = 0x100 + b * 0x20
-        lines.append(_ptask("fft_256", base, 4, base + 8, 4, tid=1))
+        band = p.region(TILE_WORDS, align=TILE_WORDS, name=f"band{b}")
+        fft = p.task("fft_256", in_=band.sub(0x0, 4), out=band.sub(0x8, 4),
+                     tid=1)
         for j in range(3):
-            lines.append(_ptask("vector_dot", base + 8, 4, base + 0x10 + j,
-                                1, tid=2 + j))
-        lines.append(_ptask("fft_256", base + 0x10, 4, base + 0x18, 4, tid=5))
-    return Bench("audio_straightline", "\n".join(lines), {}, {})
+            p.task("vector_dot", in_=fft, out=band.sub(0x10 + j, 1),
+                   tid=2 + j)
+        p.task("fft_256", in_=band.sub(0x10, 4), out=band.sub(0x18, 4),
+               tid=5)
+    return Bench.of(p)
 
 
 def interleave(a: Bench, b: Bench, name: str = "shared") -> Bench:
-    """Round-robin merge of two straight-line task streams (two CPUs pushing
-    into the one Task Queue; pids distinguish the owners)."""
-    la, lb = a.asm.splitlines(), b.asm.splitlines()
-    out = []
-    for i in range(max(len(la), len(lb))):
-        if i < len(la):
-            out.append(la[i])
-        if i < len(lb):
-            out.append(lb[i])
-    mem = dict(a.mem_init)
-    mem.update(b.mem_init)
-    eff = dict(a.effects)
-    eff.update(b.effects)
-    return Bench(name, "\n".join(out), mem, eff)
+    """Round-robin merge of two applications' task streams (two CPUs pushing
+    into the one Task Queue; pids distinguish the owners) — performed on the
+    program graphs, not on assembly text."""
+    if a.program is None or b.program is None:
+        raise ValueError("interleave needs builder-backed Bench objects")
+    return Bench.of(a.program.interleave(b.program, name))

@@ -1,7 +1,11 @@
-"""Benchmark program generators (paper §VI-C).
+"""Benchmark program library (paper §VI-C), written against the
+Program Builder (:mod:`builder`) — no hand-assembled hex anywhere.
 
-Each generator emits HTS assembly text (assembled by ``assembler.assemble``)
-plus the memory image (``mem_init``/``effects``) that steers branch outcomes.
+Each generator constructs a :class:`builder.Program` (tasks, regions,
+structured loops/branches) and wraps its lowering in a :class:`Bench` for
+the benchmark drivers; region placement and branch steering memory images
+(``mem_init``/``effects``) come from the builder's region allocator instead
+of manual ``OUT_BASE + i * RSTRIDE`` arithmetic.
 
 The nine custom benchmarks match the paper's list:
   1. no_dependency           5. loop_no_dependency    8. branch_not_taken_no_dep
@@ -10,11 +14,8 @@ The nine custom benchmarks match the paper's list:
   4. random_dependency
 
 plus the real application: audio compression (Algorithm 1), with
-time-domain (branch-taken) / frequency-domain (branch-not-taken) variants and a
-``bands`` hyper-parameter for the Fig-10 strong-scaling sweep.
-
-Region map convention: inputs live at 0x10+, each task ``i`` writes its own
-region at ``OUT_BASE + i * RSTRIDE`` unless the benchmark dictates sharing.
+time-domain (branch-taken) / frequency-domain (branch-not-taken) variants and
+a ``bands`` hyper-parameter for the Fig-10 strong-scaling sweep.
 """
 from __future__ import annotations
 
@@ -22,11 +23,12 @@ import dataclasses
 
 import numpy as np
 
-from . import isa
-from .costs import FUNC_IDS
+from .builder import Program
 
-OUT_BASE = 0x100
-RSTRIDE = 0x8
+OUT_BASE = 0x100      # historical region-space origin (builder default)
+RSTRIDE = 0x8         # historical region stride (builder default alignment)
+INPUT = 0x10          # shared input frame address
+INPUT_WORDS = 4
 
 #: the paper's task mix (Table II keynames) used round-robin by the synthetic
 #: benchmarks — mirrors the §V-B example listing.
@@ -36,157 +38,141 @@ MIX = ("real_fir", "complex_fir", "adaptive_fir", "vector_dot", "iir",
 
 @dataclasses.dataclass
 class Bench:
+    """A built benchmark: assembly text + memory images, plus the source
+    :class:`Program` for graph-level operations (e.g. interleaving)."""
     name: str
     asm: str
     mem_init: dict[int, int]
     effects: dict[int, int]
     n_tasks_hint: int = 0   # static task count (0 if loop/branch dependent)
+    program: Program | None = None
+
+    @classmethod
+    def of(cls, p: Program) -> "Bench":
+        built = p.build()
+        return cls(p.name, built.asm, built.mem_init, built.effects,
+                   built.n_tasks_hint, p)
 
 
-def _task(func: str, in_s: int, in_sz: int, out_s: int, out_sz: int,
-          tid: int = 0, ctl: int = 0) -> str:
-    return f"{func} {in_s:x} {in_sz:x} {out_s:x} {out_sz:x} {tid:x} 0 {ctl:x} 0"
+def _mix_program(name: str) -> tuple[Program, "object"]:
+    p = Program(name)
+    return p, p.input(INPUT, INPUT_WORDS, "frame")
 
 
 def no_dependency(n: int = 20) -> Bench:
     """Independent tasks: every task reads the shared input, writes its own region."""
-    lines = [_task(MIX[i % len(MIX)], 0x10, 4, OUT_BASE + i * RSTRIDE, 4,
-                   tid=i & 0xF) for i in range(n)]
-    return Bench("no_dependency", "\n".join(lines), {}, {}, n)
+    p, frame = _mix_program("no_dependency")
+    for i in range(n):
+        p.task(MIX[i % len(MIX)], in_=frame, out=4, tid=i)
+    return Bench.of(p)
 
 
 def same_dependency(chains: int = 4, depth: int = 5) -> Bench:
     """Chains of RAW-dependent tasks, every task mapped to the SAME function."""
-    lines = []
+    p, frame = _mix_program("same_dependency")
     for c in range(chains):
         func = MIX[c % len(MIX)]
-        prev = 0x10
+        prev = frame
         for d in range(depth):
-            out = OUT_BASE + (c * depth + d) * RSTRIDE
-            lines.append(_task(func, prev, 4, out, 4, tid=d & 0xF))
-            prev = out
-    return Bench("same_dependency", "\n".join(lines), {}, {}, chains * depth)
+            prev = p.task(func, in_=prev, out=4, in_size=4, tid=d)
+    return Bench.of(p)
 
 
 def diff_dependency(chains: int = 4, depth: int = 5) -> Bench:
     """Chains of RAW-dependent tasks mapped to DIFFERENT functions."""
-    lines = []
+    p, frame = _mix_program("diff_dependency")
     k = 0
     for c in range(chains):
-        prev = 0x10
+        prev = frame
         for d in range(depth):
-            out = OUT_BASE + (c * depth + d) * RSTRIDE
-            lines.append(_task(MIX[k % len(MIX)], prev, 4, out, 4, tid=d & 0xF))
-            prev = out
+            prev = p.task(MIX[k % len(MIX)], in_=prev, out=4, in_size=4,
+                          tid=d)
             k += 1
-    return Bench("diff_dependency", "\n".join(lines), {}, {}, chains * depth)
+    return Bench.of(p)
 
 
 def random_dependency(n: int = 24, seed: int = 0, p_dep: float = 0.5) -> Bench:
     """Random DAG: each task reads a random earlier task's output w.p. ``p_dep``."""
     rng = np.random.default_rng(seed)
-    lines = []
+    p, frame = _mix_program("random_dependency")
+    handles = []
     for i in range(n):
         if i > 0 and rng.random() < p_dep:
-            src = OUT_BASE + int(rng.integers(0, i)) * RSTRIDE
+            src = handles[int(rng.integers(0, i))]
         else:
-            src = 0x10
+            src = frame
         func = MIX[int(rng.integers(0, len(MIX)))]
-        lines.append(_task(func, src, 4, OUT_BASE + i * RSTRIDE, 4, tid=i & 0xF))
-    return Bench("random_dependency", "\n".join(lines), {}, {}, n)
+        handles.append(p.task(func, in_=src, out=4, in_size=4, tid=i))
+    return Bench.of(p)
 
 
 def loop_no_dependency(iters: int = 8, body: int = 3) -> Bench:
     """One loop; iterations write disjoint regions via indirect addressing."""
-    # r1 = walking output base, r2 = stride, r4 = loop counter
-    stride = body * RSTRIDE
-    lines = [
-        f"mov {OUT_BASE:x} 0 1 0 0 0 1 0",       # r1 = OUT_BASE   (imm)
-        f"mov {stride:x} 0 2 0 0 0 1 0",         # r2 = stride     (imm)
-        f"lbeg {iters:x} 4 0 0 0 0 0 0",         # r4 = iters
-    ]
-    body_lines = []
-    for j in range(body):
-        # input: shared region; output: indirect base r1 (+ j handled by
-        # distinct registers r5+j preloaded each iteration)
-        body_lines.append(f"mov 1 0 {5 + j:x} 0 0 0 0 0")          # r(5+j) = r1
-        if j:
-            body_lines.append(f"mov {j * RSTRIDE:x} 0 3 0 0 0 1 0")  # r3 = j*RSTRIDE
-            body_lines.append(f"add {5 + j:x} 3 {5 + j:x} 0 0 0 0 0")
-        body_lines.append(
-            f"{MIX[j % len(MIX)]} 10 4 {5 + j:x} 4 {j:x} 0 "
-            f"{isa.CTL_OUT_INDIRECT:x} 0")
-    body_lines.append("add 1 2 1 0 0 0 0 0")                        # r1 += r2
-    lines += body_lines
-    lines.append(f"lend 0 4 {len(body_lines):x} 0 0 0 0 0")
-    return Bench("loop_no_dependency", "\n".join(lines), {}, {})
+    p, frame = _mix_program("loop_no_dependency")
+    w = p.walker(stride=body * RSTRIDE, count=iters, name="out")
+    with p.loop(iters):
+        for j in range(body):
+            p.task(MIX[j % len(MIX)], in_=frame,
+                   out=w if j == 0 else w.offset(j * RSTRIDE),
+                   out_size=4, tid=j)
+        w.advance()
+    return Bench.of(p)
 
 
 def loop_dependency(iters: int = 8) -> Bench:
     """A pre-loop task produces data every iteration consumes (paper: 'dependency
     of the loop iteration on one or more outside tasks')."""
-    pre_out = 0x20
-    lines = [
-        _task("fft_256", 0x10, 4, pre_out, 4, tid=0),      # long-latency producer
-        f"mov {OUT_BASE:x} 0 1 0 0 0 1 0",
-        f"mov {RSTRIDE:x} 0 2 0 0 0 1 0",
-        f"lbeg {iters:x} 4 0 0 0 0 0 0",
-    ]
-    body = [
-        _task("iir", pre_out, 4, 1, 4, tid=1, ctl=isa.CTL_OUT_INDIRECT),
-        "add 1 2 1 0 0 0 0 0",
-    ]
-    lines += body
-    lines.append(f"lend 0 4 {len(body):x} 0 0 0 0 0")
-    return Bench("loop_dependency", "\n".join(lines), {}, {})
+    p, frame = _mix_program("loop_dependency")
+    pre = p.task("fft_256", in_=frame, out=4, tid=0)    # long-latency producer
+    w = p.walker(stride=RSTRIDE, count=iters, name="out")
+    with p.loop(iters):
+        p.task("iir", in_=pre, out=w, out_size=4, tid=1)
+        w.advance()
+    return Bench.of(p)
 
 
-def _branch_bench(name: str, taken: bool, kind: int, n_each: int = 6) -> Bench:
+def _branch_bench(name: str, taken: bool, kind: str, n_each: int = 6) -> Bench:
     """Shared skeleton for the three branch benchmarks.
 
     Layout:   [optional producer task]
-              if <region> → @taken_block
+              if <region> → taken block
               <not-taken block: n_each tasks>     (speculated path)
-              jump @end
-              @taken_block: <n_each tasks>
-              @end: vector_max join
+              <taken block: n_each tasks>
+              vector_max join
     """
-    cond_region = 0x30
-    thr_reg = 2
-    ctl = kind | (isa.CND_GE << 2)         # taken iff mem[region] >= R[thr]
-    lines = [f"mov 5 0 {thr_reg:x} 0 0 0 1 0"]   # threshold = 5
-    effects: dict[int, int] = {}
-    mem_init: dict[int, int] = {}
-    if kind == isa.BR_BR:
+    p, frame = _mix_program(name)
+    thr = p.let(5, "thr")
+    cond = p.region(1, name="cond")
+    if kind == "bus":
         # producer the branch waits on (Bus-Read)
-        lines.append(_task("correlation", 0x10, 4, cond_region, 1, tid=0))
-        effects[cond_region] = 9 if taken else 1
+        p.task("correlation", in_=frame, out=cond, tid=0)
+        cond.effect(9 if taken else 1)
     else:
-        mem_init[cond_region] = 9 if taken else 1
-    lines.append(f"if {cond_region:x} {thr_reg:x} @taken 0 0 0 {ctl:x} 0")
-    for i in range(n_each):           # not-taken (fall-through, speculated) path
-        lines.append(_task(MIX[i % len(MIX)], 0x10, 4,
-                           OUT_BASE + i * RSTRIDE, 4, tid=i & 0xF))
-    lines.append("jump @end 0 0 0 0 0 0 0")
-    lines.append("@taken")
-    for i in range(n_each):           # taken path
-        lines.append(_task(MIX[(i + 3) % len(MIX)], 0x10, 4,
-                           OUT_BASE + (n_each + i) * RSTRIDE, 4, tid=i & 0xF))
-    lines.append("@end")
-    lines.append(_task("vector_max", 0x10, 4, 0x60, 1, tid=0xF))
-    return Bench(name, "\n".join(lines), mem_init, effects)
+        cond.init(9 if taken else 1)
+    br = p.branch(on=cond, cond=">=", thr=thr, kind=kind)
+    with br.not_taken():                 # fall-through, speculated path
+        for i in range(n_each):
+            p.task(MIX[i % len(MIX)], in_=frame, out=4, tid=i)
+    with br.taken():
+        for i in range(n_each):
+            p.task(MIX[(i + 3) % len(MIX)], in_=frame, out=4, tid=i)
+    p.task("vector_max", in_=frame, out=1, tid=0xF)
+    return Bench.of(p)
 
 
 def branch_taken_no_dep(n_each: int = 6) -> Bench:
-    return _branch_bench("branch_taken_no_dep", True, isa.BR_MR, n_each)
+    return _branch_bench("branch_taken_no_dep", True, "mem", n_each)
 
 
 def branch_not_taken_no_dep(n_each: int = 6) -> Bench:
-    return _branch_bench("branch_not_taken_no_dep", False, isa.BR_MR, n_each)
+    return _branch_bench("branch_not_taken_no_dep", False, "mem", n_each)
 
 
 def branch_taken_dependency(n_each: int = 6) -> Bench:
-    return _branch_bench("branch_taken_dependency", True, isa.BR_BR, n_each)
+    return _branch_bench("branch_taken_dependency", True, "bus", n_each)
+
+
+BAND_WORDS = 0x20      # per-band region footprint of the audio pipeline
 
 
 def audio_compression(bands: int = 8, time_domain: bool = False) -> Bench:
@@ -196,56 +182,42 @@ def audio_compression(bands: int = 8, time_domain: bool = False) -> Bench:
     Branch kind: BR (the condition value is produced by the correlation task).
     Speculation predicts not-taken = frequency domain, so ``time_domain=True``
     is the mis-speculated variant (paper Fig 9 'BT').
+
+    Both arms process the same band span (only one arm ever runs), so the
+    per-band space is allocated once and walked by each arm's own pointer.
     """
-    corr_out = 0x20
-    thr_reg = 2
-    ctl = isa.BR_BR | (isa.CND_GE << 2)
-    lines = [
-        _task("correlation", 0x10, 4, corr_out, 1, tid=0),   # "Correlate audio"
-        f"mov 5 0 {thr_reg:x} 0 0 0 1 0",                    # threshold
-        f"if {corr_out:x} {thr_reg:x} @time 0 0 0 {ctl:x} 0",
+    p = Program(f"audio_compression_{'bt' if time_domain else 'bnt'}")
+    frame = p.input(INPUT, INPUT_WORDS, "audio")
+    corr = p.task("correlation", in_=frame, out=1, tid=0)   # "Correlate audio"
+    corr.out.effect(9 if time_domain else 1)
+    thr = p.let(5, "thr")
+    bandspace = p.region(bands * BAND_WORDS, name="bands")
+
+    br = p.branch(on=corr.out, cond=">=", thr=thr, kind="bus")
+    with br.not_taken():
         # ---- frequency domain (fall-through / speculated path) ----
-        f"mov {OUT_BASE:x} 0 1 0 0 0 1 0",     # r1: band base
-        f"mov 20 0 3 0 0 0 1 0",               # r3: band stride (0x20)
-        f"lbeg {bands:x} 4 0 0 0 0 0 0",
-    ]
-    freq_body = [
-        # r5 = fft out = r1+8 ; r6 = dot out = r1+16 ; r7 = ifft out = r1+24
-        "mov 1 0 5 0 0 0 0 0", "mov 8 0 8 0 0 0 1 0", "add 5 8 5 0 0 0 0 0",
-        "mov 1 0 6 0 0 0 0 0", "mov 10 0 8 0 0 0 1 0", "add 6 8 6 0 0 0 0 0",
-        "mov 1 0 7 0 0 0 0 0", "mov 18 0 8 0 0 0 1 0", "add 7 8 7 0 0 0 0 0",
-        f"fft_256 1 4 5 4 1 0 {isa.CTL_IN_INDIRECT | isa.CTL_OUT_INDIRECT:x} 0",
-        f"vector_dot 5 4 6 1 2 0 {isa.CTL_IN_INDIRECT | isa.CTL_OUT_INDIRECT:x} 0",
-        f"vector_dot 5 4 6 1 3 0 {isa.CTL_IN_INDIRECT | isa.CTL_OUT_INDIRECT:x} 0",
-        f"vector_dot 5 4 6 1 4 0 {isa.CTL_IN_INDIRECT | isa.CTL_OUT_INDIRECT:x} 0",
-        f"fft_256 6 4 7 4 5 0 {isa.CTL_IN_INDIRECT | isa.CTL_OUT_INDIRECT:x} 0",
-        "add 1 3 1 0 0 0 0 0",
-    ]
-    lines += freq_body
-    lines.append(f"lend 0 4 {len(freq_body):x} 0 0 0 0 0")
-    lines.append("jump @end 0 0 0 0 0 0 0")
-    # ---- time domain (taken path) ----
-    lines.append("@time")
-    lines += [
-        f"mov {OUT_BASE:x} 0 1 0 0 0 1 0",
-        f"mov 20 0 3 0 0 0 1 0",
-        f"lbeg {bands:x} 4 0 0 0 0 0 0",
-    ]
-    time_body = [
-        "mov 1 0 5 0 0 0 0 0", "mov 8 0 8 0 0 0 1 0", "add 5 8 5 0 0 0 0 0",
-        "mov 1 0 6 0 0 0 0 0", "mov 10 0 8 0 0 0 1 0", "add 6 8 6 0 0 0 0 0",
-        "mov 1 0 7 0 0 0 0 0", "mov 18 0 8 0 0 0 1 0", "add 7 8 7 0 0 0 0 0",
-        f"real_fir 1 4 5 4 1 0 {isa.CTL_IN_INDIRECT | isa.CTL_OUT_INDIRECT:x} 0",
-        f"real_fir 1 4 6 4 2 0 {isa.CTL_IN_INDIRECT | isa.CTL_OUT_INDIRECT:x} 0",
-        f"real_fir 1 4 7 4 3 0 {isa.CTL_IN_INDIRECT | isa.CTL_OUT_INDIRECT:x} 0",
-        "add 1 3 1 0 0 0 0 0",
-    ]
-    lines += time_body
-    lines.append(f"lend 0 4 {len(time_body):x} 0 0 0 0 0")
-    lines.append("@end")
-    effects = {corr_out: 9 if time_domain else 1}
-    name = f"audio_compression_{'bt' if time_domain else 'bnt'}"
-    return Bench(name, "\n".join(lines), {}, effects)
+        w = p.walker(start=bandspace.addr, stride=BAND_WORDS, name="band")
+        with p.loop(bands):
+            fft_o = w.offset(0x8)
+            dot_o = w.offset(0x10)
+            ifft_o = w.offset(0x18)
+            p.task("fft_256", in_=w, out=fft_o, in_size=4, out_size=4, tid=1)
+            for j in range(3):
+                p.task("vector_dot", in_=fft_o, out=dot_o, in_size=4,
+                       out_size=1, tid=2 + j)
+            p.task("fft_256", in_=dot_o, out=ifft_o, in_size=4, out_size=4,
+                   tid=5)
+            w.advance()
+    with br.taken():
+        # ---- time domain ----
+        w = p.walker(start=bandspace.addr, stride=BAND_WORDS, name="band")
+        with p.loop(bands):
+            outs = [w.offset(k) for k in (0x8, 0x10, 0x18)]
+            for j, o in enumerate(outs):
+                p.task("real_fir", in_=w, out=o, in_size=4, out_size=4,
+                       tid=1 + j)
+            w.advance()
+    return Bench.of(p)
 
 
 SYNTHETIC_NO_BRANCH = (no_dependency, same_dependency, diff_dependency,

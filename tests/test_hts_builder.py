@@ -1,0 +1,331 @@
+"""Program Builder + hts facade: region allocator safety, lowering identity
+against hand-written assembly (paper §V-B), graph-level interleave ordering,
+builder→encode→decode→disassemble→reassemble round-trips, and jax/golden
+backend agreement through ``hts.run``."""
+import dataclasses
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hts
+from repro.core.hts import assembler, costs, golden, isa
+from repro.core.hts.builder import BuilderError, Program
+
+
+# ---------------------------------------------------------------------------
+# region allocator
+# ---------------------------------------------------------------------------
+def test_region_allocator_never_overlaps():
+    p = Program("alloc")
+    regions = [p.input(0x10, 4)]
+    regions += [p.region(sz) for sz in (4, 1, 16, 3, 8, 100, 1)]
+    regions.append(p.region(4, at=0x40))          # explicit hole
+    regions += [p.region(sz) for sz in (64, 2)]   # keeps allocating past it
+    w = p.walker(stride=8, count=4)               # reserves 32 words
+    regions += [p.region(8), p.region(1)]
+    spans = sorted((r.addr, r.end) for r in regions)
+    spans.append((w.start, w.start + 4 * 8))
+    spans.sort()
+    for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+        assert e1 <= s2, f"live regions overlap: [{s1:#x},{e1:#x}) vs " \
+                         f"[{s2:#x},{e2:#x})"
+
+
+def test_region_explicit_overlap_raises():
+    p = Program("clash")
+    p.region(8, at=0x100)
+    with pytest.raises(BuilderError, match="overlaps live region"):
+        p.region(4, at=0x104)
+    with pytest.raises(BuilderError, match="overlaps live region"):
+        p.input(0xFC, 8)
+    # sub-regions are views, not new reservations — and are bounds-checked
+    r = p.region(8)
+    assert r.sub(2, 4).addr == r.addr + 2
+    with pytest.raises(BuilderError):
+        r.sub(6, 4)
+
+
+def test_region_images_attach():
+    p = Program("img")
+    r = p.region(4)
+    r.init([1, 2], offset=1)
+    r.effect(9)
+    assert p.mem_init == {r.addr + 1: 1, r.addr + 2: 2}
+    assert p.effects == {r.addr: 9}
+    with pytest.raises(BuilderError):
+        r.init([1, 2, 3], offset=2)               # image exceeds region
+
+
+# ---------------------------------------------------------------------------
+# lowering identity vs hand-written assembly
+# ---------------------------------------------------------------------------
+def test_builder_matches_paper_vb_example():
+    """The §V-B independent-nodes listing, typed vs hand-assembled."""
+    p = Program("vb")
+    layout = [("real_fir", 0x10, 2, 0x13, 2), ("complex_fir", 0x16, 2, 0x19, 2),
+              ("adaptive_fir", 0x23, 3, 0x28, 3), ("vector_dot", 0x40, 4, 0x48, 4),
+              ("iir", 0x32, 3, 0x36, 3)]
+    for tid, (func, a, asz, b, bsz) in enumerate(layout):
+        p.task(func, in_=p.input(a, asz), out=p.region(bsz, at=b), tid=tid)
+    hand = """\
+real_fir 10 2 13 2 0 0 0 0000
+complex_fir 16 2 19 2 1 0 0 0000
+adaptive_fir 23 3 28 3 2 0 0 0000
+vector_dot 40 4 48 4 3 0 0 0000
+iir 32 3 36 3 4 0 0 0000"""
+    assert np.array_equal(p.build().code, assembler.assemble(hand))
+
+
+def test_loop_context_matches_hand_asm():
+    """``with p.loop(n):`` + walker lowers to the exact mov/lbeg/lend idiom
+    of the paper's loop example (machine-code identity)."""
+    p = Program("loop")
+    frame = p.input(0x10, 4)
+    w = p.walker(stride=8, count=4)
+    with p.loop(4):
+        p.task("iir", in_=frame, out=w, out_size=4, tid=1)
+        w.advance()
+    hand = """\
+mov 100 0 1 0 0 0 1 0    # r1 = walking out base (imm)
+mov 8 0 2 0 0 0 1 0      # r2 = stride (imm)
+lbeg 4 3 0 0 0 0 0 0     # r3 = 4 iterations
+iir 10 4 1 4 1 0 2 0     # out indirect via r1
+add 1 2 1 0 0 0 0 0      # r1 += r2
+lend 0 3 2 0 0 0 0 0     # loop back over 2-instr body
+"""
+    assert np.array_equal(p.build().code, assembler.assemble(hand))
+
+
+def test_branch_context_matches_hand_asm():
+    """``p.branch`` lowers to if/fall-through/jump exactly as hand-written
+    label assembly (machine-code identity, incl. offsets)."""
+    p = Program("br")
+    frame = p.input(0x10, 4)
+    thr = p.let(5)
+    corr = p.task("correlation", in_=frame, out=1, tid=0)
+    br = p.branch(on=corr.out, cond=">=", thr=thr, kind="bus")
+    with br.not_taken():
+        p.task("real_fir", in_=frame, out=4, tid=1)
+    with br.taken():
+        p.task("dct", in_=frame, out=4, tid=2)
+    p.task("vector_max", in_=frame, out=1, tid=3)
+    hand = """\
+mov 5 0 1 0 0 0 1 0
+correlation 10 4 100 1 0 0 0 0
+if 100 1 @taken 0 0 0 a 0      ; BR kind, GE cond -> ctl 0xa
+real_fir 10 4 108 4 1 0 0 0
+jump @end 0 0 0 0 0 0 0
+@taken
+dct 10 4 110 4 2 0 0 0
+@end
+vector_max 10 4 118 1 3 0 0 0
+"""
+    assert np.array_equal(p.build().code, assembler.assemble(hand))
+
+
+def test_builder_asm_reassembles_identically():
+    """BuiltProgram.asm is paper-fidelity text: assembling it reproduces the
+    builder's own machine code for every library benchmark."""
+    from repro.core.hts import programs
+    for bench in programs.all_benches():
+        built = bench.program.build()
+        assert np.array_equal(assembler.assemble(built.asm), built.code), \
+            bench.name
+
+
+# ---------------------------------------------------------------------------
+# interleave
+# ---------------------------------------------------------------------------
+def _chain(name, funcs, pid, base):
+    p = Program(name, region_base=base)
+    frame = p.input(base - 0x10, 4)
+    with p.process(pid):
+        prev = frame
+        for i, f in enumerate(funcs):
+            prev = p.task(f, in_=prev, out=4, in_size=4, tid=i)
+    return p
+
+
+def test_interleave_preserves_per_process_order():
+    a_funcs = ["fft_256", "vector_dot", "iir", "real_fir"]
+    b_funcs = ["dct", "vector_max", "correlation"]
+    a = _chain("a", a_funcs, pid=1, base=0x100)
+    b = _chain("b", b_funcs, pid=2, base=0x400)
+    merged = a.interleave(b).build()
+    by_pid = {1: [], 2: []}
+    for ins in merged.instrs:
+        assert ins.op == isa.OP_TASK
+        by_pid[ins.pid].append(costs.FUNC_NAMES[ins.acc])
+    assert by_pid[1] == a_funcs      # per-process program order intact
+    assert by_pid[2] == b_funcs
+    # and the *dependencies* stay within each process after scheduling
+    r = golden.run(merged.code, costs.costs_by_name("hts_spec"),
+                   golden.HtsParams(n_fu=(2,) * 10))
+    pid_of_uid = {uid: ins.pid
+                  for uid, ins in enumerate(merged.instrs, start=1)}
+    for t in r.tasks:
+        if t.dep_uid:
+            assert pid_of_uid[t.dep_uid] == pid_of_uid[t.uid]
+
+
+def test_interleave_structured_nodes_stay_atomic():
+    """A whole loop interleaves as one unit — the old asm-line splice tore
+    lbeg/lend apart and silently corrupted offsets."""
+    a = Program("a", region_base=0x100)
+    fa = a.input(0x10, 4)
+    w = a.walker(stride=8, count=4)
+    with a.loop(4):
+        a.task("iir", in_=fa, out=w, out_size=4, tid=1)
+        w.advance()
+    b = Program("b", region_base=0x400)
+    fb = b.input(0x20, 4)
+    with b.process(1):
+        for i in range(3):
+            b.task("dct", in_=fb, out=4, tid=i)
+    merged = a.interleave(b).build()
+    ops = [ins.op for ins in merged.instrs]
+    lbeg, lend = ops.index(isa.OP_LBEG), ops.index(isa.OP_LEND)
+    body = merged.instrs[lbeg + 1:lend]
+    assert all(i.pid == 0 for i in body if i.op == isa.OP_TASK), \
+        "foreign task spliced inside the loop body"
+    assert merged.instrs[lend].b == lend - (lbeg + 1)   # back-offset intact
+    # and it actually runs to completion on both backends with equal schedules
+    rj = hts.run(merged, n_fu=2)
+    rg = hts.run(merged, n_fu=2, backend="golden")
+    assert rj.schedule == rg.schedule
+    assert rj.n_tasks == 4 + 3
+
+
+def test_interleave_overlapping_regions_raise():
+    a = _chain("a", ["iir"], pid=0, base=0x100)
+    b = _chain("b", ["dct"], pid=1, base=0x100)     # same region space!
+    with pytest.raises(BuilderError, match="overlaps"):
+        a.interleave(b)
+
+
+# ---------------------------------------------------------------------------
+# round-trip property: builder → encode → decode → disassemble → reassemble
+# ---------------------------------------------------------------------------
+@st.composite
+def built_programs(draw):
+    p = Program("prop")
+    frame = p.input(0x10, 4)
+    sources = [frame]
+    for i in range(draw(st.integers(1, 8))):
+        func = draw(st.sampled_from(sorted(costs.FUNC_IDS)))
+        src = sources[draw(st.integers(0, len(sources) - 1))]
+        sources.append(p.task(func, in_=src, out=4, in_size=4,
+                              tid=draw(st.integers(0, 15)),
+                              pid=draw(st.integers(0, 3))))
+    if draw(st.booleans()):
+        w = p.walker(stride=8, count=4)
+        with p.loop(draw(st.integers(1, 4))):
+            p.task(draw(st.sampled_from(sorted(costs.FUNC_IDS))),
+                   in_=frame, out=w, out_size=4, tid=1)
+            w.advance()
+    if draw(st.booleans()):
+        cond = p.region(1, name="cond").init(draw(st.integers(0, 9)))
+        br = p.branch(on=cond, cond=draw(st.sampled_from(list("== != >= <=".split()))),
+                      thr=5, kind=draw(st.sampled_from(["mem", "bus"])))
+        with br.not_taken():
+            p.task("real_fir", in_=frame, out=4, tid=1)
+        if draw(st.booleans()):
+            with br.taken():
+                p.task("dct", in_=frame, out=4, tid=2)
+    return p.build()
+
+
+@settings(max_examples=30, deadline=None)
+@given(built_programs())
+def test_builder_roundtrip_identity(built):
+    # encode → decode is the identity on instruction records
+    decoded = isa.decode_program(built.code)
+    assert list(decoded) == list(built.instrs)
+    assert np.array_equal(isa.encode_program(decoded), built.code)
+    # disassemble → reassemble is the identity on machine code
+    asm = built.asm
+    assert np.array_equal(assembler.assemble(asm, built.keynames), built.code)
+    # isa-level disassembly and Instr.__str__ agree line-by-line
+    assert isa.disassemble(built.code).splitlines() == \
+        [str(i) for i in decoded]
+
+
+# ---------------------------------------------------------------------------
+# the hts.run / hts.sweep facade
+# ---------------------------------------------------------------------------
+def _load_quickstart():
+    path = pathlib.Path(__file__).parent.parent / "examples" / "quickstart.py"
+    spec = importlib.util.spec_from_file_location("quickstart_example", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_quickstart_backends_agree():
+    """Acceptance: backend="golden" and backend="jax" execute the quickstart
+    program with identical schedules."""
+    program = _load_quickstart().build_program()
+    rj = hts.run(program, scheduler="hts_spec", n_fu=2, backend="jax")
+    rg = hts.run(program, scheduler="hts_spec", n_fu=2, backend="golden")
+    assert rj.schedule == rg.schedule
+    assert rj.cycles == rg.cycles
+    assert rj.schedule_tuple() == rg.schedule_tuple()
+    assert 0.0 < rj.utilization <= 1.0
+    assert rj.utilization == pytest.approx(rg.utilization)
+    naive = hts.run(program, scheduler="naive", n_fu=2)
+    assert rj.speedup_vs(naive) > 1.0
+    assert "fft_256" in rj.table()
+
+
+def test_run_accepts_every_program_form():
+    bench = __import__("repro.core.hts.programs",
+                       fromlist=["x"]).no_dependency(6)
+    via_bench = hts.run(bench, n_fu=2)
+    via_program = hts.run(bench.program, n_fu=2)
+    via_asm = hts.run(bench.asm, n_fu=2)
+    via_code = hts.run(assembler.assemble(bench.asm), n_fu=2)
+    assert (via_bench.cycles == via_program.cycles == via_asm.cycles
+            == via_code.cycles)
+    with pytest.raises(TypeError):
+        hts.run(12345)
+
+
+def test_run_unhalted_raises_named_error():
+    bench = __import__("repro.core.hts.programs",
+                       fromlist=["x"]).no_dependency(6)
+    with pytest.raises(hts.SimulationError) as ei:
+        hts.run(bench, scheduler="naive", n_fu=1, max_cycles=10)
+    msg = str(ei.value)
+    assert "no_dependency" in msg and "naive" in msg
+    partial = hts.run(bench, scheduler="naive", n_fu=1, max_cycles=10,
+                      check=False)
+    assert not partial.halted
+
+
+def test_sweep_matches_pointwise_run():
+    bench = __import__("repro.core.hts.programs",
+                       fromlist=["x"]).no_dependency(12)
+    sw = hts.sweep(bench, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"))
+    assert sw.schedulers == ("naive", "hts_spec")
+    cyc = sw.cycles["hts_spec"]
+    assert (cyc[0] >= cyc[1]).all() if hasattr(cyc[0], "all") \
+        else cyc[0] >= cyc[1] >= cyc[2]
+    for i, k in enumerate((1, 2, 4)):
+        solo = hts.run(bench, scheduler="hts_spec", n_fu=k, max_prog=64)
+        assert solo.cycles == int(cyc[i])
+    speedup = sw.speedup("hts_spec", "naive")
+    assert (speedup >= 1.0).all()
+    assert "strong scaling" in sw.table()
+
+
+def test_run_with_cost_object_and_per_class_n_fu():
+    bench = __import__("repro.core.hts.programs",
+                       fromlist=["x"]).no_dependency(6)
+    c = dataclasses.replace(costs.hts_costs(True), issue_width=1)
+    r = hts.run(bench, scheduler=c, n_fu=(1,) * 10)
+    assert r.scheduler == "hts_spec" and r.halted
+    with pytest.raises(ValueError):
+        hts.run(bench, n_fu=(1, 2))                 # wrong class count
