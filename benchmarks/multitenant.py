@@ -1,0 +1,125 @@
+"""Multi-tenant sharing benchmark: tenant mixes × FU counts.
+
+For each tenant-count point a seeded scenario (``core/hts/workloads.py``) is
+run shared (N-way merged, one HTS) and solo (each tenant alone on the same
+pool), producing the metrics the paper's single global makespan hides:
+
+* per-app makespan — when each tenant's last task completed under sharing;
+* fairness — per-app slowdown vs its solo run, and the max across tenants;
+* sharing gain — serial (sum of solos) over shared cycles;
+
+plus the ``hts.sweep`` strong-scaling trajectory of every merged program
+(one compiled machine per scheduler, FU axis ``vmap``-batched).
+
+    PYTHONPATH=src python -m benchmarks.multitenant          # writes JSON
+    PYTHONPATH=src python -m benchmarks.multitenant --tenants 2,4,8 --fu 1,2,4
+
+The JSON lands in ``BENCH_multitenant.json`` (repo root by default).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from repro.core import hts
+from repro.core.hts import workloads
+
+DEFAULT_TENANTS = (2, 4, 6, 8)
+DEFAULT_FU = (1, 2, 4)
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_multitenant.json"
+
+
+def bench_point(n_tenants: int, *, seed: int = 0, fu_points=DEFAULT_FU,
+                scheduler: str = "hts_spec") -> dict:
+    """One tenant-count point: shared vs solo at every FU count + sweep."""
+    sc = workloads.generate_scenario(seed * 100 + n_tenants,
+                                     n_tenants=n_tenants)
+    point: dict = {"n_tenants": n_tenants, "seed": sc.seed,
+                   "scenario": sc.name, "scheduler": scheduler, "fu": {}}
+    for n_fu in fu_points:
+        t0 = time.perf_counter()
+        shared = hts.run(sc.merged, scheduler=scheduler, n_fu=n_fu)
+        solos = workloads.solo_results(sc, scheduler=scheduler, n_fu=n_fu)
+        fair = shared.fairness(solos)
+        serial = sum(r.cycles for r in solos.values())
+        point.setdefault("n_tasks", {str(p): len(r)
+                                     for p, r in shared.by_pid().items()})
+        point["fu"][str(n_fu)] = {
+            "shared_cycles": shared.cycles,
+            "serial_cycles": serial,
+            "sharing_gain": serial / shared.cycles,
+            "utilization": shared.utilization,
+            "per_app_makespan": {str(p): shared.app_makespan(p)
+                                 for p in sc.pids},
+            "solo_cycles": {str(p): solos[p].cycles for p in sc.pids},
+            "slowdowns": {str(p): s for p, s in fair.slowdowns.items()},
+            "max_slowdown": fair.max_slowdown,
+            "mean_slowdown": fair.mean_slowdown,
+            "wall_us": (time.perf_counter() - t0) * 1e6,
+        }
+    sw = hts.sweep(sc.merged, n_fu=fu_points,
+                   schedulers=("naive", "hts_spec"), max_prog=256)
+    point["sweep"] = {
+        "n_fu": [list(p) for p in sw.n_fu_list],
+        "cycles": {s: [int(c) for c in sw.cycles[s]] for s in sw.schedulers},
+        "speedup_hts_vs_naive": [float(x)
+                                 for x in sw.speedup("hts_spec", "naive")],
+    }
+    return point
+
+
+def trajectory(tenants=DEFAULT_TENANTS, fu_points=DEFAULT_FU,
+               scheduler: str = "hts_spec", seed: int = 0) -> dict:
+    return {
+        "bench": "multitenant",
+        "scheduler": scheduler,
+        "fu_points": list(fu_points),
+        "points": [bench_point(n, seed=seed, fu_points=fu_points,
+                               scheduler=scheduler) for n in tenants],
+    }
+
+
+def section():
+    """``benchmarks.run`` integration: (name, us, derived) rows."""
+    rows = []
+    for n in (2, 4, 8):
+        t0 = time.perf_counter()
+        point = bench_point(n, fu_points=(2,))
+        us = (time.perf_counter() - t0) * 1e6
+        fu2 = point["fu"]["2"]
+        rows.append((f"multitenant/tenants{n}/fu2", us, {
+            "sharing_gain": fu2["sharing_gain"],
+            "max_slowdown": fu2["max_slowdown"],
+            "utilization": fu2["utilization"],
+        }))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tenants", default=",".join(map(str, DEFAULT_TENANTS)),
+                    help="comma-separated tenant counts")
+    ap.add_argument("--fu", default=",".join(map(str, DEFAULT_FU)),
+                    help="comma-separated FU counts per class")
+    ap.add_argument("--scheduler", default="hts_spec")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args()
+    tenants = tuple(int(x) for x in args.tenants.split(","))
+    fu_points = tuple(int(x) for x in args.fu.split(","))
+    data = trajectory(tenants, fu_points, args.scheduler, args.seed)
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(data, indent=2, default=float) + "\n")
+    print(f"wrote {out}")
+    for p in data["points"]:
+        fu_max = p["fu"][str(fu_points[-1])]
+        print(f"  tenants={p['n_tenants']:<2} gain={fu_max['sharing_gain']:.2f} "
+              f"max_slowdown={fu_max['max_slowdown']:.2f} "
+              f"util={fu_max['utilization']:.1%}")
+
+
+if __name__ == "__main__":
+    main()

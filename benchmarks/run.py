@@ -10,7 +10,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from benchmarks import extensions, paper_figs
+from benchmarks import extensions, multitenant, paper_figs
 
 SECTIONS = {
     "tableII": paper_figs.table2,
@@ -19,6 +19,7 @@ SECTIONS = {
     "fig9": paper_figs.fig9,
     "fig10": paper_figs.fig10,
     "multiapp": extensions.multi_app_sharing,
+    "multitenant": multitenant.section,
     "ablation": extensions.design_ablation,
 }
 

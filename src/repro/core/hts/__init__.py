@@ -5,9 +5,13 @@ Public surface (the rest of the repo goes through this):
 * :class:`Program` / :class:`Region` / :class:`Reg` — the typed
   Program-Builder front-end (``builder.py``): tasks, regions, loops,
   branches, processes, lowered to the 128-bit Table-I ISA.
-* :func:`run` / :func:`sweep` — the unified simulation facade (``api.py``)
-  over the compiled JAX machine (``machine.py``) and the pure-Python golden
-  oracle (``golden.py``).
+* :func:`run` / :func:`sweep` / :func:`compare` — the unified simulation
+  facade (``api.py``) over the compiled JAX machine (``machine.py``) and the
+  pure-Python golden oracle (``golden.py``); ``compare`` is the differential
+  runner (golden ≡ machine, event-skip on and off, per scheduler).
+* multi-tenant: :meth:`Program.merge` (N-way graph merge with isolation
+  checks), ``workloads.py`` (seeded scenario generator), per-pid
+  :class:`Result` metrics (``by_pid``/``app_makespan``/``fairness``).
 
     >>> from repro.core import hts
     >>> p = hts.Program("demo")
@@ -17,18 +21,21 @@ Public surface (the rest of the repo goes through this):
     >>> print(hts.run(p, scheduler="hts_spec", n_fu=2).table())
 
 Lower layers remain importable directly (``isa``, ``assembler``, ``costs``,
-``golden``, ``machine``, ``programs``, ``multiapp``) for tests and tools.
+``golden``, ``machine``, ``programs``, ``multiapp``, ``workloads``) for
+tests and tools.
 """
-from .api import (ALL_SCHEDULERS, Result, SimulationError, SweepResult,
-                  TaskRow, run, sweep)
+from .api import (ALL_SCHEDULERS, CompareReport, FairnessReport,
+                  MismatchError, Result, SimulationError, SweepResult,
+                  TaskRow, compare, run, sweep)
 from .builder import (BuilderError, BuiltProgram, Program, Reg, Region,
                       TaskHandle, Walker)
 from .costs import SchedulerCosts, costs_by_name
 from .golden import HtsParams
 
 __all__ = [
-    "ALL_SCHEDULERS", "BuilderError", "BuiltProgram", "HtsParams", "Program",
-    "Reg", "Region", "Result", "SchedulerCosts", "SimulationError",
-    "SweepResult", "TaskHandle", "TaskRow", "Walker", "costs_by_name",
-    "run", "sweep",
+    "ALL_SCHEDULERS", "BuilderError", "BuiltProgram", "CompareReport",
+    "FairnessReport", "HtsParams", "MismatchError", "Program", "Reg",
+    "Region", "Result", "SchedulerCosts", "SimulationError", "SweepResult",
+    "TaskHandle", "TaskRow", "Walker", "compare", "costs_by_name", "run",
+    "sweep",
 ]

@@ -27,6 +27,16 @@ Both return the same :class:`Result` with identical per-task schedule rows
 ``sweep`` wraps the machine's ``vmap`` path: one compiled machine per
 scheduler, the FU-configuration axis batched — the Fig-10 strong-scaling
 experiment as a single call.
+
+``compare`` is the differential runner: golden oracle vs the compiled
+machine with event-skip on *and* off, per scheduler, schedule-tuple
+equality asserted — the workhorse behind the seeded multi-tenant fuzzer
+(``workloads.py`` / tests/test_hts_multitenant.py).
+
+Multi-tenant metrics live on :class:`Result`: ``by_pid()`` /
+``schedule_for`` slice the schedule by owning process, ``app_makespan``
+is one tenant's finish cycle, and ``fairness`` reports per-tenant
+slowdown vs solo runs (max slowdown = the fairness figure of merit).
 """
 from __future__ import annotations
 
@@ -61,6 +71,8 @@ class _Prepared:
 
 def _prepare(program) -> _Prepared:
     """Accept Program | BuiltProgram | Bench-like | asm text | code array."""
+    if isinstance(program, _Prepared):
+        return program
     if isinstance(program, Program):
         program = program.build()
     if isinstance(program, BuiltProgram):
@@ -109,6 +121,7 @@ class TaskRow:
     complete: int
     broadcast: int
     aborted: bool
+    pid: int = 0                 # owning process (multi-tenant accounting)
 
     @property
     def func_name(self) -> str:
@@ -116,7 +129,7 @@ class TaskRow:
 
     def astuple(self) -> tuple:
         return (self.uid, self.func, self.dispatch, self.issue,
-                self.complete, self.broadcast, self.aborted)
+                self.complete, self.broadcast, self.aborted, self.pid)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,18 +168,80 @@ class Result:
         """Canonical rows, comparable across backends."""
         return [row.astuple() for row in self.schedule]
 
+    # ------------------------------------------------- multi-tenant metrics
+    @property
+    def pids(self) -> tuple[int, ...]:
+        """Process ids present in the schedule, ascending."""
+        return tuple(sorted({row.pid for row in self.schedule}))
+
+    def by_pid(self) -> dict[int, tuple[TaskRow, ...]]:
+        """Per-process schedule slices (each app's rows, uid order)."""
+        out: dict[int, list[TaskRow]] = {}
+        for row in self.schedule:
+            out.setdefault(row.pid, []).append(row)
+        return {pid: tuple(rows) for pid, rows in sorted(out.items())}
+
+    def schedule_for(self, pid: int) -> tuple[TaskRow, ...]:
+        """The schedule rows owned by process ``pid``."""
+        return tuple(row for row in self.schedule if row.pid == pid)
+
+    def app_makespan(self, pid: int) -> int:
+        """Completion cycle of ``pid``'s last non-aborted task (0 if none).
+
+        The per-application makespan under sharing: how long *this tenant*
+        waited, regardless of when the other tenants drained.
+        """
+        done = [row.complete for row in self.schedule
+                if row.pid == pid and not row.aborted and row.complete >= 0]
+        return max(done, default=0)
+
+    def fairness(self, solo: "dict[int, Result]") -> "FairnessReport":
+        """Slowdown of each tenant vs its solo run on the same pool.
+
+        ``solo`` maps pid → the tenant's standalone :class:`Result`.
+        Slowdown(pid) = shared app makespan / solo makespan (≥ ~1.0; large
+        values mean the scheduler starves that tenant).  ``max_slowdown`` is
+        the fairness figure of merit (Fusco et al. 2022 use the same metric
+        for hardware-HEFT workloads).
+        """
+        slowdowns = {}
+        for pid, solo_res in sorted(solo.items()):
+            base = solo_res.app_makespan(pid) or solo_res.cycles
+            shared = self.app_makespan(pid)
+            slowdowns[pid] = shared / base if base else float("inf")
+        return FairnessReport(
+            slowdowns=slowdowns,
+            max_slowdown=max(slowdowns.values(), default=0.0),
+            mean_slowdown=(sum(slowdowns.values()) / len(slowdowns)
+                           if slowdowns else 0.0))
+
     def table(self) -> str:
         """Human-readable per-task schedule."""
         lines = [f"{self.program} · {self.scheduler} · {self.backend} · "
                  f"{self.cycles} cycles · utilization "
                  f"{self.utilization:.1%}",
-                 f"{'uid':>4} {'function':<13} {'dispatch':>8} {'issue':>8} "
-                 f"{'complete':>9} {'broadcast':>9}"]
+                 f"{'uid':>4} {'pid':>3} {'function':<13} {'dispatch':>8} "
+                 f"{'issue':>8} {'complete':>9} {'broadcast':>9}"]
         for t in self.schedule:
             flag = "  (aborted)" if t.aborted else ""
-            lines.append(f"{t.uid:>4} {t.func_name:<13} {t.dispatch:>8} "
-                         f"{t.issue:>8} {t.complete:>9} {t.broadcast:>9}"
-                         f"{flag}")
+            lines.append(f"{t.uid:>4} {t.pid:>3} {t.func_name:<13} "
+                         f"{t.dispatch:>8} {t.issue:>8} {t.complete:>9} "
+                         f"{t.broadcast:>9}{flag}")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class FairnessReport:
+    """Per-tenant slowdown of a shared run vs each tenant's solo run."""
+    slowdowns: dict[int, float]         # pid → shared/solo makespan ratio
+    max_slowdown: float                 # fairness figure of merit
+    mean_slowdown: float
+
+    def table(self) -> str:
+        lines = [f"{'pid':>4} {'slowdown':>9}"]
+        for pid, s in sorted(self.slowdowns.items()):
+            lines.append(f"{pid:>4} {s:>9.3f}")
+        lines.append(f" max {self.max_slowdown:>9.3f}")
         return "\n".join(lines)
 
 
@@ -327,5 +402,91 @@ def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),
                        cycles=cycles, wall_us=wall)
 
 
-__all__ = ["run", "sweep", "Result", "SweepResult", "TaskRow",
+# ---------------------------------------------------------------------------
+# compare: differential runner (golden vs machine, event-skip on and off)
+# ---------------------------------------------------------------------------
+class MismatchError(AssertionError):
+    """Two backends produced different schedules for the same program."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CompareReport:
+    """Outcome of :func:`compare`: per-scheduler agreed-upon results.
+
+    ``results[scheduler]`` is the golden-backend :class:`Result` (the oracle;
+    the JAX machine runs — event-skip on *and* off — were verified
+    schedule-identical to it).  ``n_modes`` counts the executions per
+    scheduler (3: golden, jax+skip, jax-noskip).
+    """
+    program: str
+    schedulers: tuple[str, ...]
+    results: dict[str, Result]
+    n_modes: int = 3
+
+    def cycles(self, scheduler: str) -> int:
+        return self.results[scheduler].cycles
+
+
+def _first_diff(a: list[tuple], b: list[tuple]) -> str:
+    if len(a) != len(b):
+        return f"row counts differ: {len(a)} vs {len(b)}"
+    for i, (ra, rb) in enumerate(zip(a, b)):
+        if ra != rb:
+            return f"first differing row {i}: {ra} vs {rb}"
+    return "schedules equal"
+
+
+def compare(program, *,
+            schedulers: Sequence[Union[str, SchedulerCosts]] =
+            ("naive", "hts_nospec", "hts_spec"),
+            n_fu: Union[int, Sequence[int]] = 2,
+            params: HtsParams = HtsParams(),
+            max_cycles: int = 5_000_000, max_prog: int = 256,
+            max_fu_per_class: Optional[int] = None) -> CompareReport:
+    """Differential execution: golden oracle vs the compiled JAX machine with
+    event-skip **on and off**, for every scheduler cost model.
+
+    Raises :class:`MismatchError` (naming program, scheduler and mode) on the
+    first schedule-tuple or cycle-count disagreement; returns a
+    :class:`CompareReport` of the agreed results otherwise.  This is the
+    fuzzing workhorse: any scheduling-semantics divergence between the two
+    simulators — or between the event-skip fast path and the cycle-by-cycle
+    reference — surfaces as a mismatch on some generated scenario.
+    """
+    prep = _prepare(program)
+    fu = _norm_n_fu(n_fu)
+    if max_fu_per_class is None:
+        # size the compiled FU pool to the request: the no-event-skip runs
+        # tick every cycle, and per-cycle cost scales with the pool width
+        max_fu_per_class = max(4, max(fu))
+    results: dict[str, Result] = {}
+    names = []
+    for scheduler in schedulers:
+        cost = _norm_costs(scheduler)
+        names.append(cost.name)
+        g = run(prep, scheduler=cost, n_fu=fu, backend="golden",
+                params=params, max_cycles=max_cycles, max_prog=max_prog)
+        gold_rows = g.schedule_tuple()
+        for event_skip in (True, False):
+            m = run(prep, scheduler=cost, n_fu=fu, backend="jax",
+                    params=params, event_skip=event_skip,
+                    max_cycles=max_cycles, max_prog=max_prog,
+                    max_fu_per_class=max_fu_per_class)
+            mode = f"jax event_skip={'on' if event_skip else 'off'}"
+            if m.cycles != g.cycles:
+                raise MismatchError(
+                    f"{prep.name!r} under {cost.name!r}: {mode} ran "
+                    f"{m.cycles} cycles, golden ran {g.cycles}")
+            if m.schedule_tuple() != gold_rows:
+                raise MismatchError(
+                    f"{prep.name!r} under {cost.name!r}: {mode} schedule "
+                    f"differs from golden — "
+                    f"{_first_diff(m.schedule_tuple(), gold_rows)}")
+        results[cost.name] = g
+    return CompareReport(program=prep.name, schedulers=tuple(names),
+                         results=results)
+
+
+__all__ = ["run", "sweep", "compare", "Result", "SweepResult", "TaskRow",
+           "FairnessReport", "CompareReport", "MismatchError",
            "SimulationError", "ALL_SCHEDULERS"]

@@ -134,6 +134,43 @@ class TaskHandle:
 # ---------------------------------------------------------------------------
 # recorded nodes (internal)
 # ---------------------------------------------------------------------------
+def _walk_nodes(nodes):
+    """Yield every node in a block list, descending into loops/branches."""
+    for node in nodes:
+        yield node
+        if isinstance(node, _Loop):
+            yield from _walk_nodes(node.body)
+        elif isinstance(node, _Branch):
+            yield from _walk_nodes(node.taken)
+            yield from _walk_nodes(node.not_taken)
+
+
+def _collect_regs(nodes) -> set:
+    """All symbolic Reg objects referenced anywhere in a block tree."""
+    regs: set = set()
+    for node in _walk_nodes(nodes):
+        if isinstance(node, _Op):
+            for field in (node.a, node.asz, node.b):
+                if isinstance(field, Reg):
+                    regs.add(field)
+        elif isinstance(node, _Loop):
+            regs.add(node.counter)
+            if isinstance(node.count, Reg):
+                regs.add(node.count)
+        elif isinstance(node, _Branch):
+            regs.add(node.thr)
+            if isinstance(node.on, Reg):
+                regs.add(node.on)
+    return regs
+
+
+def _collect_pids(nodes) -> set:
+    """Process ids of every task emitted in a block tree."""
+    return {node.pid for node in _walk_nodes(nodes)
+            if isinstance(node, _Op) and node.op == isa.OP_TASK}
+
+
+
 @dataclasses.dataclass
 class _Op:
     """One flat instruction with possibly-symbolic (Reg) operands."""
@@ -506,41 +543,111 @@ class Program:
                 1 for i in instrs if i.op == isa.OP_TASK) else 0,
         )
 
-    # ------------------------------------------------------------ interleave
-    def interleave(self, other: "Program", name: str = "shared") -> "Program":
-        """Graph-level round-robin merge of two programs: two CPUs pushing
-        their task streams into the one Task Queue (pids mark the owners).
+    # --------------------------------------------------------------- merge
+    @classmethod
+    def merge(cls, programs: Sequence["Program"], name: str = "shared", *,
+              require_distinct_pids: bool = False) -> "Program":
+        """N-way graph-level round-robin merge: N CPUs pushing their task
+        streams into the one Task Queue (pids mark the owners) — the paper's
+        multi-application sharing scenario, for any tenant count.
 
         Structured nodes (a whole loop or branch) interleave atomically, so
         labels/offsets can never be torn apart — unlike merging assembly
-        text line-by-line.  Register spaces stay disjoint automatically
-        (registers are symbolic until ``build()``); region reservations are
-        checked for overlap.
+        text line-by-line.  Three per-process isolation properties are
+        checked up front:
+
+        * **memory regions** — every pair of written regions must be
+          disjoint; only *identical read-only input spans* (``Program.input``)
+          may be shared between tenants;
+        * **register spaces** — registers are symbolic until ``build()``, so
+          they cannot clobber each other; a :class:`Reg` object appearing in
+          two source programs (a truly shared register) is rejected, and the
+          combined register demand is checked against the GPR bank here
+          instead of failing late at ``build()``;
+        * **process ids** — with ``require_distinct_pids=True``, two tenants
+          emitting tasks under the same pid is an error (multi-tenant
+          accounting would silently merge their schedules).
         """
-        merged = Program(name, keynames={**self.keynames, **other.keynames},
-                         num_regs=max(self.num_regs, other.num_regs))
-        for (s, e, rn, wr) in self._reserved + other._reserved:
-            hit = merged._overlap(s, e)
-            shared_input = (hit is not None and not wr and not hit[3]
-                            and (hit[0], hit[1]) == (s, e))
-            if hit is not None and not shared_input:
-                raise BuilderError(
-                    f"interleave: region {rn!r} [{s:#x}, {e:#x}) of one "
-                    f"program overlaps {hit[2]!r} [{hit[0]:#x}, {hit[1]:#x}) "
-                    "of the other")
-            if hit is None:
-                merged._reserved.append((s, e, rn, wr))
-        la, lb = self._nodes, other._nodes
-        for i in range(max(len(la), len(lb))):
-            if i < len(la):
-                merged._nodes.append(la[i])
-            if i < len(lb):
-                merged._nodes.append(lb[i])
-        merged.mem_init = {**self.mem_init, **other.mem_init}
-        merged.effects = {**self.effects, **other.effects}
-        merged._n_tasks = self._n_tasks + other._n_tasks
+        programs = list(programs)
+        if not programs:
+            raise BuilderError("merge needs at least one program")
+        keynames: dict[str, int] = {}
+        for p in programs:
+            keynames.update(p.keynames)
+        merged = cls(name, keynames=keynames,
+                     num_regs=max(p.num_regs for p in programs))
+
+        # --- region isolation (identical read-only inputs may be shared)
+        for p in programs:
+            for (s, e, rn, wr) in p._reserved:
+                hit = merged._overlap(s, e)
+                shared_input = (hit is not None and not wr and not hit[3]
+                                and (hit[0], hit[1]) == (s, e))
+                if hit is not None and not shared_input:
+                    raise BuilderError(
+                        f"merge: region {rn!r} [{s:#x}, {e:#x}) of program "
+                        f"{p.name!r} overlaps {hit[2]!r} "
+                        f"[{hit[0]:#x}, {hit[1]:#x}) of another tenant")
+                if hit is None:
+                    merged._reserved.append((s, e, rn, wr))
+
+        # --- register isolation: no Reg object may span two tenants, and
+        # the union must fit the GPR bank (fail here, not at build())
+        seen: dict = {}
+        total_regs = 0
+        for p in programs:
+            regs = _collect_regs(p._nodes)
+            for r in regs:
+                if r in seen and seen[r] is not p:
+                    raise BuilderError(
+                        f"merge: register {r!r} is used by both "
+                        f"{seen[r].name!r} and {p.name!r} — tenants must "
+                        "own disjoint register sets")
+                seen[r] = p
+            total_regs += len(regs)
+        if total_regs >= merged.num_regs:
+            raise BuilderError(
+                f"merge: tenants need {total_regs} registers combined; only "
+                f"{merged.num_regs - 1} available")
+
+        # --- pid isolation (optional: multi-tenant accounting)
+        if require_distinct_pids:
+            owner: dict[int, "Program"] = {}
+            for p in programs:
+                for pid in _collect_pids(p._nodes):
+                    if pid in owner and owner[pid] is not p:
+                        raise BuilderError(
+                            f"merge: pid {pid} is used by both "
+                            f"{owner[pid].name!r} and {p.name!r}")
+                    owner[pid] = p
+
+        # --- round-robin splice of top-level nodes (structured nodes atomic)
+        streams = [p._nodes for p in programs]
+        for i in range(max(len(s) for s in streams)):
+            for s in streams:
+                if i < len(s):
+                    merged._nodes.append(s[i])
+        # image union: regions are disjoint except identical shared inputs,
+        # so a key conflict means two tenants seeded the shared span with
+        # different data — reject instead of silent last-writer-wins
+        for p in programs:
+            for which in ("mem_init", "effects"):
+                dst = getattr(merged, which)
+                for k, v in getattr(p, which).items():
+                    if k in dst and dst[k] != v:
+                        raise BuilderError(
+                            f"merge: conflicting {which} values at address "
+                            f"{k:#x} ({dst[k]} vs {v}, program {p.name!r}) "
+                            "— tenants sharing an input span must agree on "
+                            "its contents")
+                    dst[k] = v
+        merged._n_tasks = sum(p._n_tasks for p in programs)
         merged._scratch = None   # distinct Reg objects per source program
         return merged
+
+    def interleave(self, other: "Program", name: str = "shared") -> "Program":
+        """Two-way :meth:`merge` (kept for the original pairwise API)."""
+        return Program.merge([self, other], name)
 
 
 class BranchCtx:

@@ -82,6 +82,7 @@ class TaskRecord:
     dep_uid: int = 0
     is_spec: bool = False
     aborted: bool = False
+    pid: int = 0                # owning process (ISA pid field, multi-tenant)
 
 
 @dataclasses.dataclass
@@ -98,7 +99,7 @@ class Result:
     def schedule_tuple(self):
         """Canonical tuple for equivalence testing against the JAX machine."""
         return [(t.uid, t.func, t.dispatch_cycle, t.issue_cycle,
-                 t.complete_cycle, t.broadcast_cycle, t.aborted)
+                 t.complete_cycle, t.broadcast_cycle, t.aborted, t.pid)
                 for t in self.tasks]
 
 
@@ -361,7 +362,7 @@ def run(code: np.ndarray,
                             _dispatch_task(rs, tracker, by_uid, tasks, acc, dep,
                                            phys_out, phys_out + (out_e - out_s),
                                            out_s, next_uid, age_ctr, cycle,
-                                           self_spec)
+                                           self_spec, pid_)
                             next_uid += 1
                             age_ctr += 1
                             fe_wait = costs.dispatch_serial_cost - 1
@@ -369,7 +370,7 @@ def run(code: np.ndarray,
                     else:
                         _dispatch_task(rs, tracker, by_uid, tasks, acc, dep,
                                        out_s, out_e, out_s, next_uid, age_ctr,
-                                       cycle, False)
+                                       cycle, False, pid_)
                         next_uid += 1
                         age_ctr += 1
                         fe_wait = costs.dispatch_serial_cost - 1
@@ -445,7 +446,7 @@ def run(code: np.ndarray,
 
 
 def _dispatch_task(rs, tracker, by_uid, tasks, acc, dep, out_s, out_e, src_s,
-                   uid, age, cycle, is_spec):
+                   uid, age, cycle, is_spec, pid=0):
     """Shared dispatch bookkeeping (RS + tracker + trace)."""
     # WAW replacement: a new producer of an overlapping range supersedes
     # older tracker entries (strict paper mode would skip this; see DESIGN.md).
@@ -455,6 +456,6 @@ def _dispatch_task(rs, tracker, by_uid, tasks, acc, dep, out_s, out_e, src_s,
     rs.append(_RS(uid, acc, dep, age, out_s, out_e, src_s,
                   FUNC_CYCLES[acc], is_spec))
     rec = TaskRecord(uid=uid, func=acc, dispatch_cycle=cycle, dep_uid=dep,
-                     is_spec=is_spec)
+                     is_spec=is_spec, pid=pid)
     tasks.append(rec)
     by_uid[uid] = rec

@@ -105,7 +105,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
             tr_func=jnp.full((U,), NEG, I32), tr_dispatch=jnp.full((U,), NEG, I32),
             tr_issue=jnp.full((U,), NEG, I32), tr_complete=jnp.full((U,), NEG, I32),
             tr_broadcast=jnp.full((U,), NEG, I32), tr_dep=z(U),
-            tr_aborted=zb(U),
+            tr_aborted=zb(U), tr_pid=z(U),
         )
 
     # ------------------------------------------------------------------
@@ -454,6 +454,8 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
             jnp.where(dispatch, st["cycle"], st["tr_dispatch"][uidc]))
         st["tr_dep"] = st["tr_dep"].at[uidc].set(
             jnp.where(dispatch, dep, st["tr_dep"][uidc]))
+        st["tr_pid"] = st["tr_pid"].at[uidc].set(
+            jnp.where(dispatch, F["pid"][pcc], st["tr_pid"][uidc]))
         st["next_uid"] = st["next_uid"] + jnp.where(dispatch, 1, 0)
         st["age"] = st["age"] + jnp.where(dispatch, 1, 0)
         st["fe_wait"] = jnp.where(dispatch, c.dispatch_serial_cost - 1,
@@ -575,7 +577,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
             tr_func=st["tr_func"], tr_dispatch=st["tr_dispatch"],
             tr_issue=st["tr_issue"], tr_complete=st["tr_complete"],
             tr_broadcast=st["tr_broadcast"], tr_dep=st["tr_dep"],
-            tr_aborted=st["tr_aborted"],
+            tr_aborted=st["tr_aborted"], tr_pid=st["tr_pid"],
         )
 
     return run
@@ -631,5 +633,6 @@ def schedule_tuple(out: dict[str, Any]) -> list[tuple]:
     for uid in range(1, n + 1):
         rows.append((uid, int(out["tr_func"][uid]), int(out["tr_dispatch"][uid]),
                      int(out["tr_issue"][uid]), int(out["tr_complete"][uid]),
-                     int(out["tr_broadcast"][uid]), bool(out["tr_aborted"][uid])))
+                     int(out["tr_broadcast"][uid]), bool(out["tr_aborted"][uid]),
+                     int(out["tr_pid"][uid])))
     return rows

@@ -63,10 +63,19 @@ def audio_straightline(bands: int = 8) -> Bench:
     return Bench.of(p)
 
 
-def interleave(a: Bench, b: Bench, name: str = "shared") -> Bench:
-    """Round-robin merge of two applications' task streams (two CPUs pushing
+def merge(benches, name: str = "shared", *,
+          require_distinct_pids: bool = False) -> Bench:
+    """N-way round-robin merge of applications' task streams (N CPUs pushing
     into the one Task Queue; pids distinguish the owners) — performed on the
     program graphs, not on assembly text."""
-    if a.program is None or b.program is None:
-        raise ValueError("interleave needs builder-backed Bench objects")
-    return Bench.of(a.program.interleave(b.program, name))
+    benches = list(benches)
+    if any(b.program is None for b in benches):
+        raise ValueError("merge needs builder-backed Bench objects")
+    return Bench.of(Program.merge(
+        [b.program for b in benches], name,
+        require_distinct_pids=require_distinct_pids))
+
+
+def interleave(a: Bench, b: Bench, name: str = "shared") -> Bench:
+    """Two-way :func:`merge` (kept for the original pairwise API)."""
+    return merge([a, b], name)

@@ -1,0 +1,219 @@
+"""Seeded multi-tenant workload generator (the paper's headline claim,
+driven at scale).
+
+The abstract promises "an example heterogeneous system to enable multiple
+applications to share the available accelerators", but the repo's original
+evaluation exercised exactly two hand-written apps through a pairwise
+interleave.  This module generates *scenarios*: N tenant programs (2–8
+processes, distinct ISA pids) built on the Program Builder — random mixes of
+FIR/FFT/DCT-class kernels, dependency chains, fan-outs, loops and
+mem/bus-kind branches — merged N-way through :meth:`builder.Program.merge`.
+Related hardware-scheduler evaluations (hardware-HEFT, priority-aware NoC
+scheduling) use exactly this kind of generated heterogeneous DAG workload
+with per-application slowdown metrics.
+
+Every scenario is a pure function of its seed (``numpy`` Generator), so a
+failing fuzz case is one integer away from a reproduction:
+
+    >>> sc = generate_scenario(1234)
+    >>> from repro.core import hts
+    >>> hts.compare(sc.merged)                  # golden ≡ machine, all modes
+    >>> shared = hts.run(sc.merged, n_fu=2)
+    >>> shared.fairness(solo_results(sc, n_fu=2)).max_slowdown
+
+Resource rationing
+------------------
+One merged machine must hold every tenant at once, so the generator rations
+the two global namespaces the ISA exposes:
+
+* **task memory** — tenant ``i`` gets the span ``[base_i, base_i + span)``
+  of the default 1024-word memory image (the shared read-only input frame at
+  ``INPUT`` is the only span tenants may have in common), and the generator
+  tracks its own words so the bump allocator can never cross into a
+  neighbour;
+* **GPRs** — loops (counter + walking base + stride) and branches
+  (threshold) consume registers; each tenant's feature mix is gated on a
+  ``31 // n_tenants`` register budget so ``merge`` always fits the bank.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .builder import Program
+from .programs import Bench, INPUT, INPUT_WORDS
+
+#: first tenant region base (above the shared input frame) and the top of the
+#: generator's address space (default ``HtsParams.mem_words``).
+TENANT_BASE = 0x40
+MEM_WORDS = 1024
+_ALIGN = 0x8
+
+#: kernel pools (Table II keynames) by execution-cycle weight.  The cheap mix
+#: keeps golden/no-event-skip differential runs fast (every kernel < 1k
+#: cycles); the full mix adds the long-latency FFT/FIR heavyweights.
+CHEAP_MIX = ("vector_dot", "vector_add", "vector_max", "dct", "correlation")
+DSP_MIX = CHEAP_MIX + ("real_fir", "iir")
+FULL_MIX = DSP_MIX + ("complex_fir", "adaptive_fir", "fft_256")
+
+_SHAPES = ("chain", "fanout", "mixed", "loop", "branch")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One generated multi-tenant workload: N solo programs + their merge."""
+    name: str
+    seed: int
+    pids: tuple[int, ...]
+    tenants: tuple[Bench, ...]          # builder-backed, one per pid
+    merged: Bench                       # N-way Program.merge, distinct pids
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.pids)
+
+    def solo(self, pid: int) -> Bench:
+        """The standalone program of tenant ``pid``."""
+        return self.tenants[self.pids.index(pid)]
+
+
+class _Tenant:
+    """Generation state for one tenant: its Program plus resource budgets."""
+
+    def __init__(self, pid: int, base: int, span: int, reg_budget: int):
+        self.prog = Program(f"tenant{pid}", region_base=base)
+        self.pid = pid
+        self.words_left = span
+        self.regs_left = reg_budget
+        self.frame = self.prog.input(INPUT, INPUT_WORDS, "frame")
+
+    def take(self, regs: int, words: int) -> bool:
+        """Deduct both budgets atomically (no leak when one check fails)."""
+        words = -(-words // _ALIGN) * _ALIGN    # the allocator aligns to 8
+        if regs > self.regs_left or words > self.words_left:
+            return False
+        self.regs_left -= regs
+        self.words_left -= words
+        return True
+
+
+def _emit_straight(rng: np.random.Generator, t: _Tenant, kernels, n: int,
+                   chain: bool) -> None:
+    """``n`` tasks reading the frame (fanout) or each other (chain)."""
+    prev = t.frame
+    for i in range(n):
+        if not t.take(0, 4):
+            return
+        h = t.prog.task(str(rng.choice(kernels)), in_=prev, out=4,
+                        in_size=4, tid=i & 0xF)
+        if chain or (not chain and rng.random() < 0.2):
+            prev = h                        # occasional dep even in fanout
+
+
+def _emit_loop(rng: np.random.Generator, t: _Tenant, kernels) -> bool:
+    """A 2–4 iteration loop walking a fresh output span (3 registers)."""
+    iters = int(rng.integers(2, 5))
+    stride = _ALIGN
+    if not t.take(3, iters * stride):       # counter + walking base + stride
+        return False
+    w = t.prog.walker(stride=stride, count=iters, name=f"w{t.pid}")
+    with t.prog.loop(iters):
+        t.prog.task(str(rng.choice(kernels)), in_=t.frame, out=w,
+                    out_size=4, tid=1)
+        w.advance()
+    return True
+
+
+def _emit_branch(rng: np.random.Generator, t: _Tenant, kernels) -> bool:
+    """A mem- or bus-kind branch with 1–2 tasks per arm (1 register)."""
+    n_each = int(rng.integers(1, 3))
+    # cond region + both arms' outs, each rounded up to the 8-word alignment
+    if not t.take(1, _ALIGN + n_each * 2 * _ALIGN):     # 1 reg: threshold
+        return False
+    kind = str(rng.choice(("mem", "bus")))
+    taken = bool(rng.random() < 0.5)
+    cond = t.prog.region(1, name=f"cond{t.pid}")
+    if kind == "bus":
+        t.prog.task("correlation", in_=t.frame, out=cond, tid=0)
+        cond.effect(9 if taken else 1)
+    else:
+        cond.init(9 if taken else 1)
+    br = t.prog.branch(on=cond, cond=">=", thr=5, kind=kind)
+    with br.not_taken():                    # speculated path
+        for i in range(n_each):
+            t.prog.task(str(rng.choice(kernels)), in_=t.frame, out=4,
+                        tid=i & 0xF)
+    with br.taken():
+        for i in range(n_each):
+            t.prog.task(str(rng.choice(kernels)), in_=t.frame, out=4,
+                        tid=(i + 4) & 0xF)
+    return True
+
+
+def _generate_tenant(rng: np.random.Generator, pid: int, base: int, span: int,
+                     reg_budget: int, kernels: Sequence[str],
+                     max_tasks: int) -> Bench:
+    t = _Tenant(pid, base, span, reg_budget)
+    shape = str(rng.choice(_SHAPES))
+    with t.prog.process(pid):
+        if shape == "loop" and not _emit_loop(rng, t, kernels):
+            shape = "chain"
+        elif shape == "branch" and not _emit_branch(rng, t, kernels):
+            shape = "fanout"
+        if shape in ("chain", "fanout"):
+            _emit_straight(rng, t, kernels, int(rng.integers(2, max_tasks + 1)),
+                           chain=(shape == "chain"))
+        elif shape == "mixed":
+            _emit_straight(rng, t, kernels, int(rng.integers(1, 3)),
+                           chain=True)
+            if rng.random() < 0.5:
+                _emit_loop(rng, t, kernels)
+            else:
+                _emit_straight(rng, t, kernels, int(rng.integers(1, 3)),
+                               chain=False)
+        else:                               # loop/branch got their core; pad
+            _emit_straight(rng, t, kernels, int(rng.integers(0, 2)),
+                           chain=False)
+    return Bench.of(t.prog)
+
+
+def generate_scenario(seed: int, *, n_tenants: Optional[int] = None,
+                      kernels: Sequence[str] = DSP_MIX,
+                      max_tasks: int = 5,
+                      name: Optional[str] = None) -> Scenario:
+    """One seeded scenario: ``n_tenants`` (2–8, drawn when omitted) programs
+    with distinct pids, disjoint region/register budgets, merged N-way."""
+    rng = np.random.default_rng(seed)
+    if n_tenants is None:
+        n_tenants = int(rng.integers(2, 9))
+    if not 1 <= n_tenants <= 8:
+        raise ValueError(f"n_tenants must be in [1, 8], got {n_tenants}")
+    span = ((MEM_WORDS - TENANT_BASE) // n_tenants) // _ALIGN * _ALIGN
+    reg_budget = 31 // n_tenants
+    pids = tuple(range(1, n_tenants + 1))
+    tenants = tuple(
+        _generate_tenant(rng, pid, TENANT_BASE + i * span, span, reg_budget,
+                         kernels, max_tasks)
+        for i, pid in enumerate(pids))
+    merged_prog = Program.merge([b.program for b in tenants],
+                                name or f"scenario_{seed}",
+                                require_distinct_pids=True)
+    return Scenario(name=merged_prog.name, seed=seed, pids=pids,
+                    tenants=tenants, merged=Bench.of(merged_prog))
+
+
+def generate_scenarios(n: int, *, seed0: int = 0, **kwargs):
+    """``n`` scenarios with consecutive seeds (fuzzing convenience)."""
+    for s in range(seed0, seed0 + n):
+        yield generate_scenario(s, **kwargs)
+
+
+def solo_results(scenario: Scenario, *, scheduler="hts_spec", n_fu=2,
+                 backend: str = "jax", **run_kwargs) -> dict:
+    """Each tenant's standalone :class:`api.Result` (fairness baselines)."""
+    from . import api
+    return {pid: api.run(scenario.solo(pid), scheduler=scheduler, n_fu=n_fu,
+                         backend=backend, **run_kwargs)
+            for pid in scenario.pids}

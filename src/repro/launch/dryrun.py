@@ -140,7 +140,10 @@ def _prefill_logits(model, params, batch):
 
 
 def _cell_costs(compiled):
-    cost = dict(compiled.cost_analysis())
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # older jax: one dict per program
+        cost = cost[0] if cost else {}
+    cost = dict(cost)
     coll = hlo_collectives.collective_bytes_per_device(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),

@@ -217,7 +217,10 @@ def decode_attention(p, cfg, x, cache_k, cache_v, pos, *, use_rope=True):
                     jnp.asarray(row_pos)[None, None, None, None]))
         s = jnp.where(mask, s, -1e30)
         w = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bhgk,bhkd->bhgd", w.astype(cache_v.dtype), cache_v,
+        # keep w in f32: downcasting the weights to the cache dtype rounds
+        # them and diverges from the baseline path (the packed win is the
+        # avoided GQA repeat, not the weight precision)
+        o = jnp.einsum("bhgk,bhkd->bhgd", w, cache_v,
                        preferred_element_type=jnp.float32)
         o = o.reshape(B, Hq, 1, cfg.head_dim).astype(x.dtype)
         return attn_out(p, o), cache_k, cache_v

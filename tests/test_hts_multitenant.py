@@ -1,0 +1,231 @@
+"""Multi-tenant workload engine: N-way Program.merge isolation invariants,
+per-pid schedule metrics + fairness, and the seeded differential fuzzer
+(golden ≡ JAX machine, all scheduler cost models, event-skip on and off)."""
+import numpy as np
+import pytest
+
+from repro.core import hts
+from repro.core.hts import costs, golden, isa, multiapp, workloads
+from repro.core.hts.builder import BuilderError, Program
+
+#: acceptance floor: the differential fuzzer must clear ≥ 50 scenarios.
+FUZZ_SEEDS = 50
+FUZZ_SCHEDULERS = ("naive", "hts_nospec", "hts_spec")
+
+
+def _chain(name, funcs, pid, base):
+    p = Program(name, region_base=base)
+    frame = p.input(0x10, 4, "frame")
+    with p.process(pid):
+        prev = frame
+        for i, f in enumerate(funcs):
+            prev = p.task(f, in_=prev, out=4, in_size=4, tid=i)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# N-way merge: isolation invariants
+# ---------------------------------------------------------------------------
+def test_merge_preserves_per_process_order_n_way():
+    funcs = {1: ["fft_256", "vector_dot", "iir"],
+             2: ["dct", "vector_max", "correlation", "vector_add"],
+             3: ["real_fir", "complex_fir"],
+             4: ["adaptive_fir", "iir", "dct"]}
+    progs = [_chain(f"t{pid}", fs, pid, 0x100 + 0x100 * (pid - 1))
+             for pid, fs in funcs.items()]
+    merged = Program.merge(progs, require_distinct_pids=True).build()
+    by_pid = {pid: [] for pid in funcs}
+    for ins in merged.instrs:
+        assert ins.op == isa.OP_TASK
+        by_pid[ins.pid].append(costs.FUNC_NAMES[ins.acc])
+    for pid, fs in funcs.items():
+        assert by_pid[pid] == fs, f"pid {pid} program order torn"
+    # dependencies stay within each process after OoO scheduling
+    r = golden.run(merged.code, costs.costs_by_name("hts_spec"),
+                   golden.HtsParams(n_fu=(2,) * 10))
+    pid_of_uid = {t.uid: t.pid for t in r.tasks}
+    for t in r.tasks:
+        if t.dep_uid:
+            assert pid_of_uid[t.dep_uid] == t.pid
+
+
+def test_merge_region_disjointness():
+    a = _chain("a", ["iir"], 1, 0x100)
+    b = _chain("b", ["dct"], 2, 0x200)
+    c_ok = _chain("c", ["vector_dot"], 3, 0x300)
+    c_bad = _chain("c", ["vector_dot"], 3, 0x200)    # collides with b
+    merged = Program.merge([a, b, c_ok])
+    # every written reservation pair in the merge is disjoint
+    spans = [(s, e) for (s, e, _, wr) in merged._reserved if wr]
+    spans.sort()
+    for (s1, e1), (s2, _) in zip(spans, spans[1:]):
+        assert e1 <= s2
+    with pytest.raises(BuilderError, match="overlaps"):
+        Program.merge([a, b, c_bad])
+    # the identical read-only input span is shared by all three tenants
+    shared_inputs = [(s, e) for (s, e, _, wr) in merged._reserved if not wr]
+    assert shared_inputs == [(0x10, 0x14)]
+
+
+def test_merge_register_isolation():
+    # the same Reg object spanning two programs is rejected
+    a = Program("a", region_base=0x100)
+    b = Program("b", region_base=0x200)
+    r = a.reg("shared")
+    a.mov(r, 1)
+    b.mov(r, 2)
+    with pytest.raises(BuilderError, match="disjoint register sets"):
+        Program.merge([a, b])
+    # combined register demand beyond the GPR bank fails at merge time
+    progs = []
+    for k in range(5):
+        p = Program(f"p{k}", region_base=0x100 + 0x40 * k)
+        for j in range(8):
+            p.let(j, f"r{k}_{j}")
+        progs.append(p)
+    with pytest.raises(BuilderError, match="registers combined"):
+        Program.merge(progs)                        # 40 > 31 available
+
+
+def test_merge_rejects_conflicting_shared_input_images():
+    def tenant(pid, base, init):
+        p = Program(f"t{pid}", region_base=base)
+        frame = p.input(0x10, 4, "frame").init(init)
+        with p.process(pid):
+            p.task("iir", in_=frame, out=4)
+        return p
+
+    # agreeing images on the shared span merge fine
+    Program.merge([tenant(1, 0x100, [1, 2]), tenant(2, 0x200, [1, 2])])
+    with pytest.raises(BuilderError, match="conflicting mem_init"):
+        Program.merge([tenant(1, 0x100, [1, 2]), tenant(2, 0x200, [9, 9])])
+
+
+def test_merge_requires_distinct_pids_when_asked():
+    a = _chain("a", ["iir"], 1, 0x100)
+    b = _chain("b", ["dct"], 1, 0x200)              # same pid as a
+    Program.merge([a, b])                           # tolerated by default
+    with pytest.raises(BuilderError, match="pid 1"):
+        Program.merge([a, b], require_distinct_pids=True)
+
+
+def test_interleave_is_two_way_merge():
+    a = _chain("a", ["iir", "vector_dot"], 1, 0x100)
+    b = _chain("b", ["dct"], 2, 0x200)
+    via_merge = Program.merge([a, b]).build()
+    via_interleave = _chain("a", ["iir", "vector_dot"], 1, 0x100).interleave(
+        _chain("b", ["dct"], 2, 0x200)).build()
+    assert np.array_equal(via_merge.code, via_interleave.code)
+
+
+def test_shared_makespan_le_sum_of_solos_complementary():
+    """Paper Fig-2 intuition: complementary mixes (audio FFT/FIR-heavy,
+    image DCT-heavy) share the pool with shared ≤ serial makespan, and each
+    tenant's in-shared makespan is no better than its solo run."""
+    params = hts.HtsParams(mem_words=4096, tracker_entries=128)
+    audio = multiapp.audio_straightline(2)           # pid 0
+    image = multiapp.image_compression(6)            # pid 1
+    third = multiapp.Bench.of(
+        _chain("vec", ["vector_add", "vector_max", "vector_dot"] * 2, 2,
+               0xC00))
+    shared = multiapp.merge([audio, image, third])
+    rs = hts.run(shared, n_fu=2, params=params)
+    solos = {pid: hts.run(b, n_fu=2, params=params)
+             for pid, b in ((0, audio), (1, image), (2, third))}
+    serial = sum(r.cycles for r in solos.values())
+    assert rs.cycles <= serial
+    fair = rs.fairness(solos)
+    assert set(fair.slowdowns) == {0, 1, 2}
+    for pid, s in fair.slowdowns.items():
+        assert s >= 0.99, (pid, s)                  # sharing can't beat solo
+    assert fair.max_slowdown == max(fair.slowdowns.values())
+
+
+# ---------------------------------------------------------------------------
+# per-pid schedule slices and fairness metrics
+# ---------------------------------------------------------------------------
+def test_per_pid_slices_and_makespan():
+    sc = workloads.generate_scenario(7, n_tenants=4,
+                                     kernels=workloads.CHEAP_MIX)
+    r = hts.run(sc.merged, n_fu=2)
+    assert r.pids == sc.pids
+    slices = r.by_pid()
+    assert sum(len(rows) for rows in slices.values()) == r.n_tasks
+    for pid in sc.pids:
+        assert r.schedule_for(pid) == slices[pid]
+        assert all(row.pid == pid for row in slices[pid])
+        mk = r.app_makespan(pid)
+        assert 0 < mk <= r.cycles
+    assert max(r.app_makespan(p) for p in sc.pids) <= r.cycles
+    # golden backend reports identical pid tagging
+    rg = hts.run(sc.merged, n_fu=2, backend="golden")
+    assert rg.schedule == r.schedule
+
+
+def test_fairness_against_solo_runs():
+    sc = workloads.generate_scenario(11, n_tenants=3,
+                                     kernels=workloads.CHEAP_MIX)
+    shared = hts.run(sc.merged, n_fu=1)
+    solos = workloads.solo_results(sc, n_fu=1)
+    fair = shared.fairness(solos)
+    assert set(fair.slowdowns) == set(sc.pids)
+    for s in fair.slowdowns.values():
+        assert s >= 0.99
+    assert fair.max_slowdown >= fair.mean_slowdown >= 1.0 - 1e-9
+    assert "slowdown" in fair.table()
+
+
+# ---------------------------------------------------------------------------
+# workload generator properties
+# ---------------------------------------------------------------------------
+def test_generator_is_seed_deterministic():
+    a = workloads.generate_scenario(42)
+    b = workloads.generate_scenario(42)
+    assert a.n_tenants == b.n_tenants
+    assert a.merged.asm == b.merged.asm
+    assert a.merged.mem_init == b.merged.mem_init
+    c = workloads.generate_scenario(43)
+    assert (a.merged.asm != c.merged.asm or a.n_tenants != c.n_tenants)
+
+
+def test_generator_respects_tenant_count_and_pids():
+    for n in (2, 5, 8):
+        sc = workloads.generate_scenario(3, n_tenants=n)
+        assert sc.n_tenants == n
+        assert sc.pids == tuple(range(1, n + 1))
+        built = sc.merged.program.build()            # lowers within 31 GPRs
+        task_pids = {i.pid for i in built.instrs if i.op == isa.OP_TASK}
+        assert task_pids == set(sc.pids)             # every tenant emits work
+    with pytest.raises(ValueError):
+        workloads.generate_scenario(0, n_tenants=9)
+
+
+# ---------------------------------------------------------------------------
+# the differential fuzzer (acceptance: ≥ 50 scenarios, 3 schedulers,
+# golden + jax event-skip on/off all schedule-identical)
+# ---------------------------------------------------------------------------
+def test_fuzz_differential_scenarios():
+    passed = 0
+    for seed in range(FUZZ_SEEDS):
+        sc = workloads.generate_scenario(seed, n_tenants=2 + seed % 3,
+                                         kernels=workloads.CHEAP_MIX,
+                                         max_tasks=4)
+        report = hts.compare(sc.merged, schedulers=FUZZ_SCHEDULERS)
+        assert report.schedulers == FUZZ_SCHEDULERS
+        # scheduling sanity on every agreed result: OoO never loses to naive
+        assert report.cycles("hts_nospec") <= report.cycles("naive")
+        assert report.cycles("hts_spec") <= report.cycles("naive")
+        passed += 1
+    assert passed >= 50
+
+
+@pytest.mark.slow
+def test_fuzz_differential_heavy_mixes():
+    """Slow tier: full Table-II mix (incl. 18k-cycle FFTs) and up to 8
+    tenants, software scheduler included."""
+    for seed in range(12):
+        sc = workloads.generate_scenario(1000 + seed,
+                                         kernels=workloads.FULL_MIX)
+        hts.compare(sc.merged,
+                    schedulers=("naive", "software", "hts_nospec",
+                                "hts_spec"))

@@ -1,11 +1,16 @@
 """Multi-device behaviours, each in a subprocess with a forced host-device
-pool (the main test process must keep the default single device)."""
+pool (the main test process must keep the default single device).
+
+Every test here spawns a fresh interpreter that recompiles from scratch, so
+the whole module lives in the CI slow tier (``pytest -m slow``)."""
 import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+pytestmark = pytest.mark.slow
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -148,6 +153,10 @@ def test_grad_compression_psum():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.optim.grad_compress import compressed_psum
+        if hasattr(jax, "shard_map"):
+            shard_map = jax.shard_map
+        else:
+            from jax.experimental.shard_map import shard_map
 
         mesh = jax.make_mesh((8,), ("pod",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
@@ -156,8 +165,8 @@ def test_grad_compression_psum():
             mean, err = compressed_psum(gl[0], "pod")
             return mean[None], err[None]
 
-        mean, err = jax.shard_map(body, mesh=mesh, in_specs=P("pod"),
-                                  out_specs=P("pod"))(g)
+        mean, err = shard_map(body, mesh=mesh, in_specs=P("pod"),
+                              out_specs=P("pod"))(g)
         want = jnp.mean(g, axis=0)
         got = np.asarray(mean)[0]
         scale = float(jnp.max(jnp.abs(g))) / 127

@@ -39,7 +39,7 @@ def test_schedule_executes_on_real_kernels():
     table = ops.dsp_dispatch_table()
     x = jnp.asarray(np.random.default_rng(0)
                     .standard_normal((8, 256)).astype(np.float32))
-    for _, func, _, issue, _, _, _ in sorted(live, key=lambda r: r[3]):
+    for _, func, _, issue, _, _, _, _pid in sorted(live, key=lambda r: r[3]):
         x = table[costs.FUNC_NAMES[func]](x)
         x = x / jnp.maximum(jnp.max(jnp.abs(x)), 1e-6)
     assert np.isfinite(np.asarray(x)).all()
