@@ -1,0 +1,240 @@
+"""Priority-aware scheduling benchmark: QoS recovery under contention.
+
+The starvation scenario the age-order arbiter cannot fix: one
+latency-sensitive tenant (pid 1, a dependency *chain* whose tasks become
+ready one at a time) arrives *after* N greedy tenants have flooded the
+reservation station with independent same-class tasks (its arrival lag is
+modelled by a nop prelude, so every one of its tasks is younger than the
+whole backlog).  Under pure age order the chain queues behind the entire
+flood at every hop; with a priority weight on pid 1 it jumps the queue
+and re-acquires a unit the cycle it wakes, so its makespan approaches the
+solo runtime while aggregate throughput is untouched (the weighted
+arbiter is work-conserving — see ``core/hts/policy.py``).
+
+Swept axes: priority weight x FU count x tenant mix, plus per-class FU
+*quota* points: capping each greedy pid bounds its occupancy, and when
+the greedy caps sum to less than the pool size a unit is effectively
+reserved for the latency-sensitive tenant — QoS without any weights.
+
+    PYTHONPATH=src python -m benchmarks.priority             # writes JSON
+    PYTHONPATH=src python -m benchmarks.priority --weights 0,2,8 --fu 1,2
+
+The JSON lands in ``BENCH_priority.json`` (repo root by default); see
+docs/BENCHMARKS.md for the field-by-field schema.  Headline check (the
+repo's QoS acceptance bar): at some contended point the high-priority
+tenant's makespan is <= 1.15x its solo runtime while shared-run cycles
+regress < 5% vs unweighted sharing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from repro.core import hts
+from repro.core.hts.builder import Program
+
+DEFAULT_WEIGHTS = (0, 1, 2, 8)      # 0 = unweighted age-order baseline
+DEFAULT_FU = (1, 2)
+DEFAULT_MIXES = (2, 4)              # number of greedy tenants
+HI_PID = 1
+FUNC = "dct"                        # all tenants contend for one class
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_priority.json"
+
+
+def hi_tenant(chain: int = 8, delay: int = 0) -> Program:
+    """The latency-sensitive app: a ``chain``-deep RAW chain (pid 1).
+
+    ``delay`` nops model a late arrival: in the round-robin merge they hold
+    the chain's dispatch back until the greedy floods have filled the RS,
+    so every chain task is *younger* (higher age) than the whole backlog —
+    the worst case for the age-order arbiter."""
+    p = Program("hi", region_base=0x100)
+    frame = p.input(0x10, 4, "frame")
+    for _ in range(delay):
+        p.nop()
+    with p.process(HI_PID):
+        prev = frame
+        for i in range(chain):
+            prev = p.task(FUNC, in_=prev, out=4, in_size=4, tid=i)
+    return p
+
+
+def greedy_tenant(pid: int, tasks: int = 10) -> Program:
+    """A best-effort flood: ``tasks`` independent same-class tasks."""
+    p = Program(f"greedy{pid}", region_base=0x200 + 0x100 * (pid - 2))
+    frame = p.input(0x10, 4, "frame")
+    with p.process(pid):
+        for i in range(tasks):
+            p.task(FUNC, in_=frame, out=4, tid=i & 0xF)
+    return p
+
+
+def contended(n_greedy: int, *, chain: int = 8, greedy_tasks: int = 10,
+              weight: int = 0, quota: int | None = None) -> Program:
+    """The merged tenant mix, with pid 1 weighted / greedy pids quota-capped.
+    The hi tenant arrives after the floods (``delay=greedy_tasks`` nops)."""
+    tenants = [hi_tenant(chain, delay=greedy_tasks)] \
+        + [greedy_tenant(2 + k, greedy_tasks) for k in range(n_greedy)]
+    priorities = {HI_PID: weight} if weight else None
+    quotas = ({2 + k: quota for k in range(n_greedy)} if quota else None)
+    return Program.merge(tenants, f"contended_{n_greedy}g_w{weight}",
+                         require_distinct_pids=True,
+                         priorities=priorities, quotas=quotas)
+
+
+def bench_point(n_greedy: int, n_fu: int, *, weights=DEFAULT_WEIGHTS,
+                chain: int = 8, greedy_tasks: int = 10,
+                scheduler: str = "hts_spec") -> dict:
+    """One (mix, FU) point: solo baseline + every weight + a quota point."""
+    solo = hts.run(hi_tenant(chain, delay=greedy_tasks),
+                   scheduler=scheduler, n_fu=n_fu)
+    solo_mk = solo.app_makespan(HI_PID)
+    base = hts.run(contended(n_greedy, chain=chain,
+                             greedy_tasks=greedy_tasks),
+                   scheduler=scheduler, n_fu=n_fu)
+    point = {"mix": f"1hi+{n_greedy}greedy", "n_greedy": n_greedy,
+             "n_fu": n_fu, "hi_chain": chain, "greedy_tasks": greedy_tasks,
+             "hi_solo_cycles": solo_mk, "unweighted_cycles": base.cycles,
+             "by_weight": {}}
+    for w in weights:
+        t0 = time.perf_counter()
+        r = (base if w == 0 else
+             hts.run(contended(n_greedy, chain=chain,
+                               greedy_tasks=greedy_tasks, weight=w),
+                     scheduler=scheduler, n_fu=n_fu))
+        mk = r.app_makespan(HI_PID)
+        point["by_weight"][str(w)] = {
+            "hi_makespan": mk,
+            "hi_slowdown_vs_solo": mk / solo_mk,
+            "shared_cycles": r.cycles,
+            "throughput_vs_unweighted": base.cycles / r.cycles,
+            "utilization": r.utilization,
+            "wall_us": (time.perf_counter() - t0) * 1e6,
+        }
+    # complementary mechanism: cap every greedy pid at 1 in-flight unit
+    rq = hts.run(contended(n_greedy, chain=chain, greedy_tasks=greedy_tasks,
+                           quota=1),
+                 scheduler=scheduler, n_fu=n_fu)
+    mq = rq.app_makespan(HI_PID)
+    point["greedy_quota_1"] = {
+        "hi_makespan": mq, "hi_slowdown_vs_solo": mq / solo_mk,
+        "shared_cycles": rq.cycles,
+        "throughput_vs_unweighted": base.cycles / rq.cycles,
+    }
+    return point
+
+
+def quota_reservation_demo(n_greedy: int = 2, *, chain: int = 8,
+                           greedy_tasks: int = 12,
+                           scheduler: str = "hts_spec") -> dict:
+    """Quotas as capacity *reservation*: cap every greedy pid at 1 in-flight
+    unit with ``n_fu = n_greedy + 1`` units in the class — the sum of greedy
+    caps is below the pool size, so one unit is always left for pid 1 and
+    its chain runs at solo speed without any priority weight.  (At the swept
+    points, where greedy caps >= n_fu, the same quota only bounds occupancy
+    — age order still hands every freed unit back to the flood.)"""
+    n_fu = n_greedy + 1
+    solo = hts.run(hi_tenant(chain, delay=greedy_tasks),
+                   scheduler=scheduler, n_fu=n_fu)
+    base = hts.run(contended(n_greedy, chain=chain,
+                             greedy_tasks=greedy_tasks),
+                   scheduler=scheduler, n_fu=n_fu)
+    rq = hts.run(contended(n_greedy, chain=chain, greedy_tasks=greedy_tasks,
+                           quota=1),
+                 scheduler=scheduler, n_fu=n_fu)
+    solo_mk = solo.app_makespan(HI_PID)
+    return {
+        "mix": f"1hi+{n_greedy}greedy", "n_fu": n_fu, "greedy_quota": 1,
+        "hi_solo_cycles": solo_mk,
+        "hi_slowdown_unquotaed": base.app_makespan(HI_PID) / solo_mk,
+        "hi_slowdown_quotaed": rq.app_makespan(HI_PID) / solo_mk,
+        "throughput_vs_unquotaed": base.cycles / rq.cycles,
+    }
+
+
+def trajectory(mixes=DEFAULT_MIXES, fu_points=DEFAULT_FU,
+               weights=DEFAULT_WEIGHTS, scheduler: str = "hts_spec") -> dict:
+    points = [bench_point(g, f, weights=weights, scheduler=scheduler)
+              for g in mixes for f in fu_points]
+    best = max(
+        (p for p in points),
+        key=lambda p: p["by_weight"][str(weights[-1])]
+        ["throughput_vs_unweighted"]
+        - p["by_weight"][str(weights[-1])]["hi_slowdown_vs_solo"])
+    top = best["by_weight"][str(weights[-1])]
+    return {
+        "bench": "priority",
+        "scheduler": scheduler,
+        "weights": list(weights),
+        "points": points,
+        "quota_demo": quota_reservation_demo(mixes[0], scheduler=scheduler),
+        # the acceptance headline: QoS recovered, throughput preserved
+        "headline": {
+            "mix": best["mix"], "n_fu": best["n_fu"],
+            "weight": weights[-1],
+            "hi_slowdown_vs_solo": top["hi_slowdown_vs_solo"],
+            "throughput_vs_unweighted": top["throughput_vs_unweighted"],
+            "qos_recovered": top["hi_slowdown_vs_solo"] <= 1.15,
+            "throughput_preserved": top["throughput_vs_unweighted"] >= 0.95,
+        },
+    }
+
+
+def section():
+    """``benchmarks.run`` integration: (name, us, derived) rows."""
+    rows = []
+    for n_greedy, n_fu in ((2, 1), (4, 2)):
+        t0 = time.perf_counter()
+        p = bench_point(n_greedy, n_fu, weights=(0, 8))
+        us = (time.perf_counter() - t0) * 1e6
+        w8, w0 = p["by_weight"]["8"], p["by_weight"]["0"]
+        rows.append((f"priority/{p['mix']}/fu{n_fu}", us, {
+            "hi_slowdown_w0": w0["hi_slowdown_vs_solo"],
+            "hi_slowdown_w8": w8["hi_slowdown_vs_solo"],
+            "throughput_vs_unweighted": w8["throughput_vs_unweighted"],
+        }))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mixes", default=",".join(map(str, DEFAULT_MIXES)),
+                    help="comma-separated greedy-tenant counts")
+    ap.add_argument("--fu", default=",".join(map(str, DEFAULT_FU)),
+                    help="comma-separated FU counts per class")
+    ap.add_argument("--weights", default=",".join(map(str, DEFAULT_WEIGHTS)),
+                    help="comma-separated hi-pid priority weights (0 first)")
+    ap.add_argument("--scheduler", default="hts_spec")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args()
+    data = trajectory(tuple(int(x) for x in args.mixes.split(",")),
+                      tuple(int(x) for x in args.fu.split(",")),
+                      tuple(int(x) for x in args.weights.split(",")),
+                      args.scheduler)
+    out = pathlib.Path(args.out)
+    out.write_text(json.dumps(data, indent=2, default=float) + "\n")
+    print(f"wrote {out}")
+    q = data["quota_demo"]
+    print(f"  quota demo {q['mix']} fu={q['n_fu']} cap=1: hi slowdown "
+          f"{q['hi_slowdown_unquotaed']:.2f} -> {q['hi_slowdown_quotaed']:.2f}")
+    h = data["headline"]
+    print(f"  headline {h['mix']} fu={h['n_fu']} w={h['weight']}: "
+          f"hi slowdown {h['hi_slowdown_vs_solo']:.3f} "
+          f"(qos_recovered={h['qos_recovered']}), throughput "
+          f"{h['throughput_vs_unweighted']:.3f} "
+          f"(preserved={h['throughput_preserved']})")
+    for p in data["points"]:
+        w_hi = data["weights"][-1]
+        print(f"  {p['mix']:<12} fu={p['n_fu']}: slowdown "
+              + " ".join(f"w{w}={p['by_weight'][str(w)]['hi_slowdown_vs_solo']:.2f}"
+                         for w in data["weights"])
+              + f" quota1={p['greedy_quota_1']['hi_slowdown_vs_solo']:.2f}"
+              + f" tput(w{w_hi})="
+              f"{p['by_weight'][str(w_hi)]['throughput_vs_unweighted']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,7 @@ from __future__ import annotations
 import argparse
 import json
 
-from benchmarks import extensions, multitenant, paper_figs
+from benchmarks import extensions, multitenant, paper_figs, priority
 
 SECTIONS = {
     "tableII": paper_figs.table2,
@@ -20,6 +20,7 @@ SECTIONS = {
     "fig10": paper_figs.fig10,
     "multiapp": extensions.multi_app_sharing,
     "multitenant": multitenant.section,
+    "priority": priority.section,
     "ablation": extensions.design_ablation,
 }
 

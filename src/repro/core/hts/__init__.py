@@ -12,6 +12,11 @@ Public surface (the rest of the repo goes through this):
 * multi-tenant: :meth:`Program.merge` (N-way graph merge with isolation
   checks), ``workloads.py`` (seeded scenario generator), per-pid
   :class:`Result` metrics (``by_pid``/``app_makespan``/``fairness``).
+* QoS scheduling: :class:`SchedPolicy` (``policy.py``) — per-pid priority
+  weights and per-class FU quotas for the RS arbiter, attachable at
+  ``Program.merge(priorities=..., quotas=...)`` and accepted by
+  ``run``/``sweep``/``compare``; all-default degrades to the paper's pure
+  age-order arbitration.
 
     >>> from repro.core import hts
     >>> p = hts.Program("demo")
@@ -31,11 +36,12 @@ from .builder import (BuilderError, BuiltProgram, Program, Reg, Region,
                       TaskHandle, Walker)
 from .costs import SchedulerCosts, costs_by_name
 from .golden import HtsParams
+from .policy import SchedPolicy
 
 __all__ = [
     "ALL_SCHEDULERS", "BuilderError", "BuiltProgram", "CompareReport",
     "FairnessReport", "HtsParams", "MismatchError", "Program", "Reg",
-    "Region", "Result", "SchedulerCosts", "SimulationError", "SweepResult",
-    "TaskHandle", "TaskRow", "Walker", "compare", "costs_by_name", "run",
-    "sweep",
+    "Region", "Result", "SchedPolicy", "SchedulerCosts", "SimulationError",
+    "SweepResult", "TaskHandle", "TaskRow", "Walker", "compare",
+    "costs_by_name", "run", "sweep",
 ]

@@ -36,7 +36,18 @@ equality asserted — the workhorse behind the seeded multi-tenant fuzzer
 Multi-tenant metrics live on :class:`Result`: ``by_pid()`` /
 ``schedule_for`` slice the schedule by owning process, ``app_makespan``
 is one tenant's finish cycle, and ``fairness`` reports per-tenant
-slowdown vs solo runs (max slowdown = the fairness figure of merit).
+slowdown vs solo runs (max slowdown = the fairness figure of merit),
+annotated with each pid's priority weight (``FairnessReport.by_weight``
+is the slowdown-vs-priority curve).
+
+QoS scheduling: ``run``/``sweep``/``compare`` all take a
+``policy=``:class:`~repro.core.hts.policy.SchedPolicy` (per-pid priority
+weights + per-class FU quotas for the RS arbiter).  Resolution order:
+explicit argument > policy attached to the program (e.g. by
+``Program.merge(priorities=...)``) > ``params.policy``.  Policies are
+runtime data to the compiled machine — sweeping them never recompiles.
+
+See docs/API.md for a runnable tour of this module.
 """
 from __future__ import annotations
 
@@ -52,6 +63,7 @@ from .builder import BuiltProgram, Program
 from .costs import (ALL_SCHEDULERS, FUNC_NAMES, NUM_FUNCS, SchedulerCosts,
                     costs_by_name)
 from .golden import HtsParams
+from .policy import SchedPolicy
 
 
 class SimulationError(RuntimeError):
@@ -67,6 +79,7 @@ class _Prepared:
     code: np.ndarray
     mem_init: dict[int, int]
     effects: dict[int, int]
+    policy: Optional[SchedPolicy] = None    # attached by builder/merge
 
 
 def _prepare(program) -> _Prepared:
@@ -77,7 +90,7 @@ def _prepare(program) -> _Prepared:
         program = program.build()
     if isinstance(program, BuiltProgram):
         return _Prepared(program.name, program.code, program.mem_init,
-                         program.effects)
+                         program.effects, program.policy)
     if isinstance(program, str):                      # assembly text
         from . import assembler
         return _Prepared("<asm>", assembler.assemble(program), {}, {})
@@ -88,9 +101,20 @@ def _prepare(program) -> _Prepared:
         return _Prepared(getattr(program, "name", "<bench>"),
                          assembler.assemble(program.asm),
                          dict(getattr(program, "mem_init", {}) or {}),
-                         dict(getattr(program, "effects", {}) or {}))
+                         dict(getattr(program, "effects", {}) or {}),
+                         getattr(program, "policy", None))
     raise TypeError(f"cannot interpret {type(program).__name__} as an HTS "
                     "program")
+
+
+def _norm_policy(policy: Optional[SchedPolicy], prep: _Prepared,
+                 params: HtsParams) -> SchedPolicy:
+    """Effective policy: explicit arg > program-attached > params default."""
+    if policy is not None:
+        return policy
+    if prep.policy is not None:
+        return prep.policy
+    return params.policy
 
 
 def _norm_n_fu(n_fu) -> tuple[int, ...]:
@@ -147,6 +171,8 @@ class Result:
     fu_busy_cycles: tuple[int, ...]     # per existing unit, class-major order
     wall_us: float
     raw: Any = dataclasses.field(repr=False, compare=False, default=None)
+    policy: Optional[SchedPolicy] = dataclasses.field(
+        default=None, compare=False)    # arbitration policy this run used
 
     @property
     def n_tasks(self) -> int:
@@ -209,11 +235,13 @@ class Result:
             base = solo_res.app_makespan(pid) or solo_res.cycles
             shared = self.app_makespan(pid)
             slowdowns[pid] = shared / base if base else float("inf")
+        pol = self.policy or SchedPolicy()
         return FairnessReport(
             slowdowns=slowdowns,
             max_slowdown=max(slowdowns.values(), default=0.0),
             mean_slowdown=(sum(slowdowns.values()) / len(slowdowns)
-                           if slowdowns else 0.0))
+                           if slowdowns else 0.0),
+            weights={pid: pol.weight_of(pid) for pid in slowdowns})
 
     def table(self) -> str:
         """Human-readable per-task schedule."""
@@ -232,16 +260,31 @@ class Result:
 
 @dataclasses.dataclass(frozen=True)
 class FairnessReport:
-    """Per-tenant slowdown of a shared run vs each tenant's solo run."""
+    """Per-tenant slowdown of a shared run vs each tenant's solo run.
+
+    ``weights`` carries each pid's priority weight under the run's
+    :class:`SchedPolicy` so slowdown-vs-priority is one report: a working
+    priority scheduler shows high-weight pids near slowdown 1.0 while
+    low-weight pids absorb the queueing delay (:meth:`by_weight`).
+    """
     slowdowns: dict[int, float]         # pid → shared/solo makespan ratio
     max_slowdown: float                 # fairness figure of merit
     mean_slowdown: float
+    weights: dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def by_weight(self) -> dict[int, float]:
+        """Mean slowdown per priority weight (descending weight order)."""
+        acc: dict[int, list[float]] = {}
+        for pid, s in self.slowdowns.items():
+            acc.setdefault(self.weights.get(pid, 0), []).append(s)
+        return {w: sum(v) / len(v)
+                for w, v in sorted(acc.items(), reverse=True)}
 
     def table(self) -> str:
-        lines = [f"{'pid':>4} {'slowdown':>9}"]
+        lines = [f"{'pid':>4} {'weight':>7} {'slowdown':>9}"]
         for pid, s in sorted(self.slowdowns.items()):
-            lines.append(f"{pid:>4} {s:>9.3f}")
-        lines.append(f" max {self.max_slowdown:>9.3f}")
+            lines.append(f"{pid:>4} {self.weights.get(pid, 0):>7} {s:>9.3f}")
+        lines.append(f" max {'':>7} {self.max_slowdown:>9.3f}")
         return "\n".join(lines)
 
 
@@ -260,8 +303,13 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
         n_fu: Union[int, Sequence[int]] = 2, backend: str = "jax",
         params: HtsParams = HtsParams(), event_skip: bool = True,
         max_cycles: int = 5_000_000, max_prog: int = 256,
-        max_fu_per_class: int = 16, check: bool = True) -> Result:
+        max_fu_per_class: int = 16, check: bool = True,
+        policy: Optional[SchedPolicy] = None) -> Result:
     """Simulate ``program`` under one scheduler cost model.
+
+    ``policy`` selects the RS arbitration (per-pid priority weights + FU
+    quotas); when omitted, a policy attached to the program (e.g. by
+    ``Program.merge(priorities=...)``) applies, then ``params.policy``.
 
     Raises :class:`SimulationError` (naming the program and scheduler) if the
     machine fails to drain within ``max_cycles`` — pass ``check=False`` to
@@ -270,6 +318,7 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
     prep = _prepare(program)
     cost = _norm_costs(scheduler)
     fu = _norm_n_fu(n_fu)
+    pol = _norm_policy(policy, prep, params)
 
     t0 = time.perf_counter()
     if backend == "jax":
@@ -278,7 +327,7 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
                                mem_init=prep.mem_init, effects=prep.effects,
                                event_skip=event_skip, max_cycles=max_cycles,
                                max_fu_per_class=max_fu_per_class,
-                               max_prog=max_prog)
+                               max_prog=max_prog, policy=pol)
         wall = (time.perf_counter() - t0) * 1e6
         halted = bool(out["halted"]) and not bool(out["overflow"])
         # keep only units that exist under fu (class-major, like golden)
@@ -292,9 +341,10 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
             schedule=_machine_rows(out),
             spec_aborted=int(out["spec_aborted"]),
             stall_cycles=int(out["stall_cycles"]),
-            fu_busy_cycles=busy_exist, wall_us=wall, raw=out)
+            fu_busy_cycles=busy_exist, wall_us=wall, raw=out, policy=pol)
     elif backend == "golden":
-        g = golden.run(prep.code, cost, dataclasses.replace(params, n_fu=fu),
+        g = golden.run(prep.code, cost,
+                       dataclasses.replace(params, n_fu=fu, policy=pol),
                        prep.mem_init, prep.effects, max_cycles=max_cycles)
         wall = (time.perf_counter() - t0) * 1e6
         result = Result(
@@ -303,7 +353,7 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
             schedule=_golden_rows(g), spec_aborted=int(g.spec_aborted),
             stall_cycles=int(g.stall_cycles),
             fu_busy_cycles=tuple(int(x) for x in g.fu_busy_cycles),
-            wall_us=wall, raw=g)
+            wall_us=wall, raw=g, policy=pol)
     else:
         raise ValueError(f'backend must be "jax" or "golden", got {backend!r}')
 
@@ -344,27 +394,32 @@ class SweepResult:
 
 @functools.lru_cache(maxsize=16)
 def _vmapped(spec: machine.MachineSpec, max_prog: int):
-    """One jitted machine per (spec, max_prog), FU axis vmapped."""
+    """One jitted machine per (spec, max_prog), FU axis vmapped (the
+    policy tables ride along unbatched — they are traced runtime args)."""
     import jax
     return jax.jit(jax.vmap(machine.make_machine(spec, max_prog),
-                            in_axes=(None, None, 0, None, None)))
+                            in_axes=(None, None, 0, None, None, None, None)))
 
 
 def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),
           params: HtsParams = HtsParams(), event_skip: bool = True,
           max_cycles: int = 50_000_000, max_prog: int = 64,
-          max_fu_per_class: Optional[int] = None) -> SweepResult:
+          max_fu_per_class: Optional[int] = None,
+          policy: Optional[SchedPolicy] = None) -> SweepResult:
     """Simulate ``program`` across FU configurations in one compiled,
     ``vmap``-batched machine per scheduler (the Fig-10 machinery).
 
     ``n_fu`` is a sequence of points; each point is an int (uniform per
     class) or a per-class tuple.  ``schedulers`` accepts names from
     ``costs.ALL_SCHEDULERS`` or :class:`SchedulerCosts` objects.
+    ``policy`` applies one :class:`SchedPolicy` to every FU point (it is
+    runtime data to the compiled machine, so changing it never recompiles).
     """
     import jax.numpy as jnp
 
     prep = _prepare(program)
     points = tuple(_norm_n_fu(k) for k in n_fu)
+    pol = _norm_policy(policy, prep, params)
     widest = max(max(p) for p in points)
     if max_fu_per_class is None:
         max_fu_per_class = max(16, widest)
@@ -375,19 +430,23 @@ def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),
     ftab, p_len = machine.pack_program(prep.code, max_prog)
     mem, eff = machine.images(params, prep.mem_init, prep.effects)
     n_fu_arr = jnp.asarray(points, jnp.int32)
+    prio = jnp.asarray(pol.weight_array(), jnp.int32)
+    quota = jnp.asarray(pol.quota_array(), jnp.int32)
+    # the policy is runtime data — keep it out of the compilation cache key
+    params_c = dataclasses.replace(params, policy=SchedPolicy())
 
     cost_objs = [_norm_costs(s) for s in schedulers]
     cycles: dict[str, np.ndarray] = {}
     wall: dict[str, float] = {}
     for cost in cost_objs:
-        spec = machine.MachineSpec(params=params, costs=cost,
+        spec = machine.MachineSpec(params=params_c, costs=cost,
                                    event_skip=event_skip,
                                    max_cycles=max_cycles,
                                    max_fu_per_class=max_fu_per_class)
         runner = _vmapped(spec, max_prog)
         t0 = time.perf_counter()
         out = runner(jnp.asarray(ftab), p_len, n_fu_arr,
-                     jnp.asarray(mem), jnp.asarray(eff))
+                     jnp.asarray(mem), jnp.asarray(eff), prio, quota)
         cyc = np.asarray(out["cycles"])
         wall[cost.name] = (time.perf_counter() - t0) * 1e6
         ok = np.asarray(out["halted"]) & ~np.asarray(out["overflow"])
@@ -442,9 +501,15 @@ def compare(program, *,
             n_fu: Union[int, Sequence[int]] = 2,
             params: HtsParams = HtsParams(),
             max_cycles: int = 5_000_000, max_prog: int = 256,
-            max_fu_per_class: Optional[int] = None) -> CompareReport:
+            max_fu_per_class: Optional[int] = None,
+            policy: Optional[SchedPolicy] = None) -> CompareReport:
     """Differential execution: golden oracle vs the compiled JAX machine with
     event-skip **on and off**, for every scheduler cost model.
+
+    ``policy`` applies one :class:`SchedPolicy` to every execution (defaults
+    to the program-attached policy, e.g. from ``Program.merge(priorities=
+    ...)``) — so priority/quota arbitration is differentially verified by
+    the same machinery as the baseline age-order arbiter.
 
     Raises :class:`MismatchError` (naming program, scheduler and mode) on the
     first schedule-tuple or cycle-count disagreement; returns a
@@ -465,13 +530,14 @@ def compare(program, *,
         cost = _norm_costs(scheduler)
         names.append(cost.name)
         g = run(prep, scheduler=cost, n_fu=fu, backend="golden",
-                params=params, max_cycles=max_cycles, max_prog=max_prog)
+                params=params, max_cycles=max_cycles, max_prog=max_prog,
+                policy=policy)
         gold_rows = g.schedule_tuple()
         for event_skip in (True, False):
             m = run(prep, scheduler=cost, n_fu=fu, backend="jax",
                     params=params, event_skip=event_skip,
                     max_cycles=max_cycles, max_prog=max_prog,
-                    max_fu_per_class=max_fu_per_class)
+                    max_fu_per_class=max_fu_per_class, policy=policy)
             mode = f"jax event_skip={'on' if event_skip else 'off'}"
             if m.cycles != g.cycles:
                 raise MismatchError(
@@ -489,4 +555,4 @@ def compare(program, *,
 
 __all__ = ["run", "sweep", "compare", "Result", "SweepResult", "TaskRow",
            "FairnessReport", "CompareReport", "MismatchError",
-           "SimulationError", "ALL_SCHEDULERS"]
+           "SimulationError", "SchedPolicy", "ALL_SCHEDULERS"]

@@ -32,7 +32,12 @@ This module is the embedded-Python front-end that owns those resources:
   iteration, §V-B's loop example);
 * registers are symbolic (:class:`Reg`) and numbered only at
   :meth:`Program.build`, so two programs can be merged
-  (:meth:`Program.interleave`) without clobbering each other's GPRs.
+  (:meth:`Program.interleave`) without clobbering each other's GPRs;
+* :meth:`Program.merge` is the N-way tenant merge (region/register/pid
+  isolation checked up front) and the natural place to decide QoS:
+  ``merge(priorities={pid: weight}, quotas={pid: cap})`` attaches a
+  :class:`~repro.core.hts.policy.SchedPolicy` that ``hts.run`` /
+  ``hts.compare`` then apply by default.
 
 ``build()`` lowers to the exact 128-bit encoding of ``isa.py`` and can also
 emit paper-style assembly text (``BuiltProgram.asm`` — byte-for-byte
@@ -50,6 +55,7 @@ import numpy as np
 
 from . import isa
 from .costs import FUNC_IDS
+from .policy import SchedPolicy
 
 #: default start of the auto-allocated output-region space (matches the old
 #: hand-written ``OUT_BASE``) and its default alignment (old ``RSTRIDE``).
@@ -254,10 +260,14 @@ class Program:
                  keynames: Optional[dict[str, int]] = None,
                  region_base: int = REGION_BASE,
                  region_align: int = REGION_ALIGN,
-                 num_regs: int = 32):
+                 num_regs: int = 32,
+                 policy: Optional[SchedPolicy] = None):
         self.name = name
         self.keynames = dict(FUNC_IDS if keynames is None else keynames)
         self.num_regs = num_regs
+        #: scheduling policy attached to the program (``hts.run`` applies it
+        #: by default; see :meth:`merge`'s ``priorities``/``quotas``)
+        self.policy: Optional[SchedPolicy] = policy
         self.mem_init: dict[int, int] = {}
         self.effects: dict[int, int] = {}
         self._nodes: list = []
@@ -541,15 +551,26 @@ class Program:
             keynames=dict(self.keynames),
             n_tasks_hint=self._n_tasks if self._n_tasks == sum(
                 1 for i in instrs if i.op == isa.OP_TASK) else 0,
+            policy=self.policy,
         )
 
     # --------------------------------------------------------------- merge
     @classmethod
     def merge(cls, programs: Sequence["Program"], name: str = "shared", *,
-              require_distinct_pids: bool = False) -> "Program":
+              require_distinct_pids: bool = False,
+              priorities: Optional[dict[int, int]] = None,
+              quotas: Optional[dict[int, int]] = None) -> "Program":
         """N-way graph-level round-robin merge: N CPUs pushing their task
         streams into the one Task Queue (pids mark the owners) — the paper's
         multi-application sharing scenario, for any tenant count.
+
+        ``priorities`` (``{pid: weight}``) and ``quotas`` (``{pid: max
+        in-flight units per accelerator class}``) attach a
+        :class:`~repro.core.hts.policy.SchedPolicy` to the merged program;
+        ``hts.run``/``hts.compare`` apply it by default, so a merge-time QoS
+        decision follows the program everywhere.  When omitted, the source
+        programs' own policies are unioned (conflicting entries for a pid
+        are a :class:`BuilderError`).
 
         Structured nodes (a whole loop or branch) interleave atomically, so
         labels/offsets can never be torn apart — unlike merging assembly
@@ -643,6 +664,20 @@ class Program:
                     dst[k] = v
         merged._n_tasks = sum(p._n_tasks for p in programs)
         merged._scratch = None   # distinct Reg objects per source program
+
+        # --- scheduling policy: explicit args win; else union the tenants'
+        if priorities is not None or quotas is not None:
+            merged.policy = SchedPolicy.of(weights=priorities, quotas=quotas)
+        else:
+            pol: Optional[SchedPolicy] = None
+            for p in programs:
+                if p.policy is None:
+                    continue
+                try:
+                    pol = p.policy if pol is None else pol.merge_with(p.policy)
+                except ValueError as e:
+                    raise BuilderError(f"merge: {e} (program {p.name!r})")
+            merged.policy = pol
         return merged
 
     def interleave(self, other: "Program", name: str = "shared") -> "Program":
@@ -686,6 +721,7 @@ class BuiltProgram:
     effects: dict[int, int]
     keynames: dict[str, int]
     n_tasks_hint: int = 0
+    policy: Optional[SchedPolicy] = None    # scheduling policy (hts.run default)
 
     @property
     def asm(self) -> str:

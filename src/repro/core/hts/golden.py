@@ -20,9 +20,14 @@ Within-cycle phase order (both simulators MUST follow it exactly):
   4. branch resolve     — evaluate condition; on speculation: commit (retain TLB
                           mappings) or squash (discard TLB, abort speculative
                           tasks, redirect PC).  Non-speculative stalls unblock.
-  5. RS issue           — ready reservation-station entries (age order) issue to
-                          idle accelerators of their class, up to ``issue_width``
-                          per cycle.
+  5. RS issue           — ready reservation-station entries issue to idle
+                          accelerators of their class, up to ``issue_width``
+                          per cycle.  Order is the policy's issue key:
+                          priority class first (per-pid weight, higher wins),
+                          age within a class; a pid at its per-class FU quota
+                          is masked out without consuming the unit
+                          (``policy.SchedPolicy``; all-default = pure age
+                          order, the paper's arbiter).
   6. frontend           — fetch/decode/dispatch one instruction (tasks allocate
                           RS + tracker + optionally TLB/TM; control instructions
                           execute on the scheduler's GPRs).
@@ -44,6 +49,7 @@ import numpy as np
 
 from . import isa
 from .costs import (FUNC_CYCLES, MEM_READ_CYCLES, NUM_FUNCS, SchedulerCosts)
+from .policy import AGE_SPAN, NUM_PIDS, PRIO_CAP, SchedPolicy
 
 # ---------------------------------------------------------------------------
 # Capacities (design-time parameters of the HTS, paper §IV-C)
@@ -61,6 +67,7 @@ class HtsParams:
     mem_read_cycles: int = MEM_READ_CYCLES
     max_tasks: int = 1024       # schedule-trace capacity
     n_fu: tuple[int, ...] = (1,) * NUM_FUNCS   # units per function class
+    policy: SchedPolicy = SchedPolicy()        # per-pid weights + FU quotas
 
     @property
     def tm_base(self) -> int:
@@ -105,13 +112,13 @@ class Result:
 
 class _RS:
     __slots__ = ("uid", "func", "dep_uid", "age", "out_s", "out_e", "src_s",
-                 "exec_cycles", "is_spec")
+                 "exec_cycles", "is_spec", "pid")
 
     def __init__(self, uid, func, dep_uid, age, out_s, out_e, src_s,
-                 exec_cycles, is_spec):
+                 exec_cycles, is_spec, pid=0):
         self.uid, self.func, self.dep_uid, self.age = uid, func, dep_uid, age
         self.out_s, self.out_e, self.src_s = out_s, out_e, src_s
-        self.exec_cycles, self.is_spec = exec_cycles, is_spec
+        self.exec_cycles, self.is_spec, self.pid = exec_cycles, is_spec, pid
 
 
 def run(code: np.ndarray,
@@ -151,8 +158,15 @@ def run(code: np.ndarray,
     fu_busy = [False] * n_total_fu
     fu_uid = [0] * n_total_fu
     fu_rem = [0] * n_total_fu
+    fu_pid = [0] * n_total_fu          # owning pid while busy (quota accounting)
     fu_meta: list[Optional[tuple]] = [None] * n_total_fu  # (out_s,out_e,src_s,is_spec)
     fu_busy_cycles = np.zeros(n_total_fu, dtype=np.int64)
+
+    # scheduling policy: per-pid priority weights and per-class FU quotas.
+    # The arbiter orders ready RS entries by the scalar issue key
+    # (priority class first, age within class) — see policy.SchedPolicy.
+    _wt = p.policy.weight_array(NUM_PIDS).astype(np.int64)
+    _qt = p.policy.quota_array(NUM_PIDS).astype(np.int64)
 
     tracker: list[dict] = []          # {s, e, uid, is_spec}
     tlb: list[dict] = []              # {os, oe, tm_s, spec, committed, seq}
@@ -295,8 +309,18 @@ def run(code: np.ndarray,
             br = None
 
         # ---- 5. RS issue --------------------------------------------------
+        # Weighted arbiter: ready entries considered priority-class first
+        # (higher weight wins), age order within a class; a pid at its
+        # per-class in-flight quota is skipped without consuming the unit
+        # (work-conserving — the unit falls to the next eligible entry).
         issued = 0
-        for r in sorted(rs, key=lambda x: x.age):
+        inflight: dict[tuple[int, int], int] = {}
+        for i in range(n_total_fu):
+            if fu_busy[i]:
+                k = (fu_pid[i], fu_cls[i])
+                inflight[k] = inflight.get(k, 0) + 1
+        for r in sorted(rs, key=lambda x:
+                        (PRIO_CAP - _wt[x.pid]) * AGE_SPAN + x.age):
             if issued >= costs.issue_width:
                 break
             if r.dep_uid != 0:
@@ -305,10 +329,14 @@ def run(code: np.ndarray,
                          if fu_cls[i] == r.func and not fu_busy[i]), None)
             if slot is None:
                 continue
+            if inflight.get((r.pid, r.func), 0) >= _qt[r.pid]:
+                continue                   # quota mask: pid at its class cap
             fu_busy[slot] = True
             fu_uid[slot] = r.uid
             fu_rem[slot] = r.exec_cycles
+            fu_pid[slot] = r.pid
             fu_meta[slot] = (r.out_s, r.out_e, r.src_s, r.is_spec)
+            inflight[(r.pid, r.func)] = inflight.get((r.pid, r.func), 0) + 1
             by_uid[r.uid].issue_cycle = cycle
             rs.remove(r)
             issued += 1
@@ -454,7 +482,7 @@ def _dispatch_task(rs, tracker, by_uid, tasks, acc, dep, out_s, out_e, src_s,
                   if not (t["s"] < out_e and out_s < t["e"])]
     tracker.append({"s": out_s, "e": out_e, "uid": uid, "is_spec": is_spec})
     rs.append(_RS(uid, acc, dep, age, out_s, out_e, src_s,
-                  FUNC_CYCLES[acc], is_spec))
+                  FUNC_CYCLES[acc], is_spec, pid))
     rec = TaskRecord(uid=uid, func=acc, dispatch_cycle=cycle, dep_uid=dep,
                      is_spec=is_spec, pid=pid)
     tasks.append(rec)

@@ -10,7 +10,10 @@ control flow, so that
   * an optional **event-skip** mode (beyond-paper) advances time directly to
     the next scheduler event instead of ticking every cycle — exact-equivalent
     schedules (tested), 10-400× faster wall-clock for interrupt-dominated
-    (naive/software) cost models.
+    (naive/software) cost models;
+  * the scheduling policy (per-pid priority weights + per-class FU quotas,
+    ``policy.py``) enters as traced ``prio``/``quota`` arrays — like
+    ``n_fu``, runtime arguments, so policy sweeps share one compilation.
 
 GPR side effects on a squashed speculative path are rolled back from a
 checkpoint taken at speculation entry (the paper is silent on GPR recovery;
@@ -29,6 +32,7 @@ import numpy as np
 from . import isa
 from .costs import FUNC_CYCLES, NUM_FUNCS, SchedulerCosts
 from .golden import HtsParams
+from .policy import AGE_SPAN, NUM_PIDS, PRIO_CAP, SchedPolicy
 
 I32 = jnp.int32
 NEG = jnp.int32(-1)
@@ -47,7 +51,7 @@ class MachineSpec:
 
 def make_machine(spec: MachineSpec, max_prog: int = 256):
     """Build the machine under ``spec``; returns
-    ``run(ftab, p_len, n_fu, mem_init, effects)``.
+    ``run(ftab, p_len, n_fu, mem_init, effects, prio, quota)``.
 
     The *program is a runtime input* — ``ftab`` is the (max_prog, 10) decoded
     field table (``isa.decode_table`` output, zero-padded) and ``p_len`` its
@@ -56,10 +60,19 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
 
     ``n_fu``: (NUM_FUNCS,) int32 — units per accelerator class (traced).
     ``mem_init``/``effects``: (total_mem,) int32 images.
+    ``prio``/``quota``: (NUM_PIDS,) int32 scheduling-policy tables (traced,
+    like ``n_fu`` — one compilation serves every policy; see ``policy.py``).
+    ``prio`` holds per-pid priority weights (default all-zero = age order),
+    ``quota`` per-pid in-flight unit caps per class (default uncapped).
     Returns a dict of schedule/trace arrays (see ``out`` at the bottom).
     """
     p = spec.params
     c = spec.costs
+    if p.max_tasks > AGE_SPAN:
+        raise ValueError(
+            f"max_tasks {p.max_tasks} exceeds the issue-key age span "
+            f"{AGE_SPAN} (policy.AGE_SPAN); the int32 weighted-arbiter key "
+            "would overflow")
     P = max_prog
     NF = NUM_FUNCS
     NFU = NF * spec.max_fu_per_class
@@ -85,10 +98,10 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
             effect=jnp.asarray(effects, I32),
             rs_valid=zb(S), rs_uid=z(S), rs_func=z(S), rs_dep=z(S),
             rs_age=z(S), rs_out_s=z(S), rs_out_e=z(S), rs_src=z(S),
-            rs_exec=z(S), rs_spec=zb(S),
+            rs_exec=z(S), rs_spec=zb(S), rs_pid=z(S),
             fu_busy=zb(NFU), fu_uid=z(NFU), fu_rem=z(NFU),
             fu_out_s=z(NFU), fu_out_e=z(NFU), fu_src=z(NFU), fu_spec=zb(NFU),
-            fu_busy_cycles=z(NFU),
+            fu_busy_cycles=z(NFU), fu_pid=z(NFU),
             trk_valid=zb(T), trk_s=z(T), trk_e=z(T), trk_uid=z(T), trk_spec=zb(T),
             tlb_valid=zb(L), tlb_os=z(L), tlb_oe=z(L), tlb_slot=z(L),
             tlb_seq=z(L), tlb_com=zb(L), tlb_seq_ctr=I32(0),
@@ -258,38 +271,58 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
         return st
 
     # ------------------------------------------------------------------
-    # phase 5: RS issue (age order, per-class capacity, global width cap)
+    # phase 5: RS issue — weighted arbiter.  Ready entries are ordered by
+    # the policy's scalar issue key (priority class first, age within a
+    # class; all-equal weights degrade to pure age order).  A pid at its
+    # per-class in-flight quota is masked out of the per-class free-rank
+    # computation without consuming the unit, so the arbiter stays
+    # work-conserving.  ``prio``/``quota`` are traced runtime arrays
+    # (like ``n_fu``), so policies sweep under vmap without recompiling.
     # ------------------------------------------------------------------
-    def rs_issue(st, exists):
+    def rs_issue(st, exists, prio, quota):
         ready = st["rs_valid"] & (st["rs_dep"] == 0)
         free = exists & ~st["fu_busy"]
         n_free = jnp.zeros((NF,), I32).at[fu_cls].add(free.astype(I32))
-        # rank of each ready entry among ready entries of the same class, by age
-        age = jnp.where(ready, st["rs_age"], BIG)
+        w = jnp.clip(prio[st["rs_pid"]], 0, PRIO_CAP)
+        key = jnp.where(ready, (PRIO_CAP - w) * AGE_SPAN + st["rs_age"], BIG)
         same_cls = st["rs_func"][:, None] == st["rs_func"][None, :]
-        older = (age[None, :] < age[:, None]) & same_cls & ready[None, :]
-        cls_rank = older.sum(axis=1).astype(I32)
-        issuable = ready & (cls_rank < n_free[st["rs_func"]])
-        # global width cap: smallest ages among issuable
-        g_age = jnp.where(issuable, st["rs_age"], BIG)
-        g_rank = (g_age[None, :] < g_age[:, None]).sum(axis=1).astype(I32)
+        same_pid = st["rs_pid"][:, None] == st["rs_pid"][None, :]
+        # quota mask: units already running for (pid, class) plus ready
+        # same-(pid, class) entries ahead in key order must stay under cap.
+        # (An ahead entry that fails to issue can only fail for a resource
+        # — class units or issue width — that equally blocks this entry,
+        # so counting candidates instead of winners is exact.)
+        busy = st["fu_busy"] & exists
+        inflight = ((busy[None, :]
+                     & (st["fu_pid"][None, :] == st["rs_pid"][:, None])
+                     & (fu_cls[None, :] == st["rs_func"][:, None]))
+                    .sum(axis=1).astype(I32))
+        q_ahead = (key[None, :] < key[:, None]) & same_cls & same_pid \
+            & ready[None, :]
+        q_rank = q_ahead.sum(axis=1).astype(I32)
+        quota_ok = inflight + q_rank < quota[st["rs_pid"]]
+        eligible = ready & quota_ok
+        # rank among eligible entries of the same class, by key
+        c_ahead = (key[None, :] < key[:, None]) & same_cls & eligible[None, :]
+        cls_rank = c_ahead.sum(axis=1).astype(I32)
+        issuable = eligible & (cls_rank < n_free[st["rs_func"]])
+        # global width cap: smallest keys among issuable
+        g_key = jnp.where(issuable, key, BIG)
+        g_rank = (g_key[None, :] < g_key[:, None]).sum(axis=1).astype(I32)
         fire = issuable & (g_rank < c.issue_width)
-        # among fired entries of a class, k-th by age → k-th free unit by index
-        f_age = jnp.where(fire, st["rs_age"], BIG)
-        f_older = (f_age[None, :] < f_age[:, None]) & same_cls & fire[None, :]
-        f_rank = f_older.sum(axis=1).astype(I32)
-        free_rank = (jnp.cumsum(free.astype(I32)) - 1).astype(I32)
+        # among fired entries of a class, k-th by key → k-th free unit by index
+        f_key = jnp.where(fire, key, BIG)
+        f_ahead = (f_key[None, :] < f_key[:, None]) & same_cls & fire[None, :]
+        f_rank = f_ahead.sum(axis=1).astype(I32)
         # per-class free rank: rank among free units of same class, by fu index
         cls_eq = fu_cls[None, :] == fu_cls[:, None]
         lower = cls_eq & free[None, :] & (jnp.arange(NFU)[None, :]
                                           < jnp.arange(NFU)[:, None])
         unit_rank = lower.sum(axis=1).astype(I32)
-        del free_rank
         # match matrix: entry e → unit u
         m = (fire[:, None] & free[None, :]
              & (st["rs_func"][:, None] == fu_cls[None, :])
              & (f_rank[:, None] == unit_rank[None, :]))
-        unit_of_entry = jnp.argmax(m, axis=1)      # valid where fire
         entry_of_unit = jnp.argmax(m, axis=0)      # valid where any col
         unit_hit = m.any(axis=0)
 
@@ -303,11 +336,12 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
         st["fu_src"] = jnp.where(unit_hit, st["rs_src"][entry_of_unit], st["fu_src"])
         st["fu_spec"] = jnp.where(unit_hit, st["rs_spec"][entry_of_unit],
                                   st["fu_spec"])
+        st["fu_pid"] = jnp.where(unit_hit, st["rs_pid"][entry_of_unit],
+                                 st["fu_pid"])
         st["tr_issue"] = st["tr_issue"].at[
             jnp.where(fire, st["rs_uid"], 0)].set(st["cycle"])
         st["tr_issue"] = st["tr_issue"].at[0].set(NEG)
         st["rs_valid"] = st["rs_valid"] & ~fire
-        del unit_of_entry
         return st
 
     # ------------------------------------------------------------------
@@ -446,7 +480,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
                      ("rs_dep", dep), ("rs_age", st["age"]),
                      ("rs_out_s", phys_out), ("rs_out_e", phys_oe),
                      ("rs_src", out_s), ("rs_exec", func_cycles[jnp.clip(acc, 0, NF - 1)]),
-                     ("rs_spec", spec)):
+                     ("rs_spec", spec), ("rs_pid", F["pid"][pcc])):
             st[k] = st[k].at[rs_new].set(jnp.where(dispatch, v, st[k][rs_new]))
         st["tr_func"] = st["tr_func"].at[uidc].set(
             jnp.where(dispatch, acc, st["tr_func"][uidc]))
@@ -540,12 +574,12 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
     # ------------------------------------------------------------------
     # full step + driver
     # ------------------------------------------------------------------
-    def step(st, exists, F, p_len):
+    def step(st, exists, F, p_len, prio, quota):
         st = fu_tick(st, exists)
         st, br_ready = memread_tick(st)
         st, br_ready = cdb_grant(st, br_ready)
         st = branch_resolve(st, br_ready)
-        st = rs_issue(st, exists)
+        st = rs_issue(st, exists, prio, quota)
         st = frontend(st, F, p_len)
         done = ((st["pc"] >= p_len) & ~st["rs_valid"].any() & ~st["fu_busy"].any()
                 & ~st["cdb_valid"].any() & ~st["br_active"] & ~st["mr_active"]
@@ -556,18 +590,23 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
         st["halted"] = done
         return st
 
-    def run(ftab, p_len, n_fu, mem_init, effects):
+    def run(ftab, p_len, n_fu, mem_init, effects, prio=None, quota=None):
         F = {name: ftab[:, i].astype(I32)
              for i, name in enumerate(isa.FIELDS)}
         p_len = jnp.asarray(p_len, I32)
         exists = fu_pos < n_fu[fu_cls]
+        if prio is None:
+            prio = jnp.zeros((NUM_PIDS,), I32)
+        if quota is None:
+            quota = jnp.full((NUM_PIDS,), BIG, I32)
         st = init_state(mem_init, effects)
 
         def cond(st):
             return (~st["halted"] & ~st["overflow"]
                     & (st["cycle"] < spec.max_cycles))
 
-        st = jax.lax.while_loop(cond, lambda s: step(s, exists, F, p_len), st)
+        st = jax.lax.while_loop(
+            cond, lambda s: step(s, exists, F, p_len, prio, quota), st)
         return dict(
             cycles=st["cycle"], halted=st["halted"], overflow=st["overflow"],
             n_tasks=st["next_uid"] - 1, spec_aborted=st["spec_aborted"],
@@ -614,15 +653,27 @@ def simulate(code: np.ndarray, costs: SchedulerCosts,
              params: HtsParams = HtsParams(),
              n_fu=None, mem_init=None, effects=None,
              event_skip: bool = True, max_cycles: int = 5_000_000,
-             max_fu_per_class: int = 16, max_prog: int = 256) -> dict[str, Any]:
-    """One-shot convenience wrapper around the cached compiled machine."""
-    ms = MachineSpec(params=params, costs=costs, event_skip=event_skip,
+             max_fu_per_class: int = 16, max_prog: int = 256,
+             policy: SchedPolicy | None = None) -> dict[str, Any]:
+    """One-shot convenience wrapper around the cached compiled machine.
+
+    ``policy`` (defaulting to ``params.policy``) is lowered to the traced
+    ``prio``/``quota`` runtime arrays — the compiled machine is shared
+    across policies, so sweeping weights never recompiles.
+    """
+    pol = policy if policy is not None else params.policy
+    # the policy reaches the machine as runtime data, never as part of the
+    # compilation key — canonicalise it out of the cached MachineSpec
+    ms = MachineSpec(params=dataclasses.replace(params, policy=SchedPolicy()),
+                     costs=costs, event_skip=event_skip,
                      max_cycles=max_cycles, max_fu_per_class=max_fu_per_class)
     run = _compiled(ms, max_prog)
     ftab, p_len = pack_program(code, max_prog)
     n_fu = jnp.asarray(n_fu if n_fu is not None else params.n_fu, I32)
     mem, eff = images(params, mem_init, effects)
-    out = run(jnp.asarray(ftab), p_len, n_fu, jnp.asarray(mem), jnp.asarray(eff))
+    out = run(jnp.asarray(ftab), p_len, n_fu, jnp.asarray(mem),
+              jnp.asarray(eff), jnp.asarray(pol.weight_array(), I32),
+              jnp.asarray(pol.quota_array(), I32))
     return jax.tree.map(np.asarray, out)
 
 

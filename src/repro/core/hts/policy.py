@@ -1,0 +1,149 @@
+"""Scheduling policy: per-pid priority weights and per-pid FU quotas.
+
+The paper's multi-application sharing story gives every tenant equal
+standing: the reservation station issues strictly in *age* order, so a
+greedy tenant that keeps the RS full can starve a latency-sensitive one
+(``Result.fairness`` measures exactly this).  Priority-aware scheduling
+for heterogeneous accelerator pools (Chen & Marculescu 2017) and the
+hardware-HEFT scheduler of Fusco et al. 2022 both recover QoS with cheap
+priority/quota logic in the arbiter; :class:`SchedPolicy` is that logic's
+configuration:
+
+* **weights** — per-pid priority weight.  The RS arbiter issues
+  priority-class first (higher weight wins), age order *within* a class;
+  all-equal weights degrade to the paper's pure age order bit-for-bit.
+* **quotas** — optional per-pid cap on *in-flight accelerator units per
+  function class*.  A pid at its cap is masked out of the per-class
+  free-unit ranking until one of its tasks completes; the freed unit
+  falls to the next eligible entry (the arbiter stays work-conserving).
+
+A policy is **data, not configuration**: the JAX machine receives the
+weight/quota arrays as traced runtime arguments (like ``n_fu``), so
+sweeping priority ratios never recompiles and can ride the same ``vmap``
+as the FU axis.  The golden oracle implements the identical arbitration
+sequentially; ``hts.compare`` proves the two agree on every scenario.
+
+>>> pol = SchedPolicy.of(weights={1: 8}, quotas={2: 1})
+>>> pol.weight_of(1), pol.weight_of(2), pol.quota_of(2)
+(8, 0, 1)
+>>> int(pol.weight_array()[1])
+8
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional
+
+import numpy as np
+
+#: pid is a 4-bit ISA field (Table I) — 16 addressable processes.
+NUM_PIDS = 16
+#: weights are clipped to [0, PRIO_CAP] so the combined issue key
+#: ``(PRIO_CAP - weight) * AGE_SPAN + age`` stays an exact int32.
+PRIO_CAP = 1 << 12
+#: must exceed any task age (age increments once per dispatched task and
+#: is bounded by ``HtsParams.max_tasks``).
+AGE_SPAN = 1 << 17
+#: quota value meaning "uncapped" (larger than any possible in-flight count).
+NO_QUOTA = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedPolicy:
+    """Per-pid scheduling policy (hashable: safe inside ``HtsParams``).
+
+    Use :meth:`of` to build one from plain dicts; the stored form is
+    sorted ``(pid, value)`` tuples so two policies with the same content
+    hash and compare equal.
+    """
+    weights: tuple[tuple[int, int], ...] = ()   # (pid, priority weight)
+    quotas: tuple[tuple[int, int], ...] = ()    # (pid, max in-flight/class)
+    default_weight: int = 0
+
+    @classmethod
+    def of(cls, weights: Optional[Mapping[int, int]] = None,
+           quotas: Optional[Mapping[int, int]] = None,
+           default_weight: int = 0) -> "SchedPolicy":
+        """Build a policy from ``{pid: weight}`` / ``{pid: quota}`` dicts."""
+        def norm(m, what, lo, hi):
+            items = []
+            for pid, v in sorted((m or {}).items()):
+                if not 0 <= int(pid) < NUM_PIDS:
+                    raise ValueError(f"pid {pid} outside the 4-bit ISA "
+                                     f"field [0, {NUM_PIDS})")
+                if not lo <= int(v) <= hi:
+                    raise ValueError(f"{what} for pid {pid} must be in "
+                                     f"[{lo}, {hi}], got {v}")
+                items.append((int(pid), int(v)))
+            return tuple(items)
+        if not 0 <= int(default_weight) <= PRIO_CAP:
+            raise ValueError(f"default_weight must be in [0, {PRIO_CAP}], "
+                             f"got {default_weight}")
+        return cls(weights=norm(weights, "weight", 0, PRIO_CAP),
+                   quotas=norm(quotas, "quota", 1, NO_QUOTA),
+                   default_weight=int(default_weight))
+
+    # ----------------------------------------------------------- lookups
+    def weight_of(self, pid: int) -> int:
+        return dict(self.weights).get(pid, self.default_weight)
+
+    def quota_of(self, pid: int) -> int:
+        """Per-class in-flight cap for ``pid`` (``NO_QUOTA`` if uncapped)."""
+        return dict(self.quotas).get(pid, NO_QUOTA)
+
+    @property
+    def is_default(self) -> bool:
+        """True iff this policy degrades to pure age-order arbitration."""
+        return (not self.quotas
+                and all(w == self.default_weight for _, w in self.weights))
+
+    # ------------------------------------------------------ array forms
+    def weight_array(self, num_pids: int = NUM_PIDS) -> np.ndarray:
+        """(num_pids,) int32 weight table (clipped to [0, PRIO_CAP])."""
+        arr = np.full((num_pids,), self.default_weight, np.int32)
+        for pid, w in self.weights:
+            arr[pid] = w
+        return np.clip(arr, 0, PRIO_CAP)
+
+    def quota_array(self, num_pids: int = NUM_PIDS) -> np.ndarray:
+        """(num_pids,) int32 per-class in-flight caps (NO_QUOTA = uncapped)."""
+        arr = np.full((num_pids,), NO_QUOTA, np.int32)
+        for pid, q in self.quotas:
+            arr[pid] = q
+        return arr
+
+    # --------------------------------------------------------- utilities
+    def merge_with(self, other: "SchedPolicy") -> "SchedPolicy":
+        """Union of two policies; conflicting entries for a pid are an error
+        (used by :meth:`builder.Program.merge` to combine tenant policies)."""
+        if other.default_weight != self.default_weight:
+            raise ValueError("cannot merge policies with different "
+                             "default weights")
+        out_w, out_q = dict(self.weights), dict(self.quotas)
+        for src, dst, what in ((other.weights, out_w, "weight"),
+                               (other.quotas, out_q, "quota")):
+            for pid, v in src:
+                if pid in dst and dst[pid] != v:
+                    raise ValueError(f"conflicting {what} for pid {pid}: "
+                                     f"{dst[pid]} vs {v}")
+                dst[pid] = v
+        return SchedPolicy.of(out_w, out_q, self.default_weight)
+
+    def issue_key(self, pid: int, age: int) -> int:
+        """The arbiter's scalar sort key: priority class first (higher
+        weight = smaller key), age order within a class.  Both simulators
+        order RS entries by exactly this value."""
+        w = min(max(self.weight_of(pid), 0), PRIO_CAP)
+        return (PRIO_CAP - w) * AGE_SPAN + age
+
+    def describe(self) -> str:
+        if self.is_default:
+            return "age-order (no priorities, no quotas)"
+        parts = []
+        if self.weights:
+            parts.append("weights " + ",".join(f"{p}:{w}"
+                                               for p, w in self.weights))
+        if self.quotas:
+            parts.append("quotas " + ",".join(f"{p}:{q}"
+                                              for p, q in self.quotas))
+        return "; ".join(parts)

@@ -46,12 +46,13 @@ class Bench:
     effects: dict[int, int]
     n_tasks_hint: int = 0   # static task count (0 if loop/branch dependent)
     program: Program | None = None
+    policy: object | None = None   # SchedPolicy riding along (hts.run default)
 
     @classmethod
     def of(cls, p: Program) -> "Bench":
         built = p.build()
         return cls(p.name, built.asm, built.mem_init, built.effects,
-                   built.n_tasks_hint, p)
+                   built.n_tasks_hint, p, built.policy)
 
 
 def _mix_program(name: str) -> tuple[Program, "object"]:

@@ -21,6 +21,12 @@ failing fuzz case is one integer away from a reproduction:
     >>> shared = hts.run(sc.merged, n_fu=2)
     >>> shared.fairness(solo_results(sc, n_fu=2)).max_slowdown
 
+``mixed_priority=True`` scenarios additionally draw per-pid priority
+weights (and sometimes a per-class FU quota) into a
+:class:`~repro.core.hts.policy.SchedPolicy` attached to the merge, so the
+same differential fuzzing loop exercises the weighted/quota arbiter —
+``hts.compare`` picks the policy up automatically.
+
 Resource rationing
 ------------------
 One merged machine must hold every tenant at once, so the generator rations
@@ -43,6 +49,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .builder import Program
+from .policy import SchedPolicy
 from .programs import Bench, INPUT, INPUT_WORDS
 
 #: first tenant region base (above the shared input frame) and the top of the
@@ -69,6 +76,7 @@ class Scenario:
     pids: tuple[int, ...]
     tenants: tuple[Bench, ...]          # builder-backed, one per pid
     merged: Bench                       # N-way Program.merge, distinct pids
+    policy: Optional[SchedPolicy] = None  # mixed-priority scenarios only
 
     @property
     def n_tenants(self) -> int:
@@ -179,12 +187,27 @@ def _generate_tenant(rng: np.random.Generator, pid: int, base: int, span: int,
     return Bench.of(t.prog)
 
 
+#: weight pool for ``mixed_priority`` scenarios: a QoS class per tenant,
+#: skewed towards best-effort (0) with occasional high-priority tenants.
+PRIORITY_POOL = (0, 0, 1, 2, 4, 8)
+
+
 def generate_scenario(seed: int, *, n_tenants: Optional[int] = None,
                       kernels: Sequence[str] = DSP_MIX,
                       max_tasks: int = 5,
-                      name: Optional[str] = None) -> Scenario:
+                      name: Optional[str] = None,
+                      mixed_priority: bool = False) -> Scenario:
     """One seeded scenario: ``n_tenants`` (2–8, drawn when omitted) programs
-    with distinct pids, disjoint region/register budgets, merged N-way."""
+    with distinct pids, disjoint region/register budgets, merged N-way.
+
+    ``mixed_priority=True`` additionally draws a :class:`SchedPolicy` for the
+    merge — per-pid priority weights from :data:`PRIORITY_POOL` (at least one
+    tenant strictly above the rest so the weighted arbiter provably engages)
+    and, with probability ½ per scenario, a per-class FU quota of 1–2 units
+    on one tenant.  The tenant *programs* are identical to the unprioritised
+    scenario of the same seed (the policy draws happen after program
+    generation), so fuzz failures stay one integer away from reproduction.
+    """
     rng = np.random.default_rng(seed)
     if n_tenants is None:
         n_tenants = int(rng.integers(2, 9))
@@ -197,11 +220,21 @@ def generate_scenario(seed: int, *, n_tenants: Optional[int] = None,
         _generate_tenant(rng, pid, TENANT_BASE + i * span, span, reg_budget,
                          kernels, max_tasks)
         for i, pid in enumerate(pids))
+    priorities = quotas = None
+    if mixed_priority:
+        weights = {pid: int(rng.choice(PRIORITY_POOL)) for pid in pids}
+        boosted = int(rng.choice(pids))
+        weights[boosted] = max(weights.values()) + int(rng.integers(1, 4))
+        priorities = weights
+        quotas = ({int(rng.choice(pids)): int(rng.integers(1, 3))}
+                  if rng.random() < 0.5 else None)
     merged_prog = Program.merge([b.program for b in tenants],
                                 name or f"scenario_{seed}",
-                                require_distinct_pids=True)
+                                require_distinct_pids=True,
+                                priorities=priorities, quotas=quotas)
     return Scenario(name=merged_prog.name, seed=seed, pids=pids,
-                    tenants=tenants, merged=Bench.of(merged_prog))
+                    tenants=tenants, merged=Bench.of(merged_prog),
+                    policy=merged_prog.policy)
 
 
 def generate_scenarios(n: int, *, seed0: int = 0, **kwargs):

@@ -1,0 +1,91 @@
+"""Documentation executability: every fenced ```python example in README.md
+and docs/*.md runs, and every relative markdown link resolves.
+
+Conventions (see docs/ARCHITECTURE.md "Documentation CI"):
+
+* blocks fenced as ```python execute, in order, in one namespace per file
+  (so a later snippet can build on an earlier one, like a REPL session);
+* an HTML comment line ``<!-- no-run -->`` immediately before a fence
+  skips that block (reserved for illustrative fragments);
+* all other fences (```bash, ```text, output blocks...) are not executed;
+* relative links ``[text](path)`` must point at files that exist.
+
+CI runs this module as its own job (the "docs" job) so documented
+snippets cannot rot; it is also part of the fast tier.
+"""
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+DOC_FILES = sorted(
+    [ROOT / "README.md"] + list((ROOT / "docs").glob("*.md")),
+    key=lambda p: p.name)
+
+_FENCE = re.compile(r"^```(\w*)\s*$")
+_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+
+
+def _python_blocks(path: pathlib.Path):
+    """(start_line, source) for each runnable ```python fence in ``path``."""
+    blocks, lines = [], path.read_text().splitlines()
+    i, skip_next = 0, False
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if m and m.group(1) == "python" and not skip_next:
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            blocks.append((start + 1, "\n".join(body)))
+        elif m and m.group(1) == "python":
+            while i + 1 < len(lines) and not lines[i + 1].startswith("```"):
+                i += 1
+            i += 1          # closing fence
+        skip_next = lines[i].strip() == "<!-- no-run -->" if i < len(lines) \
+            else False
+        i += 1
+    return blocks
+
+
+def _doc_ids():
+    return [p.name for p in DOC_FILES]
+
+
+@pytest.mark.parametrize("path", DOC_FILES, ids=_doc_ids())
+def test_docs_exist_and_have_examples(path):
+    assert path.exists()
+    if path.name in ("README.md", "API.md"):
+        assert _python_blocks(path), f"{path.name} has no runnable examples"
+
+
+@pytest.mark.parametrize("path", DOC_FILES, ids=_doc_ids())
+def test_fenced_python_examples_execute(path, monkeypatch):
+    """Execute the file's ```python fences in one shared namespace
+    (from the repo root, like the commands the docs quote)."""
+    monkeypatch.chdir(ROOT)
+    blocks = _python_blocks(path)
+    ns: dict = {"__name__": f"docs_{path.stem}"}
+    for line, src in blocks:
+        try:
+            exec(compile(src, f"{path.name}:{line}", "exec"), ns)
+        except Exception as e:     # noqa: BLE001 - report snippet location
+            pytest.fail(f"{path.name} example at line {line} failed: "
+                        f"{type(e).__name__}: {e}")
+
+
+@pytest.mark.parametrize("path", DOC_FILES, ids=_doc_ids())
+def test_relative_links_resolve(path):
+    text = path.read_text()
+    # strip fenced code before scanning for links
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in _LINK.findall(text):
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        resolved = (path.parent / target).resolve()
+        assert resolved.exists(), (
+            f"{path.name}: broken relative link -> {target}")
