@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import hts
-from repro.core.hts import costs, multiapp
+from repro.core.hts import costs, programs
 
 PARAMS = hts.HtsParams(mem_words=4096, tracker_entries=128)
 
@@ -23,9 +23,9 @@ def multi_app_sharing(bands: int = 2, tiles: int = 40):
     comparable standalone makespans, so sharing should approach
     max(a, b) ≪ a + b."""
     rows = []
-    audio = multiapp.audio_straightline(bands)
-    image = multiapp.image_compression(tiles)
-    shared = multiapp.interleave(audio, image)
+    audio = programs.audio_straightline(bands)
+    image = programs.image_compression(tiles)
+    shared = programs.merge_benches([audio, image])
     for n_fu in (1, 2, 4):
         ca = hts.run(audio, n_fu=n_fu, params=PARAMS).cycles
         ci = hts.run(image, n_fu=n_fu, params=PARAMS).cycles

@@ -1,0 +1,355 @@
+"""Population-scale batched simulation benchmark: scenarios/sec.
+
+The paper's system-level claim is many applications sharing one
+accelerator pool; scenario studies — the HEFT-style dynamic-workload
+sweeps and priority-mix studies the ROADMAP cites — need *populations* of
+multi-tenant scenarios, and before this PR every one of them was a Python
+loop of ``hts.run``.  This driver measures what the scenario vmap axis
+buys on the two population shapes that matter:
+
+* **QoS policy grid** (the headline): the PR-3 starvation shape — a
+  latency-sensitive chain arriving after N greedy same-class floods —
+  instantiated as a (tenant-mix × SchedPolicy) grid, 64 scenario
+  instances.  Policies are runtime data and each mix is one program, so
+  the population is step-count-homogeneous: the shape where one batched
+  machine shines.  This is exactly the study ``benchmarks/priority.py``
+  runs as a Python loop today.
+* **generated scenario population**: 64 seeded ``workloads`` scenarios
+  (random tenant counts, kernels, loops, branches).  Heterogeneous step
+  counts cap the win (a batch runs as long as its slowest lane — see
+  ``batch.plan_chunks``), so this section reports the honest smaller
+  speedup alongside the headline.
+
+Both paths are measured as medians over repetitions, warmed up (no
+compile time in the numbers), and the loop baseline is the real
+pre-population workflow: ``hts.run(scenario, n_fu=..., policy=...)`` with
+facade defaults.  The batched path is ``batch.pack_population`` +
+``hts.run_many`` over work-planned chunks — shape bucketing, capacity
+right-sizing (``max_tasks``/``cdb_entries``) and chunking are part of the
+feature being measured.
+
+The run also *differentially verifies* the batched path: ``hts.compare``
+on a population slice checks the vmapped machine (event-skip on and off)
+against a golden-oracle loop, scenario by scenario.
+
+    PYTHONPATH=src python -m benchmarks.population            # writes JSON
+    PYTHONPATH=src python -m benchmarks.population --smoke    # CI-sized run
+
+JSON lands in ``BENCH_population.json`` (repo root by default); see
+docs/BENCHMARKS.md for the schema.  Headline acceptance: the batched path
+sustains **>= 5x scenarios/sec** over the loop on a >= 64-scenario
+population, with golden equivalence proven on every scenario.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import hts
+from repro.core.hts import batch, workloads
+from repro.core.hts.builder import Program
+from repro.core.hts.policy import SchedPolicy
+
+DEFAULT_REPS = 5
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_population.json"
+
+#: scenario-sized capacities: every population scenario stays well under
+#: 192 tasks, and the machine's trace/CDB state scales with these, so the
+#: defaults (1024) would pay for capacity no scenario uses.  The batched
+#: path right-sizes them; the loop baseline keeps facade defaults — that
+#: is the workflow being replaced.
+PARAMS = hts.HtsParams(max_tasks=192, cdb_entries=64)
+
+HI_PID = 1
+
+
+# ---------------------------------------------------------------------------
+# the QoS policy grid (headline population)
+# ---------------------------------------------------------------------------
+def _hi_chain(chain: int = 8, delay: int = 10) -> Program:
+    """Latency-sensitive tenant: RAW chain arriving after ``delay`` nops."""
+    p = Program("hi", region_base=0x100)
+    frame = p.input(0x10, 4, "frame")
+    for _ in range(delay):
+        p.nop()
+    with p.process(HI_PID):
+        prev = frame
+        for i in range(chain):
+            prev = p.task("dct", in_=prev, out=4, in_size=4, tid=i)
+    return p
+
+
+def _greedy(pid: int, tasks: int = 10) -> Program:
+    """Best-effort flood: independent same-class tasks (compact bases so
+    up to 6 tenants stay inside the default 1024-word memory)."""
+    p = Program(f"greedy{pid}", region_base=0x180 + 0x80 * (pid - 2))
+    frame = p.input(0x10, 4, "frame")
+    with p.process(pid):
+        for i in range(tasks):
+            p.task("dct", in_=frame, out=4, tid=i & 0xF)
+    return p
+
+
+def _contended(n_greedy: int) -> Program:
+    return Program.merge(
+        [_hi_chain()] + [_greedy(2 + k) for k in range(n_greedy)],
+        f"contended_{n_greedy}g", require_distinct_pids=True)
+
+
+def build_grid(mixes=(2, 3, 4, 5), weights=(0, 1, 2, 8),
+               quotas=(None, 1), rs_caps=(None, 4)):
+    """(program, policy) instances of the tenant-mix × policy grid."""
+    instances = []
+    for g in mixes:
+        built = _contended(g).build()
+        greedy_pids = tuple(range(2, 2 + g))
+        for w in weights:
+            for q in quotas:
+                for rc in rs_caps:
+                    pol = SchedPolicy.of(
+                        weights=({HI_PID: w} if w else None),
+                        quotas=({p: q for p in greedy_pids} if q else None),
+                        rs_caps=({p: rc for p in greedy_pids}
+                                 if rc else None))
+                    instances.append((built, pol))
+    return instances
+
+
+def _median_wall(fn, reps: int) -> float:
+    walls = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        walls.append(time.perf_counter() - t0)
+    return float(np.median(walls)) * 1e6
+
+
+def measure_grid(instances, *, n_fu: int = 2, chunk: int = 32,
+                 scheduler: str = "hts_spec",
+                 reps: int = DEFAULT_REPS) -> dict:
+    """Loop-vs-batched scenarios/sec on the policy grid (median of reps)."""
+    n = len(instances)
+    packs = [hts.pack_population([b for b, _ in instances[k:k + chunk]],
+                                 n_fu=n_fu, params=PARAMS,
+                                 policy=[p for _, p in instances[k:k + chunk]])
+             for k in range(0, n, chunk)]
+
+    def loop():
+        return [hts.run(b, scheduler=scheduler, n_fu=n_fu, policy=pol)
+                for b, pol in instances]
+
+    def batched():
+        return [hts.run_many(pk, scheduler=scheduler) for pk in packs]
+
+    loop_res, batch_res = loop(), batched()       # warm both compiled paths
+    batch_cycles = [int(c) for r in batch_res for c in r.cycles]
+    assert batch_cycles == [r.cycles for r in loop_res], \
+        "batched and looped cycle counts diverged"
+
+    loop_us = _median_wall(loop, reps)
+    batched_us = _median_wall(batched, reps)
+    return {
+        "population": "policy_grid",
+        "n_scenarios": n,
+        "n_chunks": len(packs),
+        "chunk": chunk,
+        "n_fu": n_fu,
+        "scheduler": scheduler,
+        "reps": reps,
+        "loop": {"total_us": loop_us,
+                 "scenarios_per_sec": n / (loop_us * 1e-6)},
+        "batched": {"total_us": batched_us,
+                    "scenarios_per_sec": n / (batched_us * 1e-6)},
+        "speedup": loop_us / batched_us,
+        "hi_slowdown_spread": _grid_qos_spread(instances, batch_res),
+    }
+
+
+def _grid_qos_spread(instances, batch_res) -> dict:
+    """The study the grid exists for: pid-1 makespan across the policy
+    axis, straight off the batched results (per-scenario slicing)."""
+    makespans = [r[i].app_makespan(HI_PID)
+                 for r in batch_res for i in range(len(r))]
+    return {"min": int(min(makespans)), "max": int(max(makespans))}
+
+
+# ---------------------------------------------------------------------------
+# generated scenario population (heterogeneous)
+# ---------------------------------------------------------------------------
+def build_population(n: int, *, seed0: int = 0,
+                     kernels=workloads.CHEAP_MIX,
+                     max_tasks: int = 4) -> workloads.Population:
+    """One max-bucket population of ``n`` seeded multi-tenant scenarios."""
+    (pop,) = workloads.generate_population(
+        n, seed0=seed0, bucket=False, kernels=kernels, max_tasks=max_tasks)
+    return pop
+
+
+def measure_generated(pop: workloads.Population, *, n_fu: int = 2,
+                      scheduler: str = "hts_spec",
+                      reps: int = DEFAULT_REPS) -> dict:
+    """Loop-vs-batched on the heterogeneous generated population."""
+    programs = list(pop.programs)
+    plan = batch.plan_chunks(programs)
+    packs = [hts.pack_population([programs[i] for i in ch], n_fu=n_fu,
+                                 max_prog=pop.max_prog, params=PARAMS)
+             for ch in plan]
+
+    def loop():
+        return [hts.run(p, scheduler=scheduler, n_fu=n_fu)
+                for p in programs]
+
+    def batched():
+        return [hts.run_many(pk, scheduler=scheduler) for pk in packs]
+
+    loop_res, batch_res = loop(), batched()
+    got = {}
+    for r in batch_res:
+        for nm, c in zip(r.names, r.cycles):
+            got[nm] = int(c)
+    assert [got[p.name] for p in programs] == [r.cycles for r in loop_res], \
+        "batched and looped cycle counts diverged"
+
+    loop_us = _median_wall(loop, reps)
+    batched_us = _median_wall(batched, reps)
+    n = len(programs)
+    return {
+        "population": "generated_scenarios",
+        "n_scenarios": n,
+        "seeds": [pop.seeds[0], pop.seeds[-1]],
+        "max_prog": pop.max_prog,
+        "chunk_widths": [len(c) for c in plan],
+        "n_fu": n_fu,
+        "scheduler": scheduler,
+        "reps": reps,
+        "loop": {"total_us": loop_us,
+                 "scenarios_per_sec": n / (loop_us * 1e-6)},
+        "batched": {"total_us": batched_us,
+                    "scenarios_per_sec": n / (batched_us * 1e-6)},
+        "speedup": loop_us / batched_us,
+    }
+
+
+# ---------------------------------------------------------------------------
+# differential verification
+# ---------------------------------------------------------------------------
+def verify(instances, generated: workloads.Population, *,
+           n_fu: int = 2, grid_schedulers=("hts_spec",),
+           gen_schedulers=("naive", "hts_spec")) -> dict:
+    """Population compare: golden loop ≡ one vmapped batch per mode."""
+    grid = hts.compare([b for b, _ in instances],
+                       policy=[p for _, p in instances],
+                       schedulers=grid_schedulers, n_fu=n_fu, params=PARAMS)
+    gen = hts.compare(list(generated.programs), schedulers=gen_schedulers,
+                      n_fu=n_fu, max_prog=generated.max_prog, params=PARAMS)
+    return {
+        "verified": True,                 # compare raises on any mismatch
+        "grid": {"n_scenarios": len(grid),
+                 "schedulers": list(grid.schedulers),
+                 "n_modes": grid.n_modes},
+        "generated": {"n_scenarios": len(gen),
+                      "schedulers": list(gen.schedulers),
+                      "n_modes": gen.n_modes},
+    }
+
+
+def trajectory(*, grid_instances=None, generated_n: int = 64,
+               reps: int = DEFAULT_REPS, verify_grid_n: int = 64,
+               verify_gen_n: int = 16) -> dict:
+    instances = (build_grid() if grid_instances is None else grid_instances)
+    pop = build_population(generated_n)
+    grid_point = measure_grid(instances, reps=reps)
+    gen_point = measure_generated(pop, reps=reps)
+    golden_equiv = verify(instances[:verify_grid_n],
+                          build_population(verify_gen_n))
+    return {
+        "bench": "population",
+        "grid": grid_point,
+        "generated": gen_point,
+        "golden_equiv": golden_equiv,
+        "headline": {
+            "population": "policy_grid",
+            "n_scenarios": grid_point["n_scenarios"],
+            "scenarios_per_sec_batched":
+                grid_point["batched"]["scenarios_per_sec"],
+            "scenarios_per_sec_loop":
+                grid_point["loop"]["scenarios_per_sec"],
+            "speedup": grid_point["speedup"],
+            "target_speedup": 5.0,
+            "met": grid_point["speedup"] >= 5.0,
+            "generated_population_speedup": gen_point["speedup"],
+            "golden_equiv_all_scenarios": golden_equiv["verified"],
+        },
+    }
+
+
+def section():
+    """``benchmarks.run`` integration: (name, us, derived) rows."""
+    instances = build_grid(mixes=(2, 4), weights=(0, 8),
+                           quotas=(None, 1), rs_caps=(None, 4))
+    point = measure_grid(instances, chunk=16, reps=1)
+    return [(f"population/grid{point['n_scenarios']}/fu{point['n_fu']}",
+             point["batched"]["total_us"], {
+                 "speedup_vs_loop": point["speedup"],
+                 "scenarios_per_sec":
+                     point["batched"]["scenarios_per_sec"],
+             })]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--reps", type=int, default=DEFAULT_REPS)
+    ap.add_argument("--generated-n", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (16-instance grid, 8 generated, "
+                         "1 rep; no JSON unless --out is given)")
+    ap.add_argument("--out", default=None,
+                    help=f"output path (default {DEFAULT_OUT}; "
+                         "smoke runs write no JSON unless set)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        instances = build_grid(mixes=(2, 4), weights=(0, 8),
+                               quotas=(None, 1), rs_caps=(None, 4))
+        data = trajectory(grid_instances=instances, generated_n=8,
+                          reps=1, verify_grid_n=4, verify_gen_n=4)
+    else:
+        data = trajectory(generated_n=args.generated_n, reps=args.reps)
+
+    out = None
+    if args.out:
+        out = pathlib.Path(args.out)
+    elif not args.smoke:
+        out = DEFAULT_OUT
+    if out is not None:
+        out.write_text(json.dumps(data, indent=2, default=float) + "\n")
+        print(f"wrote {out}")
+
+    for point in (data["grid"], data["generated"]):
+        n = point["n_scenarios"]
+        print(f"  {point['population']} ({n} scenarios, "
+              f"{point['scheduler']}, n_fu={point['n_fu']}):")
+        print(f"    loop     {point['loop']['total_us']:>12.0f} us  "
+              f"({point['loop']['scenarios_per_sec']:>8.1f} scen/s)")
+        print(f"    batched  {point['batched']['total_us']:>12.0f} us  "
+              f"({point['batched']['scenarios_per_sec']:>8.1f} scen/s)")
+        print(f"    speedup  {point['speedup']:.2f}x")
+    h = data["headline"]
+    print(f"  headline: {h['speedup']:.2f}x on the {h['n_scenarios']}"
+          f"-scenario policy grid (target >= {h['target_speedup']}x: "
+          f"{'MET' if h['met'] else 'NOT MET'})")
+    g = data["golden_equiv"]
+    print(f"  golden_equiv: grid {g['grid']['n_scenarios']} scenarios x "
+          f"{g['grid']['n_modes']} modes {g['grid']['schedulers']}; "
+          f"generated {g['generated']['n_scenarios']} x "
+          f"{g['generated']['n_modes']} {g['generated']['schedulers']} — "
+          "all equal")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,8 @@ from __future__ import annotations
 import argparse
 import json
 
-from benchmarks import extensions, multitenant, paper_figs, priority
+from benchmarks import extensions, multitenant, paper_figs, population, \
+    priority
 
 SECTIONS = {
     "tableII": paper_figs.table2,
@@ -21,6 +22,7 @@ SECTIONS = {
     "multiapp": extensions.multi_app_sharing,
     "multitenant": multitenant.section,
     "priority": priority.section,
+    "population": population.section,
     "ablation": extensions.design_ablation,
 }
 

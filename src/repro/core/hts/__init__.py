@@ -5,10 +5,17 @@ Public surface (the rest of the repo goes through this):
 * :class:`Program` / :class:`Region` / :class:`Reg` — the typed
   Program-Builder front-end (``builder.py``): tasks, regions, loops,
   branches, processes, lowered to the 128-bit Table-I ISA.
-* :func:`run` / :func:`sweep` / :func:`compare` — the unified simulation
-  facade (``api.py``) over the compiled JAX machine (``machine.py``) and the
-  pure-Python golden oracle (``golden.py``); ``compare`` is the differential
-  runner (golden ≡ machine, event-skip on and off, per scheduler).
+* :func:`run` / :func:`run_many` / :func:`sweep` / :func:`compare` — the
+  unified simulation facade (``api.py``) over the compiled JAX machine
+  (``machine.py``) and the pure-Python golden oracle (``golden.py``);
+  ``compare`` is the differential runner (golden ≡ machine, event-skip on
+  and off, per scheduler).
+* population-scale batching: the *scenario* is a ``vmap`` axis —
+  ``batch.pack_population`` pads N programs to one shape bucket,
+  :func:`run_many` simulates them in one compiled machine call
+  (:class:`PopulationResult` slices back to per-scenario :class:`Result`),
+  :func:`sweep` composes scenario × FU grids, and ``compare`` on a
+  sequence verifies the whole batch against a golden loop.
 * multi-tenant: :meth:`Program.merge` (N-way graph merge with isolation
   checks), ``workloads.py`` (seeded scenario generator), per-pid
   :class:`Result` metrics (``by_pid``/``app_makespan``/``fairness``).
@@ -26,12 +33,14 @@ Public surface (the rest of the repo goes through this):
     >>> print(hts.run(p, scheduler="hts_spec", n_fu=2).table())
 
 Lower layers remain importable directly (``isa``, ``assembler``, ``costs``,
-``golden``, ``machine``, ``programs``, ``multiapp``, ``workloads``) for
+``golden``, ``machine``, ``batch``, ``programs``, ``workloads``) for
 tests and tools.
 """
 from .api import (ALL_SCHEDULERS, CompareReport, FairnessReport,
-                  MismatchError, Result, SimulationError, SweepResult,
-                  TaskRow, compare, run, sweep)
+                  MismatchError, PopulationCompareReport, PopulationResult,
+                  Result, SimulationError, SweepResult, TaskRow, compare,
+                  compare_population, run, run_many, sweep)
+from .batch import PackedPopulation, pack_population, prog_bucket
 from .builder import (BuilderError, BuiltProgram, Program, Reg, Region,
                       TaskHandle, Walker)
 from .costs import SchedulerCosts, costs_by_name
@@ -40,8 +49,10 @@ from .policy import SchedPolicy
 
 __all__ = [
     "ALL_SCHEDULERS", "BuilderError", "BuiltProgram", "CompareReport",
-    "FairnessReport", "HtsParams", "MismatchError", "Program", "Reg",
+    "FairnessReport", "HtsParams", "MismatchError", "PackedPopulation",
+    "PopulationCompareReport", "PopulationResult", "Program", "Reg",
     "Region", "Result", "SchedPolicy", "SchedulerCosts", "SimulationError",
     "SweepResult", "TaskHandle", "TaskRow", "Walker", "compare",
-    "costs_by_name", "run", "sweep",
+    "compare_population", "costs_by_name", "pack_population", "prog_bucket",
+    "run", "run_many", "sweep",
 ]

@@ -1,4 +1,4 @@
-"""Unified HTS simulation facade: ``hts.run`` and ``hts.sweep``.
+"""Unified HTS simulation facade: ``hts.run``, ``hts.run_many``, ``hts.sweep``.
 
 One entry point for every caller of the reproduction — benchmarks, examples
 and tests no longer thread ``assembler.assemble → machine.simulate(...)`` /
@@ -24,14 +24,33 @@ it on either backend:
 Both return the same :class:`Result` with identical per-task schedule rows
 (the two simulators are schedule-equivalence-tested).
 
-``sweep`` wraps the machine's ``vmap`` path: one compiled machine per
-scheduler, the FU-configuration axis batched — the Fig-10 strong-scaling
-experiment as a single call.
+The axes model
+--------------
+Every argument of the compiled machine is a runtime input, so batching is
+a choice of ``vmap`` axes over its 8-argument signature.  Three named axes
+compose (``_vmapped`` stacks them outermost-first):
+
+* the **scenario** axis — everything batched: a *population* of programs,
+  each with its own images, FU counts and policy tables.  ``run_many``
+  drives it and returns a :class:`PopulationResult`; ``batch.py`` packs
+  programs of one shape bucket into the common-shape arrays.
+* the **n_fu** axis — only the FU configuration batched (the Fig-10
+  strong-scaling machinery).  ``sweep`` drives it; handed a population it
+  composes scenario × n_fu in one call.
+* the **policy** axis — only the ``prio``/``quota``/``rs_cap`` tables
+  batched (weights are runtime data, so policy sweeps never recompile).
+
+One compilation is cached per ``(MachineSpec, max_prog, axes)`` — i.e. per
+static shape bucket — no matter how many scenarios, FU points or policies
+ride through it.
 
 ``compare`` is the differential runner: golden oracle vs the compiled
 machine with event-skip on *and* off, per scheduler, schedule-tuple
 equality asserted — the workhorse behind the seeded multi-tenant fuzzer
-(``workloads.py`` / tests/test_hts_multitenant.py).
+(``workloads.py`` / tests/test_hts_multitenant.py).  Handed a sequence of
+programs it verifies a whole population: one vmapped machine batch per
+(scheduler, event-skip mode), checked scenario-by-scenario against a
+golden loop.
 
 Multi-tenant metrics live on :class:`Result`: ``by_pid()`` /
 ``schedule_for`` slice the schedule by owning process, ``app_makespan``
@@ -58,8 +77,8 @@ from typing import Any, Optional, Sequence, Union
 
 import numpy as np
 
-from . import golden, isa, machine
-from .builder import BuiltProgram, Program
+from . import batch, golden, machine
+from .batch import PackedPopulation
 from .costs import (ALL_SCHEDULERS, FUNC_NAMES, NUM_FUNCS, SchedulerCosts,
                     costs_by_name)
 from .golden import HtsParams
@@ -70,66 +89,26 @@ class SimulationError(RuntimeError):
     """A simulation did not halt (hit ``max_cycles``) or overflowed."""
 
 
-# ---------------------------------------------------------------------------
-# program normalisation
-# ---------------------------------------------------------------------------
-@dataclasses.dataclass(frozen=True)
-class _Prepared:
-    name: str
-    code: np.ndarray
-    mem_init: dict[int, int]
-    effects: dict[int, int]
-    policy: Optional[SchedPolicy] = None    # attached by builder/merge
-
-
-def _prepare(program) -> _Prepared:
-    """Accept Program | BuiltProgram | Bench-like | asm text | code array."""
-    if isinstance(program, _Prepared):
-        return program
-    if isinstance(program, Program):
-        program = program.build()
-    if isinstance(program, BuiltProgram):
-        return _Prepared(program.name, program.code, program.mem_init,
-                         program.effects, program.policy)
-    if isinstance(program, str):                      # assembly text
-        from . import assembler
-        return _Prepared("<asm>", assembler.assemble(program), {}, {})
-    if isinstance(program, np.ndarray):               # raw machine code
-        return _Prepared("<code>", program, {}, {})
-    if hasattr(program, "asm"):                       # programs.Bench (duck)
-        from . import assembler
-        return _Prepared(getattr(program, "name", "<bench>"),
-                         assembler.assemble(program.asm),
-                         dict(getattr(program, "mem_init", {}) or {}),
-                         dict(getattr(program, "effects", {}) or {}),
-                         getattr(program, "policy", None))
-    raise TypeError(f"cannot interpret {type(program).__name__} as an HTS "
-                    "program")
-
-
-def _norm_policy(policy: Optional[SchedPolicy], prep: _Prepared,
-                 params: HtsParams) -> SchedPolicy:
-    """Effective policy: explicit arg > program-attached > params default."""
-    if policy is not None:
-        return policy
-    if prep.policy is not None:
-        return prep.policy
-    return params.policy
-
-
-def _norm_n_fu(n_fu) -> tuple[int, ...]:
-    if isinstance(n_fu, (int, np.integer)):
-        return (int(n_fu),) * NUM_FUNCS
-    t = tuple(int(k) for k in n_fu)
-    if len(t) != NUM_FUNCS:
-        raise ValueError(f"n_fu must be an int or {NUM_FUNCS} per-class "
-                         f"counts, got {len(t)}")
-    return t
+# program normalisation lives in batch.py (packing needs it too); the
+# private names remain importable here for callers of the old layout.
+_Prepared = batch.Prepared
+_prepare = batch.prepare
+_norm_n_fu = batch.norm_n_fu
+_norm_policy = batch.norm_policy
 
 
 def _norm_costs(scheduler) -> SchedulerCosts:
     return (costs_by_name(scheduler) if isinstance(scheduler, str)
             else scheduler)
+
+
+def _is_population(program) -> bool:
+    """A sequence of programs (or a packed batch) vs one program.
+
+    Strings (assembly) and ndarrays (machine code) are single programs;
+    lists/tuples of program-ish objects are populations.
+    """
+    return isinstance(program, (PackedPopulation, list, tuple))
 
 
 # ---------------------------------------------------------------------------
@@ -296,6 +275,24 @@ def _golden_rows(res: golden.Result) -> tuple[TaskRow, ...]:
     return tuple(TaskRow(*row) for row in res.schedule_tuple())
 
 
+def _machine_result(name: str, scheduler: str, fu: tuple[int, ...],
+                    out: dict[str, Any], wall_us: float,
+                    pol: SchedPolicy, max_fu_per_class: int) -> Result:
+    """A :class:`Result` from one machine output dict (single scenario)."""
+    halted = bool(out["halted"]) and not bool(out["overflow"])
+    # keep only units that exist under fu (class-major, like golden)
+    busy = np.asarray(out["fu_busy_cycles"]).reshape(NUM_FUNCS,
+                                                     max_fu_per_class)
+    busy_exist = tuple(int(busy[c, u]) for c in range(NUM_FUNCS)
+                       for u in range(fu[c]))
+    return Result(
+        program=name, scheduler=scheduler, backend="jax", n_fu=fu,
+        cycles=int(out["cycles"]), halted=halted,
+        schedule=_machine_rows(out), spec_aborted=int(out["spec_aborted"]),
+        stall_cycles=int(out["stall_cycles"]), fu_busy_cycles=busy_exist,
+        wall_us=wall_us, raw=out, policy=pol)
+
+
 # ---------------------------------------------------------------------------
 # run
 # ---------------------------------------------------------------------------
@@ -329,19 +326,8 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
                                max_fu_per_class=max_fu_per_class,
                                max_prog=max_prog, policy=pol)
         wall = (time.perf_counter() - t0) * 1e6
-        halted = bool(out["halted"]) and not bool(out["overflow"])
-        # keep only units that exist under fu (class-major, like golden)
-        busy = np.asarray(out["fu_busy_cycles"]).reshape(NUM_FUNCS,
-                                                         max_fu_per_class)
-        busy_exist = tuple(int(busy[c, u]) for c in range(NUM_FUNCS)
-                           for u in range(fu[c]))
-        result = Result(
-            program=prep.name, scheduler=cost.name, backend=backend,
-            n_fu=fu, cycles=int(out["cycles"]), halted=halted,
-            schedule=_machine_rows(out),
-            spec_aborted=int(out["spec_aborted"]),
-            stall_cycles=int(out["stall_cycles"]),
-            fu_busy_cycles=busy_exist, wall_us=wall, raw=out, policy=pol)
+        result = _machine_result(prep.name, cost.name, fu, out, wall, pol,
+                                 max_fu_per_class)
     elif backend == "golden":
         g = golden.run(prep.code, cost,
                        dataclasses.replace(params, n_fu=fu, policy=pol),
@@ -367,19 +353,169 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
 
 
 # ---------------------------------------------------------------------------
+# run_many: the scenario axis — a population in one vmapped machine call
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True, eq=False)
+class PopulationResult:
+    """Stacked outcome of one batched population run.
+
+    Array fields are scenario-major (``cycles[i]`` is scenario ``i``);
+    ``self[i]`` materialises scenario ``i`` as an ordinary :class:`Result`
+    (slicing the stacked trace arrays), so every per-scenario metric —
+    ``schedule``, ``by_pid``, ``app_makespan``, ``fairness`` — works
+    unchanged on population runs.
+    """
+    scheduler: str
+    backend: str
+    names: tuple[str, ...]
+    n_fu: np.ndarray                   # (N, NUM_FUNCS)
+    cycles: np.ndarray                 # (N,)
+    halted: np.ndarray                 # (N,) bool (and not overflowed)
+    wall_us: float                     # the one batched call, all scenarios
+    max_fu_per_class: int
+    policies: tuple[SchedPolicy, ...]
+    raw: Any = dataclasses.field(repr=False, default=None)
+    _results: Optional[tuple] = dataclasses.field(repr=False, default=None)
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def __getitem__(self, i: int) -> Result:
+        if self._results is not None:           # golden loop backend
+            return self._results[i]
+        out = {k: v[i] for k, v in self.raw.items()}
+        fu = tuple(int(x) for x in self.n_fu[i])
+        return _machine_result(self.names[i], self.scheduler, fu, out,
+                               self.wall_us / max(len(self), 1),
+                               self.policies[i], self.max_fu_per_class)
+
+    def __iter__(self):
+        return (self[i] for i in range(len(self)))
+
+    @property
+    def all_halted(self) -> bool:
+        return bool(np.asarray(self.halted).all())
+
+    def scenarios_per_sec(self) -> float:
+        """Batched throughput of this call (scenarios per host second)."""
+        return len(self) / (self.wall_us * 1e-6) if self.wall_us else 0.0
+
+    def table(self) -> str:
+        lines = [f"population · {self.scheduler} · {self.backend} · "
+                 f"{len(self)} scenarios · {self.wall_us:.0f} us",
+                 f"{'scenario':<28} {'cycles':>10} {'halted':>7}"]
+        for i, nm in enumerate(self.names):
+            lines.append(f"{nm:<28} {int(self.cycles[i]):>10} "
+                         f"{str(bool(self.halted[i])):>7}")
+        return "\n".join(lines)
+
+
+def run_many(programs, *,
+             scheduler: Union[str, SchedulerCosts] = "hts_spec",
+             n_fu: Union[int, Sequence] = 2, backend: str = "jax",
+             params: HtsParams = HtsParams(), event_skip: bool = True,
+             max_cycles: int = 5_000_000, max_prog: Optional[int] = None,
+             max_fu_per_class: Optional[int] = None,
+             policy=None, check: bool = True) -> PopulationResult:
+    """Simulate a population of programs as **one vmapped machine call**.
+
+    ``programs`` is a sequence of anything :func:`run` accepts (or an
+    already-packed :class:`~repro.core.hts.batch.PackedPopulation`, in
+    which case ``n_fu``/``policy``/``max_prog`` come from the pack).
+    ``n_fu`` and ``policy`` accept either one shared value or one entry
+    per scenario — they are per-scenario arrays on the scenario axis.
+
+    One compilation serves every population of the same shape bucket
+    (``batch.prog_bucket``); the batched call's wall-clock is the whole
+    population's, which is what ``benchmarks/population.py`` measures
+    against a Python loop of :func:`run`.
+
+    ``backend="golden"`` runs the pure-Python oracle in a loop instead —
+    same :class:`PopulationResult` surface, no batching (the differential
+    baseline).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    pop = (programs if isinstance(programs, PackedPopulation)
+           else batch.pack_population(programs, params=params, n_fu=n_fu,
+                                      policy=policy, max_prog=max_prog))
+    cost = _norm_costs(scheduler)
+
+    if backend == "golden":
+        t0 = time.perf_counter()
+        results = tuple(
+            run(prep, scheduler=cost, n_fu=tuple(int(x) for x in pop.n_fu[i]),
+                backend="golden", params=pop.params, max_cycles=max_cycles,
+                policy=pop.policies[i], check=check)
+            for i, prep in enumerate(pop.preps))
+        wall = (time.perf_counter() - t0) * 1e6
+        return PopulationResult(
+            scheduler=cost.name, backend="golden", names=pop.names,
+            n_fu=pop.n_fu, cycles=np.asarray([r.cycles for r in results]),
+            halted=np.asarray([r.halted for r in results]), wall_us=wall,
+            max_fu_per_class=pop.widest_fu, policies=pop.policies,
+            _results=results)
+    if backend != "jax":
+        raise ValueError(f'backend must be "jax" or "golden", got {backend!r}')
+
+    widest = pop.widest_fu
+    if max_fu_per_class is None:
+        # favour narrow compiled pools: population batches multiply every
+        # per-unit state array by N scenarios
+        max_fu_per_class = max(4, widest)
+    elif widest > max_fu_per_class:
+        raise ValueError(f"population n_fu {widest} exceeds "
+                         f"max_fu_per_class {max_fu_per_class}")
+
+    spec = machine.MachineSpec(params=pop.params, costs=cost,
+                               event_skip=event_skip, max_cycles=max_cycles,
+                               max_fu_per_class=max_fu_per_class)
+    runner = _population_runner(spec, pop.max_prog)
+    t0 = time.perf_counter()
+    out = runner(*(jnp.asarray(a) for a in pop.machine_args()))
+    out = jax.tree.map(np.asarray, out)      # forces device completion
+    wall = (time.perf_counter() - t0) * 1e6
+
+    halted = out["halted"] & ~out["overflow"]
+    result = PopulationResult(
+        scheduler=cost.name, backend="jax", names=pop.names, n_fu=pop.n_fu,
+        cycles=out["cycles"], halted=halted, wall_us=wall,
+        max_fu_per_class=max_fu_per_class, policies=pop.policies, raw=out)
+    if check and not result.all_halted:
+        bad = [pop.names[i] for i in np.nonzero(~halted)[0]]
+        raise SimulationError(
+            f"population run under scheduler {cost.name!r}: scenarios "
+            f"{bad} did not halt within {max_cycles} cycles — livelock, "
+            "structural overflow, or max_cycles too small")
+    return result
+
+
+# ---------------------------------------------------------------------------
 # sweep
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class SweepResult:
-    """Strong-scaling sweep: cycles[scheduler][i] for n_fu_list[i]."""
+    """Strong-scaling sweep: ``cycles[scheduler][i]`` for ``n_fu_list[i]``.
+
+    Population sweeps (``sweep`` over a sequence of programs) stack one
+    more leading axis: ``cycles[scheduler][s, i]`` is scenario ``s``
+    (named ``programs[s]``) at FU point ``i``.
+    """
     program: str
     n_fu_list: tuple[tuple[int, ...], ...]
     schedulers: tuple[str, ...]
     cycles: dict[str, np.ndarray]
     wall_us: dict[str, float]           # total per scheduler (all FU points)
+    programs: tuple[str, ...] = ()      # per-scenario names (population mode)
+
+    @property
+    def is_population(self) -> bool:
+        return bool(self.programs)
 
     def speedup(self, scheduler: str, baseline: str) -> np.ndarray:
-        """Per-FU-point speedup of ``scheduler`` over ``baseline``."""
+        """Per-point speedup of ``scheduler`` over ``baseline`` (same shape
+        as ``cycles[...]`` — per (scenario, FU point) in population mode)."""
         return self.cycles[baseline] / self.cycles[scheduler]
 
     def table(self) -> str:
@@ -387,23 +523,60 @@ class SweepResult:
         lines = [f"{self.program} · strong scaling", head]
         for i, fu in enumerate(self.n_fu_list):
             k = fu[0] if len(set(fu)) == 1 else fu
-            lines.append(f"{str(k):<10} " + " ".join(
-                f"{int(self.cycles[s][i]):>12}" for s in self.schedulers))
+            if self.is_population:      # summarise the scenario axis
+                cells = [f"{float(self.cycles[s][:, i].mean()):>12.0f}"
+                         for s in self.schedulers]
+                lines.append(f"{str(k):<10} " + " ".join(cells))
+            else:
+                lines.append(f"{str(k):<10} " + " ".join(
+                    f"{int(self.cycles[s][i]):>12}"
+                    for s in self.schedulers))
+        if self.is_population:
+            lines.append(f"({len(self.programs)} scenarios; cells are "
+                         "scenario means)")
         return "\n".join(lines)
 
 
-@functools.lru_cache(maxsize=16)
-def _vmapped(spec: machine.MachineSpec, max_prog: int):
-    """One jitted machine per (spec, max_prog), FU axis vmapped (the
-    policy tables ride along unbatched — they are traced runtime args)."""
+# ---------------------------------------------------------------------------
+# the axes model: named vmap axes over the machine's 8-argument signature
+# (ftab, p_len, n_fu, mem, eff, prio, quota, rs_cap) — see module docstring
+# ---------------------------------------------------------------------------
+SCENARIO_AXIS = (0, 0, 0, 0, 0, 0, 0, 0)             # a population, batched
+SCENARIO_SHARED_FU_AXIS = (0, 0, None, 0, 0, 0, 0, 0)  # population × FU grid
+N_FU_AXIS = (None, None, 0, None, None, None, None, None)   # Fig-10 sweep
+POLICY_AXIS = (None, None, None, None, None, 0, 0, 0)       # policy sweep
+
+
+@functools.lru_cache(maxsize=32)
+def _vmapped(spec: machine.MachineSpec, max_prog: int,
+             axes: tuple = (N_FU_AXIS,)):
+    """One jitted machine per ``(spec, max_prog, axes)`` static-shape bucket.
+
+    ``axes`` is a stack of in_axes tuples, outermost first — e.g.
+    ``(SCENARIO_SHARED_FU_AXIS, N_FU_AXIS)`` maps scenario-major over an
+    inner FU grid.  Axes that stay ``None`` everywhere (like the policy
+    tables in a plain FU sweep) still ride along as traced runtime data,
+    so re-running with different policies never recompiles.
+    """
     import jax
-    return jax.jit(jax.vmap(machine.make_machine(spec, max_prog),
-                            in_axes=(None, None, 0, None, None, None, None)))
+    fn = machine.make_machine(spec, max_prog)
+    for in_axes in reversed(axes):
+        fn = jax.vmap(fn, in_axes=in_axes)
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=32)
+def _population_runner(spec: machine.MachineSpec, max_prog: int):
+    """The native scenario-axis machine (``machine.make_machine(...,
+    population=True)``): one while loop for the whole batch, no per-lane
+    carry select — strictly faster than ``_vmapped`` with SCENARIO_AXIS."""
+    import jax
+    return jax.jit(machine.make_machine(spec, max_prog, population=True))
 
 
 def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),
           params: HtsParams = HtsParams(), event_skip: bool = True,
-          max_cycles: int = 50_000_000, max_prog: int = 64,
+          max_cycles: int = 50_000_000, max_prog: Optional[int] = None,
           max_fu_per_class: Optional[int] = None,
           policy: Optional[SchedPolicy] = None) -> SweepResult:
     """Simulate ``program`` across FU configurations in one compiled,
@@ -414,26 +587,56 @@ def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),
     ``costs.ALL_SCHEDULERS`` or :class:`SchedulerCosts` objects.
     ``policy`` applies one :class:`SchedPolicy` to every FU point (it is
     runtime data to the compiled machine, so changing it never recompiles).
+
+    **Population mode**: handed a sequence of programs (or a
+    :class:`~repro.core.hts.batch.PackedPopulation`), the scenario axis
+    composes with the FU axis — one compiled machine evaluates the whole
+    scenario × FU grid, and ``cycles[scheduler]`` has shape
+    ``(n_scenarios, n_points)``.
     """
     import jax.numpy as jnp
 
-    prep = _prepare(program)
     points = tuple(_norm_n_fu(k) for k in n_fu)
-    pol = _norm_policy(policy, prep, params)
     widest = max(max(p) for p in points)
+    n_fu_arr = jnp.asarray(points, jnp.int32)
+
+    if _is_population(program):
+        pop = (program if isinstance(program, PackedPopulation)
+               else batch.pack_population(program, params=params,
+                                          policy=policy,
+                                          max_prog=max_prog))
+        name = f"<population of {len(pop)}>"
+        # per-scenario n_fu from the pack is overridden by the swept axis;
+        # everything else (images, policies) is per-scenario
+        args = [jnp.asarray(a) for a in pop.machine_args()]
+        args[2] = n_fu_arr
+        axes: tuple = (SCENARIO_SHARED_FU_AXIS, N_FU_AXIS)
+        run_prog = pop.max_prog
+        params_c = pop.params
+        point_names = [f"{pop.names[s]} @ {points[i]}"
+                       for s in range(len(pop)) for i in range(len(points))]
+    else:
+        prep = _prepare(program)
+        pol = _norm_policy(policy, prep, params)
+        name = prep.name
+        run_prog = 64 if max_prog is None else max_prog
+        ftab, p_len = machine.pack_program(prep.code, run_prog)
+        mem, eff = machine.images(params, prep.mem_init, prep.effects)
+        args = [jnp.asarray(ftab), jnp.asarray(p_len, jnp.int32), n_fu_arr,
+                jnp.asarray(mem), jnp.asarray(eff),
+                jnp.asarray(pol.weight_array(), jnp.int32),
+                jnp.asarray(pol.quota_array(), jnp.int32),
+                jnp.asarray(pol.rs_cap_array(), jnp.int32)]
+        axes = (N_FU_AXIS,)
+        # the policy is runtime data — keep it out of the compilation key
+        params_c = dataclasses.replace(params, policy=SchedPolicy())
+        point_names = [f"{name} @ {p}" for p in points]
+
     if max_fu_per_class is None:
         max_fu_per_class = max(16, widest)
     elif widest > max_fu_per_class:
         raise ValueError(f"n_fu point {widest} exceeds max_fu_per_class "
                          f"{max_fu_per_class}")
-
-    ftab, p_len = machine.pack_program(prep.code, max_prog)
-    mem, eff = machine.images(params, prep.mem_init, prep.effects)
-    n_fu_arr = jnp.asarray(points, jnp.int32)
-    prio = jnp.asarray(pol.weight_array(), jnp.int32)
-    quota = jnp.asarray(pol.quota_array(), jnp.int32)
-    # the policy is runtime data — keep it out of the compilation cache key
-    params_c = dataclasses.replace(params, policy=SchedPolicy())
 
     cost_objs = [_norm_costs(s) for s in schedulers]
     cycles: dict[str, np.ndarray] = {}
@@ -443,22 +646,23 @@ def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),
                                    event_skip=event_skip,
                                    max_cycles=max_cycles,
                                    max_fu_per_class=max_fu_per_class)
-        runner = _vmapped(spec, max_prog)
+        runner = _vmapped(spec, run_prog, axes)
         t0 = time.perf_counter()
-        out = runner(jnp.asarray(ftab), p_len, n_fu_arr,
-                     jnp.asarray(mem), jnp.asarray(eff), prio, quota)
+        out = runner(*args)
         cyc = np.asarray(out["cycles"])
         wall[cost.name] = (time.perf_counter() - t0) * 1e6
         ok = np.asarray(out["halted"]) & ~np.asarray(out["overflow"])
         if not ok.all():
-            bad = [points[i] for i in np.nonzero(~ok)[0]]
+            bad = [point_names[i] for i in np.nonzero(~ok.ravel())[0]]
             raise SimulationError(
-                f"sweep of {prep.name!r} under {cost.name!r}: FU points "
+                f"sweep of {name!r} under {cost.name!r}: points "
                 f"{bad} did not halt within {max_cycles} cycles")
         cycles[cost.name] = cyc
-    return SweepResult(program=prep.name, n_fu_list=points,
+    return SweepResult(program=name, n_fu_list=points,
                        schedulers=tuple(c.name for c in cost_objs),
-                       cycles=cycles, wall_us=wall)
+                       cycles=cycles, wall_us=wall,
+                       programs=(pop.names if _is_population(program)
+                                 else ()))
 
 
 # ---------------------------------------------------------------------------
@@ -495,14 +699,81 @@ def _first_diff(a: list[tuple], b: list[tuple]) -> str:
     return "schedules equal"
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class PopulationCompareReport:
+    """Outcome of a population :func:`compare`: every scenario agreed.
+
+    For each scheduler, the whole population ran as one vmapped machine
+    batch per event-skip mode and was checked scenario-by-scenario against
+    a golden loop; ``cycles[scheduler]`` holds the agreed per-scenario
+    cycle counts.
+    """
+    names: tuple[str, ...]
+    schedulers: tuple[str, ...]
+    cycles: dict[str, np.ndarray]       # scheduler -> (N,) agreed cycles
+    n_modes: int = 3
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+
+def compare_population(programs, *,
+                       schedulers: Sequence[Union[str, SchedulerCosts]] =
+                       ("naive", "hts_nospec", "hts_spec"),
+                       n_fu: Union[int, Sequence] = 2,
+                       params: HtsParams = HtsParams(),
+                       max_cycles: int = 5_000_000,
+                       max_prog: Optional[int] = None,
+                       max_fu_per_class: Optional[int] = None,
+                       policy=None) -> PopulationCompareReport:
+    """Differential verification of a whole population: one vmapped machine
+    batch per (scheduler, event-skip mode), checked scenario-by-scenario
+    against a golden loop.  Raises :class:`MismatchError` naming the
+    scenario, scheduler and mode on the first divergence.
+    """
+    pop = (programs if isinstance(programs, PackedPopulation)
+           else batch.pack_population(programs, params=params, n_fu=n_fu,
+                                      policy=policy, max_prog=max_prog))
+    if max_fu_per_class is None:
+        max_fu_per_class = max(4, pop.widest_fu)
+    cycles: dict[str, np.ndarray] = {}
+    names = []
+    for scheduler in schedulers:
+        cost = _norm_costs(scheduler)
+        names.append(cost.name)
+        gold = run_many(pop, scheduler=cost, backend="golden",
+                        max_cycles=max_cycles)
+        gold_rows = [g.schedule_tuple() for g in gold]
+        for event_skip in (True, False):
+            m = run_many(pop, scheduler=cost, event_skip=event_skip,
+                         max_cycles=max_cycles,
+                         max_fu_per_class=max_fu_per_class)
+            mode = f"jax event_skip={'on' if event_skip else 'off'}"
+            for i in range(len(pop)):
+                if int(m.cycles[i]) != int(gold.cycles[i]):
+                    raise MismatchError(
+                        f"scenario {i} ({pop.names[i]!r}) under "
+                        f"{cost.name!r}: {mode} ran {int(m.cycles[i])} "
+                        f"cycles, golden ran {int(gold.cycles[i])}")
+                mi = m[i].schedule_tuple()
+                if mi != gold_rows[i]:
+                    raise MismatchError(
+                        f"scenario {i} ({pop.names[i]!r}) under "
+                        f"{cost.name!r}: {mode} schedule differs from "
+                        f"golden — {_first_diff(mi, gold_rows[i])}")
+        cycles[cost.name] = np.asarray(gold.cycles)
+    return PopulationCompareReport(names=pop.names,
+                                   schedulers=tuple(names), cycles=cycles)
+
+
 def compare(program, *,
             schedulers: Sequence[Union[str, SchedulerCosts]] =
             ("naive", "hts_nospec", "hts_spec"),
             n_fu: Union[int, Sequence[int]] = 2,
             params: HtsParams = HtsParams(),
-            max_cycles: int = 5_000_000, max_prog: int = 256,
+            max_cycles: int = 5_000_000, max_prog: Optional[int] = None,
             max_fu_per_class: Optional[int] = None,
-            policy: Optional[SchedPolicy] = None) -> CompareReport:
+            policy: Optional[SchedPolicy] = None):
     """Differential execution: golden oracle vs the compiled JAX machine with
     event-skip **on and off**, for every scheduler cost model.
 
@@ -517,8 +788,20 @@ def compare(program, *,
     fuzzing workhorse: any scheduling-semantics divergence between the two
     simulators — or between the event-skip fast path and the cycle-by-cycle
     reference — surfaces as a mismatch on some generated scenario.
+
+    **Population mode**: handed a sequence of programs (or a
+    :class:`~repro.core.hts.batch.PackedPopulation`), delegates to
+    :func:`compare_population` — the machine side then runs as one vmapped
+    batch per mode and a :class:`PopulationCompareReport` is returned.
     """
+    if _is_population(program):
+        return compare_population(
+            program, schedulers=schedulers, n_fu=n_fu, params=params,
+            max_cycles=max_cycles, max_prog=max_prog,
+            max_fu_per_class=max_fu_per_class, policy=policy)
     prep = _prepare(program)
+    if max_prog is None:
+        max_prog = 256
     fu = _norm_n_fu(n_fu)
     if max_fu_per_class is None:
         # size the compiled FU pool to the request: the no-event-skip runs
@@ -553,6 +836,8 @@ def compare(program, *,
                          results=results)
 
 
-__all__ = ["run", "sweep", "compare", "Result", "SweepResult", "TaskRow",
-           "FairnessReport", "CompareReport", "MismatchError",
-           "SimulationError", "SchedPolicy", "ALL_SCHEDULERS"]
+__all__ = ["run", "run_many", "sweep", "compare", "compare_population",
+           "Result", "PopulationResult", "SweepResult", "TaskRow",
+           "FairnessReport", "CompareReport", "PopulationCompareReport",
+           "MismatchError", "SimulationError", "SchedPolicy",
+           "PackedPopulation", "ALL_SCHEDULERS"]

@@ -559,13 +559,15 @@ class Program:
     def merge(cls, programs: Sequence["Program"], name: str = "shared", *,
               require_distinct_pids: bool = False,
               priorities: Optional[dict[int, int]] = None,
-              quotas: Optional[dict[int, int]] = None) -> "Program":
+              quotas: Optional[dict[int, int]] = None,
+              rs_caps: Optional[dict[int, int]] = None) -> "Program":
         """N-way graph-level round-robin merge: N CPUs pushing their task
         streams into the one Task Queue (pids mark the owners) — the paper's
         multi-application sharing scenario, for any tenant count.
 
-        ``priorities`` (``{pid: weight}``) and ``quotas`` (``{pid: max
-        in-flight units per accelerator class}``) attach a
+        ``priorities`` (``{pid: weight}``), ``quotas`` (``{pid: max
+        in-flight units per accelerator class}``) and ``rs_caps`` (``{pid:
+        max reservation-station entries}`` — RS admission control) attach a
         :class:`~repro.core.hts.policy.SchedPolicy` to the merged program;
         ``hts.run``/``hts.compare`` apply it by default, so a merge-time QoS
         decision follows the program everywhere.  When omitted, the source
@@ -666,8 +668,9 @@ class Program:
         merged._scratch = None   # distinct Reg objects per source program
 
         # --- scheduling policy: explicit args win; else union the tenants'
-        if priorities is not None or quotas is not None:
-            merged.policy = SchedPolicy.of(weights=priorities, quotas=quotas)
+        if priorities is not None or quotas is not None or rs_caps is not None:
+            merged.policy = SchedPolicy.of(weights=priorities, quotas=quotas,
+                                           rs_caps=rs_caps)
         else:
             pol: Optional[SchedPolicy] = None
             for p in programs:

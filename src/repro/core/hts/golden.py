@@ -30,7 +30,10 @@ Within-cycle phase order (both simulators MUST follow it exactly):
                           order, the paper's arbiter).
   6. frontend           — fetch/decode/dispatch one instruction (tasks allocate
                           RS + tracker + optionally TLB/TM; control instructions
-                          execute on the scheduler's GPRs).
+                          execute on the scheduler's GPRs).  A task whose pid is
+                          at its per-pid RS admission cap (``policy.rs_caps``)
+                          is a structural stall exactly like a full RS, so a
+                          capped flood can never exhaust the shared window.
   7. halt check / cycle++
 
 Memory-value semantics: the simulator tracks *scheduling*, not DSP math — as in
@@ -66,6 +69,12 @@ class HtsParams:
     tlb_drain_cycles: int = 20  # cost to drain one committed TLB entry (TM→mem)
     mem_read_cycles: int = MEM_READ_CYCLES
     max_tasks: int = 1024       # schedule-trace capacity
+    #: CDB completion-queue capacity.  ``None`` = ``max_tasks`` (can never
+    #: bind).  The golden oracle's queue is unbounded either way; in the
+    #: compiled machine an exceeded capacity raises the ``overflow`` flag
+    #: (a loud refusal, like a uid overflow), and a right-sized value
+    #: shrinks the per-step state the population batch pays for.
+    cdb_entries: Optional[int] = None
     n_fu: tuple[int, ...] = (1,) * NUM_FUNCS   # units per function class
     policy: SchedPolicy = SchedPolicy()        # per-pid weights + FU quotas
 
@@ -167,6 +176,7 @@ def run(code: np.ndarray,
     # (priority class first, age within class) — see policy.SchedPolicy.
     _wt = p.policy.weight_array(NUM_PIDS).astype(np.int64)
     _qt = p.policy.quota_array(NUM_PIDS).astype(np.int64)
+    _rc = p.policy.rs_cap_array(NUM_PIDS).astype(np.int64)
 
     tracker: list[dict] = []          # {s, e, uid, is_spec}
     tlb: list[dict] = []              # {os, oe, tm_s, spec, committed, seq}
@@ -355,8 +365,11 @@ def run(code: np.ndarray,
             if op == isa.OP_TASK:
                 if costs.in_order and not machine_empty():
                     progressed = False
-                elif len(rs) >= p.rs_entries or len(tracker) >= p.tracker_entries:
-                    progressed = False   # structural stall
+                elif (len(rs) >= p.rs_entries
+                      or len(tracker) >= p.tracker_entries
+                      or sum(1 for r in rs if r.pid == pid_) >= _rc[pid_]):
+                    progressed = False   # structural stall (incl. RS admission
+                    #                      cap: this pid is at its RS quota)
                 else:
                     in_s = int(regs[a]) if ctl & isa.CTL_IN_INDIRECT else a
                     out_s = int(regs[b]) if ctl & isa.CTL_OUT_INDIRECT else b

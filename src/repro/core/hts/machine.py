@@ -11,9 +11,14 @@ control flow, so that
     the next scheduler event instead of ticking every cycle — exact-equivalent
     schedules (tested), 10-400× faster wall-clock for interrupt-dominated
     (naive/software) cost models;
-  * the scheduling policy (per-pid priority weights + per-class FU quotas,
-    ``policy.py``) enters as traced ``prio``/``quota`` arrays — like
-    ``n_fu``, runtime arguments, so policy sweeps share one compilation.
+  * the scheduling policy (per-pid priority weights, per-class FU quotas and
+    per-pid RS admission caps, ``policy.py``) enters as traced
+    ``prio``/``quota``/``rs_cap`` arrays — like ``n_fu``, runtime arguments,
+    so policy sweeps share one compilation;
+  * the *program itself* is a runtime input (``ftab``/``p_len`` plus the
+    ``mem_init``/``effects`` images), so a **population of scenarios** is one
+    more ``vmap`` axis — ``batch.py`` packs N programs to a shared static
+    shape and ``api.run_many`` drives them through one compiled machine.
 
 GPR side effects on a squashed speculative path are rolled back from a
 checkpoint taken at speculation entry (the paper is silent on GPR recovery;
@@ -47,11 +52,26 @@ class MachineSpec:
     max_fu_per_class: int = 16     # FU pool width (n_fu may be ≤ this, traced)
     event_skip: bool = True
     max_cycles: int = 5_000_000
+    #: largest task-output dataframe (words) the completion datapath can
+    #: write back in one cycle — a hardware write-port capacity.  Dispatching
+    #: a task with a wider output raises the ``overflow`` flag (the
+    #: simulation is refused, like a uid overflow).  Every Table-II bench
+    #: and generated workload writes ≤ 8 words; the default matches the
+    #: transactional-memory slot width (speculative outputs can never be
+    #: wider than a TM slot anyway).
+    max_out_words: int = 16
 
 
-def make_machine(spec: MachineSpec, max_prog: int = 256):
+def make_machine(spec: MachineSpec, max_prog: int = 256,
+                 population: bool = False):
     """Build the machine under ``spec``; returns
-    ``run(ftab, p_len, n_fu, mem_init, effects, prio, quota)``.
+    ``run(ftab, p_len, n_fu, mem_init, effects, prio, quota, rs_cap)``.
+
+    With ``population=True`` the returned runner expects every argument
+    with a leading *scenario* axis and simulates the whole batch in one
+    while loop (scalar any-lane-alive condition, vmapped step body) — the
+    fast path behind ``api.run_many``.  Unlike ``jax.vmap(run)``, it pays
+    no per-lane select over the loop carry.
 
     The *program is a runtime input* — ``ftab`` is the (max_prog, 10) decoded
     field table (``isa.decode_table`` output, zero-padded) and ``p_len`` its
@@ -60,11 +80,20 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
 
     ``n_fu``: (NUM_FUNCS,) int32 — units per accelerator class (traced).
     ``mem_init``/``effects``: (total_mem,) int32 images.
-    ``prio``/``quota``: (NUM_PIDS,) int32 scheduling-policy tables (traced,
-    like ``n_fu`` — one compilation serves every policy; see ``policy.py``).
-    ``prio`` holds per-pid priority weights (default all-zero = age order),
-    ``quota`` per-pid in-flight unit caps per class (default uncapped).
+    ``prio``/``quota``/``rs_cap``: (NUM_PIDS,) int32 scheduling-policy tables
+    (traced, like ``n_fu`` — one compilation serves every policy; see
+    ``policy.py``).  ``prio`` holds per-pid priority weights (default
+    all-zero = age order), ``quota`` per-pid in-flight unit caps per class
+    (default uncapped), ``rs_cap`` per-pid RS-entry admission caps (default
+    uncapped — a pid at its cap takes a structural dispatch stall exactly
+    like a full RS).
     Returns a dict of schedule/trace arrays (see ``out`` at the bottom).
+
+    Every argument is a runtime input, so ``vmap`` can batch any of three
+    axes: the *scenario* axis (all arguments batched — a population of
+    programs in one compiled machine), the *FU* axis (``n_fu`` alone) and
+    the *policy* axis (``prio``/``quota``/``rs_cap``); ``api.py`` composes
+    them.
     """
     p = spec.params
     c = spec.costs
@@ -81,21 +110,51 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
     L = p.tlb_entries
     M = p.total_mem
     U = p.max_tasks + 1            # uid-indexed trace arrays (uid 0 unused)
-    C = p.max_tasks                # CDB queue capacity (never binds)
+    C = p.cdb_entries or p.max_tasks   # CDB queue capacity (overflow-flagged)
 
     fu_cls = jnp.asarray(np.repeat(np.arange(NF), spec.max_fu_per_class), I32)
     fu_pos = jnp.asarray(np.tile(np.arange(spec.max_fu_per_class), NF), I32)
     func_cycles = jnp.asarray(FUNC_CYCLES, I32)
     mem_idx = jnp.arange(M, dtype=I32)
+    # slot iotas: single-slot inserts are written as broadcast `where`
+    # selects, not `.at[i].set` scatters — under the scenario vmap a
+    # batched-index scatter lowers ~10x slower than a masked select
+    s_iota = jnp.arange(S, dtype=I32)
+    t_iota = jnp.arange(T, dtype=I32)
+    l_iota = jnp.arange(L, dtype=I32)
+    c_iota = jnp.arange(C, dtype=I32)
+    u_iota = jnp.arange(U, dtype=I32)
 
-    def init_state(mem_init, effects):
+    def trace_write(arr, uid, value, enable):
+        """``arr[uid] = value where enable`` for uid-indexed trace arrays.
+
+        ``uid``/``enable`` may be scalars or aligned vectors (one slot per
+        RS entry / FU).  The single machine writes through a scatter (fast
+        per lane); the population machine uses a one-hot select — batched
+        scatters on CPU pay per *update × lane*, which made the trace
+        writes the hottest ops in the population body.
+        """
+        uid = jnp.asarray(uid)
+        if not population:
+            idx = jnp.where(enable, uid, U)
+            return arr.at[idx].set(value, mode="drop")
+        if uid.ndim == 0:
+            hit = enable & (u_iota == uid)
+        else:
+            hit = (enable[:, None] & (uid[:, None] == u_iota[None, :])).any(0)
+        return jnp.where(hit, value, arr)
+
+    def init_state(mem_init):
+        # NB the read-only ``effects`` image is NOT part of the state: the
+        # while-loop carry is select-masked per lane under batching, so
+        # every loop-invariant array kept out of it is bandwidth saved on
+        # every step of every scenario.
         z = functools.partial(jnp.zeros, dtype=I32)
         zb = functools.partial(jnp.zeros, dtype=jnp.bool_)
         return dict(
             pc=I32(0), cycle=I32(0), dt=I32(1), fe_wait=I32(0),
             next_uid=I32(1), age=I32(0), ticket=I32(0),
             regs=z(p.num_regs), mem=jnp.asarray(mem_init, I32),
-            effect=jnp.asarray(effects, I32),
             rs_valid=zb(S), rs_uid=z(S), rs_func=z(S), rs_dep=z(S),
             rs_age=z(S), rs_out_s=z(S), rs_out_e=z(S), rs_src=z(S),
             rs_exec=z(S), rs_spec=zb(S), rs_pid=z(S),
@@ -141,82 +200,112 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
             [cond == isa.CND_EQ, cond == isa.CND_NEQ, cond == isa.CND_GE],
             [v == thr, v != thr, v >= thr], v <= thr)
 
-    def copy_range(dst_arr, src_arr, dst, src, n, enable):
-        m = enable & (mem_idx >= dst) & (mem_idx < dst + n)
-        src_ix = jnp.clip(mem_idx - dst + src, 0, M - 1)
-        return jnp.where(m, src_arr[src_ix], dst_arr)
-
     def machine_empty(st):
         return (~st["rs_valid"].any() & ~st["fu_busy"].any()
                 & ~st["cdb_valid"].any() & ~st["mr_active"] & ~st["br_active"])
 
     # ------------------------------------------------------------------
-    # phase 1: FU tick (+ completion writes & CDB enqueue, FU-index order)
+    # phase 1: FU tick (+ completion writes & CDB enqueue, FU-index order).
+    # No per-unit conditional or full-memory masked copies — under the
+    # scenario vmap a `lax.cond` becomes a select that runs every
+    # iteration, and a per-unit loop of (total_mem,)-wide copies in the
+    # hot body is what made population batches slower than a Python loop.
+    # Memory effect-writes go through `copy_window` (a max_out_words-wide
+    # dynamic-update-slice, sequential per unit — exact last-writer
+    # ordering); the CDB enqueue is vectorised with rank computations:
+    # the k-th completing unit (by FU index) takes the k-th free slot (by
+    # slot index) and the k-th consecutive ticket, which is precisely what
+    # the sequential argmin loop produced.
     # ------------------------------------------------------------------
-    def fu_tick(st, exists):
-        busy = st["fu_busy"] & exists
+    W = spec.max_out_words
+    w_iota = jnp.arange(W, dtype=I32)
+
+    def copy_window(dst_arr, src_arr, dst, src, n, enable):
+        """``dst_arr[dst:dst+n] = src_arr[src:src+n]`` via one W-wide DUS.
+
+        Exactly a masked full-memory range copy for ``n <= W`` (the
+        dispatch guard enforces that), at window cost instead of
+        (total_mem,) cost per call.
+        """
+        dst_c = jnp.clip(dst, 0, M - W)
+        off = dst - dst_c
+        cur = jax.lax.dynamic_slice(dst_arr, (dst_c,), (W,))
+        vals = src_arr[jnp.clip(w_iota - off + src, 0, M - 1)]
+        mask = enable & (w_iota >= off) & (w_iota < off + n)
+        return jax.lax.dynamic_update_slice(dst_arr,
+                                            jnp.where(mask, vals, cur),
+                                            (dst_c,))
+
+    def fu_tick(st, exists, effect, alive):
+        busy = st["fu_busy"] & exists & alive
         st["fu_busy_cycles"] = st["fu_busy_cycles"] + jnp.where(busy, st["dt"], 0)
         rem = jnp.where(busy, st["fu_rem"] - st["dt"], st["fu_rem"])
         done = busy & (rem <= 0)
         st["fu_rem"] = rem
 
-        def do_completions(st):
-            def body(i, st):
-                is_done = done[i]
-                st["mem"] = copy_range(
-                    st["mem"], st["effect"], st["fu_out_s"][i], st["fu_src"][i],
-                    st["fu_out_e"][i] - st["fu_out_s"][i], is_done)
-                slot = jnp.argmin(st["cdb_valid"])
-                free_ok = ~st["cdb_valid"][slot]
-                st["overflow"] = st["overflow"] | (is_done & ~free_ok)
-                w = is_done & free_ok
-                st["cdb_valid"] = st["cdb_valid"].at[slot].set(
-                    jnp.where(w, True, st["cdb_valid"][slot]))
-                st["cdb_uid"] = st["cdb_uid"].at[slot].set(
-                    jnp.where(w, st["fu_uid"][i], st["cdb_uid"][slot]))
-                st["cdb_ticket"] = st["cdb_ticket"].at[slot].set(
-                    jnp.where(w, st["ticket"], st["cdb_ticket"][slot]))
-                st["cdb_ready"] = st["cdb_ready"].at[slot].set(
-                    jnp.where(w, st["cycle"] + c.completion_extra,
-                              st["cdb_ready"][slot]))
-                st["cdb_spec"] = st["cdb_spec"].at[slot].set(
-                    jnp.where(w, st["fu_spec"][i], st["cdb_spec"][slot]))
-                st["ticket"] = st["ticket"] + jnp.where(w, 1, 0)
-                uid = st["fu_uid"][i]
-                st["tr_complete"] = st["tr_complete"].at[uid].set(
-                    jnp.where(is_done, st["cycle"], st["tr_complete"][uid]))
-                st["fu_busy"] = st["fu_busy"].at[i].set(
-                    jnp.where(is_done, False, st["fu_busy"][i]))
-                st["fu_uid"] = st["fu_uid"].at[i].set(
-                    jnp.where(is_done, 0, st["fu_uid"][i]))
-                return st
-            return jax.lax.fori_loop(0, NFU, body, st)
+        # --- memory writes (FU-index order: later units overwrite)
+        def mem_trip(i, mem):
+            return copy_window(mem, effect, st["fu_out_s"][i],
+                               st["fu_src"][i],
+                               st["fu_out_e"][i] - st["fu_out_s"][i],
+                               done[i])
+        st["mem"] = jax.lax.fori_loop(0, NFU, mem_trip, st["mem"])
 
-        return jax.lax.cond(done.any(), do_completions, lambda s: s, st)
+        # --- CDB enqueue: k-th done unit → k-th free slot, ticket + k.
+        # Written slot-side ((C,)-wide selects + gathers, no scatters —
+        # batched scatters pay per update) — identical to the sequential
+        # argmin loop: the slot of free-rank r receives the done unit of
+        # FU-index-rank r and the r-th consecutive ticket.
+        k = jnp.cumsum(done.astype(I32)) - 1                      # unit rank
+        n_done = jnp.sum(done, dtype=I32)
+        free = ~st["cdb_valid"]
+        free_rank = jnp.cumsum(free.astype(I32)) - 1              # slot rank
+        n_free = jnp.sum(free, dtype=I32)
+        n_enq = jnp.minimum(n_done, n_free)
+        # unit_of_rank[r]: the r-th completing unit in FU-index order
+        unit_of_rank = jnp.argsort(jnp.where(done, k, BIG)).astype(I32)
+        take = free & (free_rank < n_enq)
+        u = unit_of_rank[jnp.clip(free_rank, 0, NFU - 1)]         # (C,)
+        st["cdb_valid"] = st["cdb_valid"] | take
+        st["cdb_uid"] = jnp.where(take, st["fu_uid"][u], st["cdb_uid"])
+        st["cdb_ticket"] = jnp.where(take, st["ticket"] + free_rank,
+                                     st["cdb_ticket"])
+        st["cdb_ready"] = jnp.where(take, st["cycle"] + c.completion_extra,
+                                    st["cdb_ready"])
+        st["cdb_spec"] = jnp.where(take, st["fu_spec"][u], st["cdb_spec"])
+        st["ticket"] = st["ticket"] + n_enq
+        st["overflow"] = st["overflow"] | (n_done > n_free)
+
+        # --- trace + unit release
+        st["tr_complete"] = trace_write(st["tr_complete"], st["fu_uid"],
+                                        st["cycle"], done)
+        st["fu_busy"] = st["fu_busy"] & ~done
+        st["fu_uid"] = jnp.where(done, 0, st["fu_uid"])
+        return st
 
     # ------------------------------------------------------------------
     # phase 2+3: memread tick and CDB grant
     # ------------------------------------------------------------------
-    def memread_tick(st):
-        rem = jnp.where(st["mr_active"], st["mr_rem"] - st["dt"], st["mr_rem"])
-        fired = st["mr_active"] & (rem <= 0)
+    def memread_tick(st, alive):
+        ticking = st["mr_active"] & alive
+        rem = jnp.where(ticking, st["mr_rem"] - st["dt"], st["mr_rem"])
+        fired = ticking & (rem <= 0)
         st["mr_rem"] = rem
         st["mr_active"] = st["mr_active"] & ~fired
         return st, fired
 
-    def cdb_grant(st, br_ready):
+    def cdb_grant(st, br_ready, alive):
         def grant_one(carry, _):
             st, br_ready = carry
-            ready = st["cdb_valid"] & (st["cdb_ready"] <= st["cycle"])
+            ready = st["cdb_valid"] & (st["cdb_ready"] <= st["cycle"]) & alive
             idx = jnp.argmin(jnp.where(ready, st["cdb_ticket"], BIG))
             has = ready.any()
             uid = st["cdb_uid"][idx]
-            st["cdb_valid"] = st["cdb_valid"].at[idx].set(
-                jnp.where(has, False, st["cdb_valid"][idx]))
+            st["cdb_valid"] = st["cdb_valid"] & ~(has & (c_iota == idx))
             st["rs_dep"] = jnp.where(has & (st["rs_dep"] == uid), 0, st["rs_dep"])
             st["trk_valid"] = st["trk_valid"] & ~(has & (st["trk_uid"] == uid))
-            st["tr_broadcast"] = st["tr_broadcast"].at[uid].set(
-                jnp.where(has, st["cycle"], st["tr_broadcast"][uid]))
+            st["tr_broadcast"] = trace_write(st["tr_broadcast"], uid,
+                                             st["cycle"], has)
             br_ready = br_ready | (has & st["br_active"]
                                    & (st["br_kind"] == isa.BR_BR)
                                    & (st["br_wait"] == uid))
@@ -249,11 +338,10 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
         # --- squash: discard speculative state, roll back, redirect
         rs_kill = squash & st["rs_valid"] & st["rs_spec"]
         fu_kill = squash & st["fu_busy"] & st["fu_spec"]
-        st["tr_aborted"] = st["tr_aborted"].at[
-            jnp.where(rs_kill, st["rs_uid"], 0)].set(True)
-        st["tr_aborted"] = st["tr_aborted"].at[
-            jnp.where(fu_kill, st["fu_uid"], 0)].set(True)
-        st["tr_aborted"] = st["tr_aborted"].at[0].set(False)
+        st["tr_aborted"] = trace_write(st["tr_aborted"], st["rs_uid"],
+                                       True, rs_kill)
+        st["tr_aborted"] = trace_write(st["tr_aborted"], st["fu_uid"],
+                                       True, fu_kill)
         st["spec_aborted"] = (st["spec_aborted"]
                               + rs_kill.sum(dtype=I32) + fu_kill.sum(dtype=I32))
         st["rs_valid"] = st["rs_valid"] & ~rs_kill
@@ -279,12 +367,13 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
     # work-conserving.  ``prio``/``quota`` are traced runtime arrays
     # (like ``n_fu``), so policies sweep under vmap without recompiling.
     # ------------------------------------------------------------------
-    def rs_issue(st, exists, prio, quota):
-        ready = st["rs_valid"] & (st["rs_dep"] == 0)
+    def rs_issue(st, exists, prio, quota, alive):
+        ready = st["rs_valid"] & (st["rs_dep"] == 0) & alive
         free = exists & ~st["fu_busy"]
         n_free = jnp.zeros((NF,), I32).at[fu_cls].add(free.astype(I32))
         w = jnp.clip(prio[st["rs_pid"]], 0, PRIO_CAP)
         key = jnp.where(ready, (PRIO_CAP - w) * AGE_SPAN + st["rs_age"], BIG)
+        key_lt = key[None, :] < key[:, None]
         same_cls = st["rs_func"][:, None] == st["rs_func"][None, :]
         same_pid = st["rs_pid"][:, None] == st["rs_pid"][None, :]
         # quota mask: units already running for (pid, class) plus ready
@@ -297,13 +386,12 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
                      & (st["fu_pid"][None, :] == st["rs_pid"][:, None])
                      & (fu_cls[None, :] == st["rs_func"][:, None]))
                     .sum(axis=1).astype(I32))
-        q_ahead = (key[None, :] < key[:, None]) & same_cls & same_pid \
-            & ready[None, :]
+        q_ahead = key_lt & same_cls & same_pid & ready[None, :]
         q_rank = q_ahead.sum(axis=1).astype(I32)
         quota_ok = inflight + q_rank < quota[st["rs_pid"]]
         eligible = ready & quota_ok
         # rank among eligible entries of the same class, by key
-        c_ahead = (key[None, :] < key[:, None]) & same_cls & eligible[None, :]
+        c_ahead = key_lt & same_cls & eligible[None, :]
         cls_rank = c_ahead.sum(axis=1).astype(I32)
         issuable = eligible & (cls_rank < n_free[st["rs_func"]])
         # global width cap: smallest keys among issuable
@@ -338,21 +426,22 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
                                   st["fu_spec"])
         st["fu_pid"] = jnp.where(unit_hit, st["rs_pid"][entry_of_unit],
                                  st["fu_pid"])
-        st["tr_issue"] = st["tr_issue"].at[
-            jnp.where(fire, st["rs_uid"], 0)].set(st["cycle"])
-        st["tr_issue"] = st["tr_issue"].at[0].set(NEG)
+        st["tr_issue"] = trace_write(st["tr_issue"], st["rs_uid"],
+                                     st["cycle"], fire)
         st["rs_valid"] = st["rs_valid"] & ~fire
         return st
 
     # ------------------------------------------------------------------
     # phase 6: frontend — one instruction
     # ------------------------------------------------------------------
-    def frontend(st, F, p_len):
+    def frontend(st, F, p_len, rs_cap, alive):
         blocked_wait = st["fe_wait"] > 0
-        st["fe_wait"] = jnp.maximum(st["fe_wait"] - st["dt"], 0)
+        st["fe_wait"] = jnp.where(alive,
+                                  jnp.maximum(st["fe_wait"] - st["dt"], 0),
+                                  st["fe_wait"])
         blocked_br = st["br_active"] & ~st["br_speculating"]
         drained = st["pc"] >= p_len
-        active = ~blocked_wait & ~blocked_br & ~drained
+        active = ~blocked_wait & ~blocked_br & ~drained & alive
 
         pcc = jnp.clip(st["pc"], 0, max(P - 1, 0))
         op = F["op"][pcc]
@@ -407,8 +496,14 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
 
         rs_full = st["rs_valid"].all()
         trk_full = st["trk_valid"].all()
+        # RS admission: this pid's RS occupancy is at its per-pid cap — a
+        # structural stall like rs_full, but chargeable to one tenant
+        pid_here = F["pid"][pcc]
+        rs_of_pid = (st["rs_valid"]
+                     & (st["rs_pid"] == pid_here)).sum(dtype=I32)
+        pid_capped = rs_of_pid >= rs_cap[pid_here]
         empty_req = (jnp.bool_(c.in_order) & ~machine_empty(st))
-        stall_struct = rs_full | trk_full | empty_req
+        stall_struct = rs_full | trk_full | pid_capped | empty_req
 
         # speculative output remap through TLB/TM
         slot_used = jax.vmap(
@@ -426,11 +521,12 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
         # drain path: TM full and a committed victim exists
         do_drain = is_task & ~stall_struct & spec & ~tm_avail & has_victim
         vic_base = p.tm_base + st["tlb_slot"][victim] * p.tm_slot_words
-        st["mem"] = copy_range(st["mem"], st["mem"], st["tlb_os"][victim],
-                               vic_base, st["tlb_oe"][victim] - st["tlb_os"][victim],
-                               do_drain)
-        st["tlb_valid"] = st["tlb_valid"].at[victim].set(
-            jnp.where(do_drain, False, st["tlb_valid"][victim]))
+        st["mem"] = copy_window(st["mem"], st["mem"], st["tlb_os"][victim],
+                                vic_base,
+                                st["tlb_oe"][victim] - st["tlb_os"][victim],
+                                do_drain)
+        st["tlb_valid"] = st["tlb_valid"] & ~(do_drain
+                                              & (l_iota == victim))
         st["fe_wait"] = jnp.where(do_drain, p.tlb_drain_cycles, st["fe_wait"])
 
         spec_ok = spec & tm_avail & ~tlb_full
@@ -441,18 +537,13 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
         # TLB insert for speculative dispatch
         tlb_slot_new = jnp.argmin(st["tlb_valid"])
         ins_tlb = dispatch & spec
-        st["tlb_valid"] = st["tlb_valid"].at[tlb_slot_new].set(
-            jnp.where(ins_tlb, True, st["tlb_valid"][tlb_slot_new]))
-        st["tlb_os"] = st["tlb_os"].at[tlb_slot_new].set(
-            jnp.where(ins_tlb, out_s, st["tlb_os"][tlb_slot_new]))
-        st["tlb_oe"] = st["tlb_oe"].at[tlb_slot_new].set(
-            jnp.where(ins_tlb, out_e, st["tlb_oe"][tlb_slot_new]))
-        st["tlb_slot"] = st["tlb_slot"].at[tlb_slot_new].set(
-            jnp.where(ins_tlb, tm_slot, st["tlb_slot"][tlb_slot_new]))
-        st["tlb_seq"] = st["tlb_seq"].at[tlb_slot_new].set(
-            jnp.where(ins_tlb, st["tlb_seq_ctr"], st["tlb_seq"][tlb_slot_new]))
-        st["tlb_com"] = st["tlb_com"].at[tlb_slot_new].set(
-            jnp.where(ins_tlb, False, st["tlb_com"][tlb_slot_new]))
+        tlb_sel = ins_tlb & (l_iota == tlb_slot_new)
+        st["tlb_valid"] = st["tlb_valid"] | tlb_sel
+        st["tlb_os"] = jnp.where(tlb_sel, out_s, st["tlb_os"])
+        st["tlb_oe"] = jnp.where(tlb_sel, out_e, st["tlb_oe"])
+        st["tlb_slot"] = jnp.where(tlb_sel, tm_slot, st["tlb_slot"])
+        st["tlb_seq"] = jnp.where(tlb_sel, st["tlb_seq_ctr"], st["tlb_seq"])
+        st["tlb_com"] = st["tlb_com"] & ~tlb_sel
         st["tlb_seq_ctr"] = st["tlb_seq_ctr"] + jnp.where(ins_tlb, 1, 0)
 
         # WAW replacement + tracker insert
@@ -460,36 +551,34 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
             & (phys_out < st["trk_e"])
         st["trk_valid"] = st["trk_valid"] & ~waw
         trk_new = jnp.argmin(st["trk_valid"])
-        st["trk_valid"] = st["trk_valid"].at[trk_new].set(
-            jnp.where(dispatch, True, st["trk_valid"][trk_new]))
-        st["trk_s"] = st["trk_s"].at[trk_new].set(
-            jnp.where(dispatch, phys_out, st["trk_s"][trk_new]))
-        st["trk_e"] = st["trk_e"].at[trk_new].set(
-            jnp.where(dispatch, phys_oe, st["trk_e"][trk_new]))
-        st["trk_uid"] = st["trk_uid"].at[trk_new].set(
-            jnp.where(dispatch, st["next_uid"], st["trk_uid"][trk_new]))
-        st["trk_spec"] = st["trk_spec"].at[trk_new].set(
-            jnp.where(dispatch, spec, st["trk_spec"][trk_new]))
+        trk_sel = dispatch & (t_iota == trk_new)
+        st["trk_valid"] = st["trk_valid"] | trk_sel
+        st["trk_s"] = jnp.where(trk_sel, phys_out, st["trk_s"])
+        st["trk_e"] = jnp.where(trk_sel, phys_oe, st["trk_e"])
+        st["trk_uid"] = jnp.where(trk_sel, st["next_uid"], st["trk_uid"])
+        st["trk_spec"] = jnp.where(trk_sel, spec, st["trk_spec"])
 
         # RS insert
         rs_new = jnp.argmin(st["rs_valid"])
         uid = st["next_uid"]
-        st["overflow"] = st["overflow"] | (dispatch & (uid >= U))
+        st["overflow"] = st["overflow"] | (dispatch & (uid >= U)) \
+            | (dispatch & (out_e - out_s > W))
         uidc = jnp.clip(uid, 0, U - 1)
-        for k, v in (("rs_valid", True), ("rs_uid", uid), ("rs_func", acc),
+        rs_sel = dispatch & (s_iota == rs_new)
+        st["rs_valid"] = st["rs_valid"] | rs_sel
+        for k, v in (("rs_uid", uid), ("rs_func", acc),
                      ("rs_dep", dep), ("rs_age", st["age"]),
                      ("rs_out_s", phys_out), ("rs_out_e", phys_oe),
                      ("rs_src", out_s), ("rs_exec", func_cycles[jnp.clip(acc, 0, NF - 1)]),
-                     ("rs_spec", spec), ("rs_pid", F["pid"][pcc])):
-            st[k] = st[k].at[rs_new].set(jnp.where(dispatch, v, st[k][rs_new]))
-        st["tr_func"] = st["tr_func"].at[uidc].set(
-            jnp.where(dispatch, acc, st["tr_func"][uidc]))
-        st["tr_dispatch"] = st["tr_dispatch"].at[uidc].set(
-            jnp.where(dispatch, st["cycle"], st["tr_dispatch"][uidc]))
-        st["tr_dep"] = st["tr_dep"].at[uidc].set(
-            jnp.where(dispatch, dep, st["tr_dep"][uidc]))
-        st["tr_pid"] = st["tr_pid"].at[uidc].set(
-            jnp.where(dispatch, F["pid"][pcc], st["tr_pid"][uidc]))
+                     ("rs_pid", F["pid"][pcc])):
+            st[k] = jnp.where(rs_sel, v, st[k])
+        st["rs_spec"] = jnp.where(rs_sel, spec, st["rs_spec"])
+        st["tr_func"] = trace_write(st["tr_func"], uidc, acc, dispatch)
+        st["tr_dispatch"] = trace_write(st["tr_dispatch"], uidc,
+                                        st["cycle"], dispatch)
+        st["tr_dep"] = trace_write(st["tr_dep"], uidc, dep, dispatch)
+        st["tr_pid"] = trace_write(st["tr_pid"], uidc, F["pid"][pcc],
+                                   dispatch)
         st["next_uid"] = st["next_uid"] + jnp.where(dispatch, 1, 0)
         st["age"] = st["age"] + jnp.where(dispatch, 1, 0)
         st["fe_wait"] = jnp.where(dispatch, c.dispatch_serial_cost - 1,
@@ -532,13 +621,14 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
         progressed = progressed | rr | mrbr
 
         st["pc"] = pc_next
-        st["stall_cycles"] = st["stall_cycles"] + jnp.where(progressed, 0, 1)
+        st["stall_cycles"] = st["stall_cycles"] + jnp.where(
+            progressed | ~alive, 0, 1)
         return st
 
     # ------------------------------------------------------------------
     # event-skip: time to the next scheduler event
     # ------------------------------------------------------------------
-    def next_dt(st, exists, F, p_len):
+    def next_dt(st, exists, F, p_len, rs_cap):
         if not spec.event_skip:
             return I32(1)
         busy = st["fu_busy"] & exists
@@ -554,11 +644,16 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
         at_op = F["op"][pcc]
         in_order_block = (jnp.bool_(c.in_order) & ~machine_empty(st)
                           & ((at_op == isa.OP_TASK) | (at_op == isa.OP_IF)))
-        # structural stall: a TASK blocked on a full RS / Memory Tracker can
-        # only unblock via an issue (covered below) or a CDB grant (in the
-        # min) — skippable
+        # structural stall: a TASK blocked on a full RS / Memory Tracker /
+        # its pid's RS admission cap can only unblock via an issue (covered
+        # below) or a CDB grant (in the min) — skippable
+        pid_here = F["pid"][pcc]
+        pid_capped = ((st["rs_valid"]
+                       & (st["rs_pid"] == pid_here)).sum(dtype=I32)
+                      >= rs_cap[pid_here])
         struct_block = ((at_op == isa.OP_TASK)
-                        & (st["rs_valid"].all() | st["trk_valid"].all()))
+                        & (st["rs_valid"].all() | st["trk_valid"].all()
+                           | pid_capped))
         fe_act = ((st["fe_wait"] == 0)
                   & ~(st["br_active"] & ~st["br_speculating"])
                   & (st["pc"] < p_len) & ~in_order_block & ~struct_block)
@@ -574,39 +669,48 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
     # ------------------------------------------------------------------
     # full step + driver
     # ------------------------------------------------------------------
-    def step(st, exists, F, p_len, prio, quota):
-        st = fu_tick(st, exists)
-        st, br_ready = memread_tick(st)
-        st, br_ready = cdb_grant(st, br_ready)
+    def alive_of(st):
+        return (~st["halted"] & ~st["overflow"]
+                & (st["cycle"] < spec.max_cycles))
+
+    def step(st, exists, F, p_len, prio, quota, rs_cap, effects):
+        # ``alive`` gates every phase: a halted/overflowed lane is a fixed
+        # point of the step, so the batched population machine can run one
+        # while-loop with a scalar any-lane-alive condition and NO
+        # per-lane carry select (see ``run_population``).  In the single
+        # machine the while condition implies alive == True, so the gates
+        # are identities.
+        alive = alive_of(st)
+        st = fu_tick(st, exists, effects, alive)
+        st, br_ready = memread_tick(st, alive)
+        st, br_ready = cdb_grant(st, br_ready, alive)
         st = branch_resolve(st, br_ready)
-        st = rs_issue(st, exists, prio, quota)
-        st = frontend(st, F, p_len)
+        st = rs_issue(st, exists, prio, quota, alive)
+        st = frontend(st, F, p_len, rs_cap, alive)
         done = ((st["pc"] >= p_len) & ~st["rs_valid"].any() & ~st["fu_busy"].any()
                 & ~st["cdb_valid"].any() & ~st["br_active"] & ~st["mr_active"]
                 & (st["fe_wait"] == 0))
-        dt = next_dt(st, exists, F, p_len)
-        st["cycle"] = st["cycle"] + jnp.where(done, 1, dt)
-        st["dt"] = dt
-        st["halted"] = done
+        dt = next_dt(st, exists, F, p_len, rs_cap)
+        st["cycle"] = st["cycle"] + jnp.where(alive,
+                                              jnp.where(done, 1, dt), 0)
+        st["dt"] = jnp.where(alive, dt, st["dt"])
+        st["halted"] = st["halted"] | (alive & done)
         return st
 
-    def run(ftab, p_len, n_fu, mem_init, effects, prio=None, quota=None):
-        F = {name: ftab[:, i].astype(I32)
+    def norm_args(ftab, p_len, n_fu, prio, quota, rs_cap):
+        F = {name: ftab[..., i].astype(I32)
              for i, name in enumerate(isa.FIELDS)}
         p_len = jnp.asarray(p_len, I32)
-        exists = fu_pos < n_fu[fu_cls]
+        exists = fu_pos < n_fu[..., fu_cls]
         if prio is None:
             prio = jnp.zeros((NUM_PIDS,), I32)
         if quota is None:
             quota = jnp.full((NUM_PIDS,), BIG, I32)
-        st = init_state(mem_init, effects)
+        if rs_cap is None:
+            rs_cap = jnp.full((NUM_PIDS,), BIG, I32)
+        return F, p_len, exists, prio, quota, rs_cap
 
-        def cond(st):
-            return (~st["halted"] & ~st["overflow"]
-                    & (st["cycle"] < spec.max_cycles))
-
-        st = jax.lax.while_loop(
-            cond, lambda s: step(s, exists, F, p_len, prio, quota), st)
+    def collect(st):
         return dict(
             cycles=st["cycle"], halted=st["halted"], overflow=st["overflow"],
             n_tasks=st["next_uid"] - 1, spec_aborted=st["spec_aborted"],
@@ -619,6 +723,43 @@ def make_machine(spec: MachineSpec, max_prog: int = 256):
             tr_aborted=st["tr_aborted"], tr_pid=st["tr_pid"],
         )
 
+    def run(ftab, p_len, n_fu, mem_init, effects, prio=None, quota=None,
+            rs_cap=None):
+        F, p_len, exists, prio, quota, rs_cap = norm_args(
+            ftab, p_len, n_fu, prio, quota, rs_cap)
+        effects = jnp.asarray(effects, I32)
+        st = init_state(mem_init)
+        st = jax.lax.while_loop(
+            lambda s: alive_of(s).any(),
+            lambda s: step(s, exists, F, p_len, prio, quota, rs_cap,
+                           effects),
+            st)
+        return collect(st)
+
+    def run_population(ftab, p_len, n_fu, mem_init, effects,
+                       prio, quota, rs_cap):
+        """The scenario-batched machine: every argument carries a leading
+        scenario axis, and the whole population runs in ONE while loop
+        whose condition is scalar (any lane alive).  Because a dead lane
+        is a fixed point of ``step``, no per-lane select over the carry is
+        needed — which is what makes this markedly faster than
+        ``vmap(run)`` (the generic batching of a while loop masks the
+        whole ~25 KB/lane state every iteration)."""
+        F, p_len, exists, prio, quota, rs_cap = norm_args(
+            ftab, p_len, n_fu, prio, quota, rs_cap)
+        effects = jnp.asarray(effects, I32)
+        st = jax.vmap(init_state)(jnp.asarray(mem_init, I32))
+
+        vstep = jax.vmap(step)
+        st = jax.lax.while_loop(
+            lambda s: alive_of(s).any(),
+            lambda s: vstep(s, exists, F, p_len, prio, quota, rs_cap,
+                            effects),
+            st)
+        return collect(st)
+
+    if population:
+        return run_population
     return run
 
 
@@ -673,7 +814,8 @@ def simulate(code: np.ndarray, costs: SchedulerCosts,
     mem, eff = images(params, mem_init, effects)
     out = run(jnp.asarray(ftab), p_len, n_fu, jnp.asarray(mem),
               jnp.asarray(eff), jnp.asarray(pol.weight_array(), I32),
-              jnp.asarray(pol.quota_array(), I32))
+              jnp.asarray(pol.quota_array(), I32),
+              jnp.asarray(pol.rs_cap_array(), I32))
     return jax.tree.map(np.asarray, out)
 
 

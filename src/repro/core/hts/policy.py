@@ -16,6 +16,15 @@ configuration:
   function class*.  A pid at its cap is masked out of the per-class
   free-unit ranking until one of its tasks completes; the freed unit
   falls to the next eligible entry (the arbiter stays work-conserving).
+* **rs_caps** — optional per-pid cap on *reservation-station entries*
+  (admission control).  FU quotas gate only execution occupancy: a
+  greedy tenant can still fill the whole RS with pending entries and
+  dispatch-block every later tenant behind a structural stall.  An RS
+  cap stalls *that pid's own* task dispatch once its RS occupancy
+  reaches the cap (exactly like the RS-full structural stall, but per
+  pid), so floods capped below ``rs_entries`` can never exhaust the
+  shared window — the headroom is effectively reserved for uncapped
+  tenants, mirroring how FU quotas below the pool size reserve units.
 
 A policy is **data, not configuration**: the JAX machine receives the
 weight/quota arrays as traced runtime arguments (like ``n_fu``), so
@@ -58,13 +67,16 @@ class SchedPolicy:
     """
     weights: tuple[tuple[int, int], ...] = ()   # (pid, priority weight)
     quotas: tuple[tuple[int, int], ...] = ()    # (pid, max in-flight/class)
+    rs_caps: tuple[tuple[int, int], ...] = ()   # (pid, max RS entries)
     default_weight: int = 0
 
     @classmethod
     def of(cls, weights: Optional[Mapping[int, int]] = None,
            quotas: Optional[Mapping[int, int]] = None,
+           rs_caps: Optional[Mapping[int, int]] = None,
            default_weight: int = 0) -> "SchedPolicy":
-        """Build a policy from ``{pid: weight}`` / ``{pid: quota}`` dicts."""
+        """Build a policy from ``{pid: weight}`` / ``{pid: quota}`` /
+        ``{pid: rs_cap}`` dicts."""
         def norm(m, what, lo, hi):
             items = []
             for pid, v in sorted((m or {}).items()):
@@ -81,6 +93,7 @@ class SchedPolicy:
                              f"got {default_weight}")
         return cls(weights=norm(weights, "weight", 0, PRIO_CAP),
                    quotas=norm(quotas, "quota", 1, NO_QUOTA),
+                   rs_caps=norm(rs_caps, "rs_cap", 1, NO_QUOTA),
                    default_weight=int(default_weight))
 
     # ----------------------------------------------------------- lookups
@@ -91,10 +104,14 @@ class SchedPolicy:
         """Per-class in-flight cap for ``pid`` (``NO_QUOTA`` if uncapped)."""
         return dict(self.quotas).get(pid, NO_QUOTA)
 
+    def rs_cap_of(self, pid: int) -> int:
+        """Max RS entries ``pid`` may hold at once (``NO_QUOTA`` = uncapped)."""
+        return dict(self.rs_caps).get(pid, NO_QUOTA)
+
     @property
     def is_default(self) -> bool:
         """True iff this policy degrades to pure age-order arbitration."""
-        return (not self.quotas
+        return (not self.quotas and not self.rs_caps
                 and all(w == self.default_weight for _, w in self.weights))
 
     # ------------------------------------------------------ array forms
@@ -112,6 +129,13 @@ class SchedPolicy:
             arr[pid] = q
         return arr
 
+    def rs_cap_array(self, num_pids: int = NUM_PIDS) -> np.ndarray:
+        """(num_pids,) int32 RS-entry admission caps (NO_QUOTA = uncapped)."""
+        arr = np.full((num_pids,), NO_QUOTA, np.int32)
+        for pid, q in self.rs_caps:
+            arr[pid] = q
+        return arr
+
     # --------------------------------------------------------- utilities
     def merge_with(self, other: "SchedPolicy") -> "SchedPolicy":
         """Union of two policies; conflicting entries for a pid are an error
@@ -120,14 +144,16 @@ class SchedPolicy:
             raise ValueError("cannot merge policies with different "
                              "default weights")
         out_w, out_q = dict(self.weights), dict(self.quotas)
+        out_r = dict(self.rs_caps)
         for src, dst, what in ((other.weights, out_w, "weight"),
-                               (other.quotas, out_q, "quota")):
+                               (other.quotas, out_q, "quota"),
+                               (other.rs_caps, out_r, "rs_cap")):
             for pid, v in src:
                 if pid in dst and dst[pid] != v:
                     raise ValueError(f"conflicting {what} for pid {pid}: "
                                      f"{dst[pid]} vs {v}")
                 dst[pid] = v
-        return SchedPolicy.of(out_w, out_q, self.default_weight)
+        return SchedPolicy.of(out_w, out_q, out_r, self.default_weight)
 
     def issue_key(self, pid: int, age: int) -> int:
         """The arbiter's scalar sort key: priority class first (higher
@@ -146,4 +172,7 @@ class SchedPolicy:
         if self.quotas:
             parts.append("quotas " + ",".join(f"{p}:{q}"
                                               for p, q in self.quotas))
+        if self.rs_caps:
+            parts.append("rs_caps " + ",".join(f"{p}:{q}"
+                                               for p, q in self.rs_caps))
         return "; ".join(parts)

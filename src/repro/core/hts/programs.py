@@ -221,6 +221,54 @@ def audio_compression(bands: int = 8, time_domain: bool = False) -> Bench:
     return Bench.of(p)
 
 
+# ---------------------------------------------------------------------------
+# multi-application pair (the paper's abstract motivation): a second real
+# application interleaved with the audio stream under one HTS — formerly
+# core/hts/multiapp.py, superseded by Program.merge for the general case
+# ---------------------------------------------------------------------------
+IMG_BASE = 0x800        # image app's region space (disjoint from audio's)
+TILE_WORDS = 0x20
+
+
+def image_compression(tiles: int = 8) -> Bench:
+    """Per 8×8 tile: DCT → vector_max (quantization range proxy) →
+    correlation (inter-tile prediction) → vector_add (residual).
+    Straight-line (unrolled), pid=1 — the DCT-heavy complement to the
+    FIR/FFT-heavy audio mix (Fig 2's image-processing example)."""
+    p = Program("image_compression", region_base=IMG_BASE)
+    with p.process(1):
+        prev = None
+        for t in range(tiles):
+            tile = p.region(TILE_WORDS, align=TILE_WORDS, name=f"tile{t}")
+            dct = p.task("dct", in_=tile.sub(0x0, 8), out=tile.sub(0x8, 8),
+                         tid=t)
+            p.task("vector_max", in_=dct, out=tile.sub(0x10, 1), tid=t)
+            if prev is not None:
+                p.task("correlation", in_=dct, out=tile.sub(0x11, 1), tid=t)
+            p.task("vector_add", in_=dct, out=tile.sub(0x18, 8), tid=t)
+            prev = dct
+    return Bench.of(p)
+
+
+def audio_straightline(bands: int = 8) -> Bench:
+    """Unrolled audio compression, frequency-domain path (pid=0) — the
+    loop-free variant used for multi-application sharing studies (merge it
+    with :func:`image_compression` via ``Program.merge``)."""
+    p = Program("audio_straightline")
+    frame = p.input(INPUT, INPUT_WORDS, "audio")
+    p.task("correlation", in_=frame, out=1, tid=0)
+    for b in range(bands):
+        band = p.region(TILE_WORDS, align=TILE_WORDS, name=f"band{b}")
+        fft = p.task("fft_256", in_=band.sub(0x0, 4), out=band.sub(0x8, 4),
+                     tid=1)
+        for j in range(3):
+            p.task("vector_dot", in_=fft, out=band.sub(0x10 + j, 1),
+                   tid=2 + j)
+        p.task("fft_256", in_=band.sub(0x10, 4), out=band.sub(0x18, 4),
+               tid=5)
+    return Bench.of(p)
+
+
 SYNTHETIC_NO_BRANCH = (no_dependency, same_dependency, diff_dependency,
                        random_dependency, loop_no_dependency, loop_dependency)
 SYNTHETIC_BRANCH = (branch_taken_no_dep, branch_not_taken_no_dep,
@@ -231,3 +279,14 @@ ALL_SYNTHETIC = SYNTHETIC_NO_BRANCH + SYNTHETIC_BRANCH
 def all_benches() -> list[Bench]:
     return [g() for g in ALL_SYNTHETIC] + [
         audio_compression(8, False), audio_compression(8, True)]
+
+
+def merge_benches(benches, name: str = "shared", **merge_kwargs) -> Bench:
+    """N-way :meth:`builder.Program.merge` of builder-backed benches (N CPUs
+    pushing into the one Task Queue; pids distinguish the owners) —
+    performed on the program graphs, not on assembly text."""
+    benches = list(benches)
+    if any(b.program is None for b in benches):
+        raise ValueError("merge needs builder-backed Bench objects")
+    return Bench.of(Program.merge([b.program for b in benches], name,
+                                  **merge_kwargs))

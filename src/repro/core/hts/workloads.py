@@ -22,10 +22,19 @@ failing fuzz case is one integer away from a reproduction:
     >>> shared.fairness(solo_results(sc, n_fu=2)).max_slowdown
 
 ``mixed_priority=True`` scenarios additionally draw per-pid priority
-weights (and sometimes a per-class FU quota) into a
-:class:`~repro.core.hts.policy.SchedPolicy` attached to the merge, so the
-same differential fuzzing loop exercises the weighted/quota arbiter —
-``hts.compare`` picks the policy up automatically.
+weights (and sometimes a per-class FU quota and/or a per-pid RS admission
+cap) into a :class:`~repro.core.hts.policy.SchedPolicy` attached to the
+merge, so the same differential fuzzing loop exercises the weighted/quota
+arbiter and the RS admission stall — ``hts.compare`` picks the policy up
+automatically.
+
+Population batches
+------------------
+:func:`generate_population` is the scenario generator at population scale:
+N seeded scenarios grouped into *shape buckets* (``batch.prog_bucket`` of
+the merged program length), each bucket a :class:`Population` whose merged
+programs pack into one ``hts.run_many`` vmap batch — the unit of work for
+population-scale sweeps (``benchmarks/population.py``).
 
 Resource rationing
 ------------------
@@ -203,8 +212,9 @@ def generate_scenario(seed: int, *, n_tenants: Optional[int] = None,
     ``mixed_priority=True`` additionally draws a :class:`SchedPolicy` for the
     merge — per-pid priority weights from :data:`PRIORITY_POOL` (at least one
     tenant strictly above the rest so the weighted arbiter provably engages)
-    and, with probability ½ per scenario, a per-class FU quota of 1–2 units
-    on one tenant.  The tenant *programs* are identical to the unprioritised
+    and, each with probability ½ per scenario, a per-class FU quota of 1–2
+    units on one tenant and an RS admission cap of 1–4 entries on one
+    tenant.  The tenant *programs* are identical to the unprioritised
     scenario of the same seed (the policy draws happen after program
     generation), so fuzz failures stay one integer away from reproduction.
     """
@@ -220,7 +230,7 @@ def generate_scenario(seed: int, *, n_tenants: Optional[int] = None,
         _generate_tenant(rng, pid, TENANT_BASE + i * span, span, reg_budget,
                          kernels, max_tasks)
         for i, pid in enumerate(pids))
-    priorities = quotas = None
+    priorities = quotas = rs_caps = None
     if mixed_priority:
         weights = {pid: int(rng.choice(PRIORITY_POOL)) for pid in pids}
         boosted = int(rng.choice(pids))
@@ -228,10 +238,13 @@ def generate_scenario(seed: int, *, n_tenants: Optional[int] = None,
         priorities = weights
         quotas = ({int(rng.choice(pids)): int(rng.integers(1, 3))}
                   if rng.random() < 0.5 else None)
+        rs_caps = ({int(rng.choice(pids)): int(rng.integers(1, 5))}
+                   if rng.random() < 0.5 else None)
     merged_prog = Program.merge([b.program for b in tenants],
                                 name or f"scenario_{seed}",
                                 require_distinct_pids=True,
-                                priorities=priorities, quotas=quotas)
+                                priorities=priorities, quotas=quotas,
+                                rs_caps=rs_caps)
     return Scenario(name=merged_prog.name, seed=seed, pids=pids,
                     tenants=tenants, merged=Bench.of(merged_prog),
                     policy=merged_prog.policy)
@@ -241,6 +254,64 @@ def generate_scenarios(n: int, *, seed0: int = 0, **kwargs):
     """``n`` scenarios with consecutive seeds (fuzzing convenience)."""
     for s in range(seed0, seed0 + n):
         yield generate_scenario(s, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# populations: scenarios grouped into vmap-ready shape buckets
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Population:
+    """One shape bucket of scenarios — the unit of a ``run_many`` batch.
+
+    All merged programs fit ``max_prog`` (their common power-of-two table
+    bucket), so the whole population simulates as one compiled, vmapped
+    machine call:
+
+        >>> pops = generate_population(64, kernels=CHEAP_MIX)
+        >>> from repro.core import hts
+        >>> results = [hts.run_many(pop.programs, n_fu=2,
+        ...                         max_prog=pop.max_prog) for pop in pops]
+    """
+    scenarios: tuple[Scenario, ...]
+    max_prog: int
+
+    def __len__(self) -> int:
+        return len(self.scenarios)
+
+    @property
+    def programs(self) -> tuple[Bench, ...]:
+        """The merged (shared) program of every scenario, batch order."""
+        return tuple(sc.merged for sc in self.scenarios)
+
+    @property
+    def seeds(self) -> tuple[int, ...]:
+        return tuple(sc.seed for sc in self.scenarios)
+
+
+def generate_population(n: int, *, seed0: int = 0, bucket: bool = True,
+                        **kwargs) -> tuple[Population, ...]:
+    """``n`` seeded scenarios grouped into shape-bucketed populations.
+
+    Scenario ``seed0 + i`` is identical to ``generate_scenario(seed0 + i,
+    **kwargs)`` — bucketing only *groups* scenarios (by the power-of-two
+    program-table bucket of their merged instruction count), it never
+    changes them.  With ``bucket=False`` everything lands in one
+    :class:`Population` padded to the largest bucket (one compile, one
+    batch — what the population benchmark uses); with the default
+    bucketing, each returned population compiles once per distinct bucket,
+    which keeps padding waste bounded on long-tailed program lengths.
+    """
+    from .batch import prog_bucket, work_estimate
+    scenarios = [generate_scenario(s, **kwargs)
+                 for s in range(seed0, seed0 + n)]
+    sizes = [prog_bucket(work_estimate(sc.merged)) for sc in scenarios]
+    if not bucket:
+        return (Population(tuple(scenarios), max(sizes, default=0)),)
+    buckets: dict[int, list[Scenario]] = {}
+    for sc, size in zip(scenarios, sizes):
+        buckets.setdefault(size, []).append(sc)
+    return tuple(Population(tuple(scs), size)
+                 for size, scs in sorted(buckets.items()))
 
 
 def solo_results(scenario: Scenario, *, scheduler="hts_spec", n_fu=2,

@@ -1,7 +1,7 @@
 """Multi-application sharing + design-parameter ablation behaviours."""
 import numpy as np
 
-from repro.core.hts import assembler, costs, machine, multiapp
+from repro.core.hts import assembler, costs, machine, programs
 from repro.core.hts.golden import HtsParams
 
 PARAMS = HtsParams(mem_words=4096, tracker_entries=128)
@@ -20,9 +20,9 @@ def test_multiapp_sharing_beats_serial():
     """The paper's abstract claim: multiple applications share one
     accelerator pool.  Shared makespan must beat serial execution and sit
     near max(app_a, app_b) for complementary mixes."""
-    audio = multiapp.audio_straightline(2)
-    image = multiapp.image_compression(40)
-    shared = multiapp.interleave(audio, image)
+    audio = programs.audio_straightline(2)
+    image = programs.image_compression(40)
+    shared = programs.merge_benches([audio, image])
     ca, _ = _cycles(audio)
     ci, _ = _cycles(image)
     cs, out = _cycles(shared)
@@ -38,9 +38,9 @@ def test_multiapp_sharing_beats_serial():
 def test_multiapp_isolation():
     """Disjoint region spaces ⇒ no cross-app dependencies: every image task's
     dependency (if any) is another image task."""
-    audio = multiapp.audio_straightline(2)
-    image = multiapp.image_compression(8)
-    shared = multiapp.interleave(audio, image)
+    audio = programs.audio_straightline(2)
+    image = programs.image_compression(8)
+    shared = programs.merge_benches([audio, image])
     code = assembler.assemble(shared.asm)
     from repro.core.hts import golden
     r = golden.run(code, costs.costs_by_name("hts_spec"), PARAMS)

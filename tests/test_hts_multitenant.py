@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import hts
-from repro.core.hts import costs, golden, isa, multiapp, workloads
+from repro.core.hts import costs, golden, isa, programs, workloads
 from repro.core.hts.builder import BuilderError, Program
 
 #: acceptance floor: the differential fuzzer must clear ≥ 50 scenarios.
@@ -123,12 +123,12 @@ def test_shared_makespan_le_sum_of_solos_complementary():
     image DCT-heavy) share the pool with shared ≤ serial makespan, and each
     tenant's in-shared makespan is no better than its solo run."""
     params = hts.HtsParams(mem_words=4096, tracker_entries=128)
-    audio = multiapp.audio_straightline(2)           # pid 0
-    image = multiapp.image_compression(6)            # pid 1
-    third = multiapp.Bench.of(
+    audio = programs.audio_straightline(2)           # pid 0
+    image = programs.image_compression(6)            # pid 1
+    third = programs.Bench.of(
         _chain("vec", ["vector_add", "vector_max", "vector_dot"] * 2, 2,
                0xC00))
-    shared = multiapp.merge([audio, image, third])
+    shared = programs.merge_benches([audio, image, third])
     rs = hts.run(shared, n_fu=2, params=params)
     solos = {pid: hts.run(b, n_fu=2, params=params)
              for pid, b in ((0, audio), (1, image), (2, third))}
