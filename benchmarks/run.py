@@ -10,8 +10,8 @@ from __future__ import annotations
 import argparse
 import json
 
-from benchmarks import extensions, multitenant, paper_figs, population, \
-    priority
+from benchmarks import extensions, frontend, multitenant, paper_figs, \
+    population, priority
 
 SECTIONS = {
     "tableII": paper_figs.table2,
@@ -23,6 +23,7 @@ SECTIONS = {
     "multitenant": multitenant.section,
     "priority": priority.section,
     "population": population.section,
+    "frontend": frontend.section,
     "ablation": extensions.design_ablation,
 }
 

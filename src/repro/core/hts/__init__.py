@@ -24,6 +24,12 @@ Public surface (the rest of the repo goes through this):
   ``Program.merge(priorities=..., quotas=...)`` and accepted by
   ``run``/``sweep``/``compare``; all-default degrades to the paper's pure
   age-order arbitration.
+* per-tenant frontends (``frontend.py``): ``Program.merge(frontends=True,
+  arrivals=...)`` keeps the tenants' instruction streams separate — the
+  paper's N CPUs each pushing independently — with per-stream program
+  counters, arrival offsets and a round-robin/weighted frontend arbiter;
+  closes the merged-stream head-of-line bound the ``rs_admission`` study
+  measured (``BENCH_frontend.json``).
 
     >>> from repro.core import hts
     >>> p = hts.Program("demo")
@@ -44,15 +50,17 @@ from .batch import PackedPopulation, pack_population, prog_bucket
 from .builder import (BuilderError, BuiltProgram, Program, Reg, Region,
                       TaskHandle, Walker)
 from .costs import SchedulerCosts, costs_by_name
+from .frontend import MultiProgram, Stream, StreamSet, build_frontends
 from .golden import HtsParams
 from .policy import SchedPolicy
 
 __all__ = [
     "ALL_SCHEDULERS", "BuilderError", "BuiltProgram", "CompareReport",
-    "FairnessReport", "HtsParams", "MismatchError", "PackedPopulation",
-    "PopulationCompareReport", "PopulationResult", "Program", "Reg",
-    "Region", "Result", "SchedPolicy", "SchedulerCosts", "SimulationError",
-    "SweepResult", "TaskHandle", "TaskRow", "Walker", "compare",
+    "FairnessReport", "HtsParams", "MismatchError", "MultiProgram",
+    "PackedPopulation", "PopulationCompareReport", "PopulationResult",
+    "Program", "Reg", "Region", "Result", "SchedPolicy", "SchedulerCosts",
+    "SimulationError", "Stream", "StreamSet", "SweepResult", "TaskHandle",
+    "TaskRow", "Walker", "build_frontends", "compare",
     "compare_population", "costs_by_name", "pack_population", "prog_bucket",
     "run", "run_many", "sweep",
 ]

@@ -27,11 +27,13 @@ Both return the same :class:`Result` with identical per-task schedule rows
 The axes model
 --------------
 Every argument of the compiled machine is a runtime input, so batching is
-a choice of ``vmap`` axes over its 8-argument signature.  Three named axes
+a choice of ``vmap`` axes over its 9-argument signature (the 9th is the
+per-tenant frontend stream table, ``frontend.py``).  Three named axes
 compose (``_vmapped`` stacks them outermost-first):
 
 * the **scenario** axis — everything batched: a *population* of programs,
-  each with its own images, FU counts and policy tables.  ``run_many``
+  each with its own images, FU counts, policy tables and stream tables.
+  ``run_many``
   drives it and returns a :class:`PopulationResult`; ``batch.py`` packs
   programs of one shape bucket into the common-shape arrays.
 * the **n_fu** axis — only the FU configuration batched (the Fig-10
@@ -81,6 +83,7 @@ from . import batch, golden, machine
 from .batch import PackedPopulation
 from .costs import (ALL_SCHEDULERS, FUNC_NAMES, NUM_FUNCS, SchedulerCosts,
                     costs_by_name)
+from .frontend import StreamSet
 from .golden import HtsParams
 from .policy import SchedPolicy
 
@@ -152,6 +155,12 @@ class Result:
     raw: Any = dataclasses.field(repr=False, compare=False, default=None)
     policy: Optional[SchedPolicy] = dataclasses.field(
         default=None, compare=False)    # arbitration policy this run used
+    #: per-stream dispatch-stall cycles (one entry for merged-frontend runs)
+    fe_stall: tuple[int, ...] = dataclasses.field(default=(), compare=False)
+    #: the per-tenant frontends this run dispatched through (None = the
+    #: historical one merged in-order stream)
+    streams: Optional[StreamSet] = dataclasses.field(
+        default=None, compare=False)
 
     @property
     def n_tasks(self) -> int:
@@ -220,7 +229,63 @@ class Result:
             max_slowdown=max(slowdowns.values(), default=0.0),
             mean_slowdown=(sum(slowdowns.values()) / len(slowdowns)
                            if slowdowns else 0.0),
-            weights={pid: pol.weight_of(pid) for pid in slowdowns})
+            weights={pid: pol.weight_of(pid) for pid in slowdowns},
+            frontend=({pid: self.frontend_metrics(pid) for pid in slowdowns}
+                      if self.streams is not None else {}))
+
+    # ------------------------------------------------- frontend metrics
+    def dispatch_stall_cycles(self, pid: Optional[int] = None):
+        """Cycles a tenant's frontend stream had arrived and still held
+        undispatched instructions but was not granted dispatch — the
+        per-tenant head-of-line metric.  ``pid=None`` returns the per-pid
+        dict; a merged-frontend run charges everything to its one stream
+        (keyed by pid 0).
+        """
+        pids = (self.streams.pids if self.streams is not None
+                else (0,) * len(self.fe_stall))
+        if pid is None:
+            out: dict[int, int] = {}
+            for p, s in zip(pids, self.fe_stall):
+                out[p] = out.get(p, 0) + int(s)
+            return out
+        return sum(int(s) for p, s in zip(pids, self.fe_stall) if p == pid)
+
+    def time_to_first_issue(self, pid: int) -> Optional[int]:
+        """Cycles from ``pid``'s stream arrival to its first task issue
+        (``None`` if the tenant never issued) — how long a late tenant
+        waited before the scheduler actually started serving it.
+        """
+        issues = [row.issue for row in self.schedule
+                  if row.pid == pid and row.issue >= 0]
+        if not issues:
+            return None
+        arrival = (self.streams.arrival_of(pid)
+                   if self.streams is not None else 0)
+        return min(issues) - arrival
+
+    def rs_occupancy_at_dispatch(self, pid: int) -> float:
+        """Mean count of ``pid``'s own reservation-station-resident tasks
+        at each of its dispatches (including the new one) — how deeply a
+        tenant's stream queued behind itself inside the shared window.
+        """
+        rows = [(r.dispatch, r.issue) for r in self.schedule
+                if r.pid == pid and not r.aborted and r.dispatch >= 0]
+        if not rows:
+            return 0.0
+        # resident at cycle d: dispatched by d, not yet issued (RS issue
+        # precedes dispatch within a cycle, so the earliest issue is d+1)
+        occ = [sum(1 for d2, i2 in rows if d2 <= d and (i2 < 0 or i2 > d))
+               for d, _ in rows]
+        return sum(occ) / len(occ)
+
+    def frontend_metrics(self, pid: int) -> dict:
+        """The per-tenant frontend triple (dispatch-stall cycles, RS
+        occupancy at dispatch, time-to-first-issue) as one dict."""
+        return {
+            "dispatch_stall_cycles": self.dispatch_stall_cycles(pid),
+            "rs_occupancy_at_dispatch": self.rs_occupancy_at_dispatch(pid),
+            "time_to_first_issue": self.time_to_first_issue(pid),
+        }
 
     def table(self) -> str:
         """Human-readable per-task schedule."""
@@ -250,6 +315,9 @@ class FairnessReport:
     max_slowdown: float                 # fairness figure of merit
     mean_slowdown: float
     weights: dict[int, int] = dataclasses.field(default_factory=dict)
+    #: per-pid frontend metrics (``Result.frontend_metrics``) when the
+    #: shared run dispatched through per-tenant frontends; {} otherwise
+    frontend: dict[int, dict] = dataclasses.field(default_factory=dict)
 
     def by_weight(self) -> dict[int, float]:
         """Mean slowdown per priority weight (descending weight order)."""
@@ -277,7 +345,8 @@ def _golden_rows(res: golden.Result) -> tuple[TaskRow, ...]:
 
 def _machine_result(name: str, scheduler: str, fu: tuple[int, ...],
                     out: dict[str, Any], wall_us: float,
-                    pol: SchedPolicy, max_fu_per_class: int) -> Result:
+                    pol: SchedPolicy, max_fu_per_class: int,
+                    streams: Optional[StreamSet] = None) -> Result:
     """A :class:`Result` from one machine output dict (single scenario)."""
     halted = bool(out["halted"]) and not bool(out["overflow"])
     # keep only units that exist under fu (class-major, like golden)
@@ -285,12 +354,16 @@ def _machine_result(name: str, scheduler: str, fu: tuple[int, ...],
                                                      max_fu_per_class)
     busy_exist = tuple(int(busy[c, u]) for c in range(NUM_FUNCS)
                        for u in range(fu[c]))
+    n_streams = len(streams) if streams is not None else 1
+    fe_stall = tuple(int(x) for x in
+                     np.asarray(out["fe_stall"]).ravel()[:n_streams])
     return Result(
         program=name, scheduler=scheduler, backend="jax", n_fu=fu,
         cycles=int(out["cycles"]), halted=halted,
         schedule=_machine_rows(out), spec_aborted=int(out["spec_aborted"]),
         stall_cycles=int(out["stall_cycles"]), fu_busy_cycles=busy_exist,
-        wall_us=wall_us, raw=out, policy=pol)
+        wall_us=wall_us, raw=out, policy=pol, fe_stall=fe_stall,
+        streams=streams)
 
 
 # ---------------------------------------------------------------------------
@@ -316,6 +389,10 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
     cost = _norm_costs(scheduler)
     fu = _norm_n_fu(n_fu)
     pol = _norm_policy(policy, prep, params)
+    # per-tenant frontends: the stream table is runtime data, with the
+    # frontend arbitration weights resolved from the effective policy
+    stream_tab = (prep.streams.table(pol) if prep.streams is not None
+                  else None)
 
     t0 = time.perf_counter()
     if backend == "jax":
@@ -324,14 +401,16 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
                                mem_init=prep.mem_init, effects=prep.effects,
                                event_skip=event_skip, max_cycles=max_cycles,
                                max_fu_per_class=max_fu_per_class,
-                               max_prog=max_prog, policy=pol)
+                               max_prog=max_prog, policy=pol,
+                               streams=stream_tab)
         wall = (time.perf_counter() - t0) * 1e6
         result = _machine_result(prep.name, cost.name, fu, out, wall, pol,
-                                 max_fu_per_class)
+                                 max_fu_per_class, prep.streams)
     elif backend == "golden":
         g = golden.run(prep.code, cost,
                        dataclasses.replace(params, n_fu=fu, policy=pol),
-                       prep.mem_init, prep.effects, max_cycles=max_cycles)
+                       prep.mem_init, prep.effects, max_cycles=max_cycles,
+                       streams=stream_tab)
         wall = (time.perf_counter() - t0) * 1e6
         result = Result(
             program=prep.name, scheduler=cost.name, backend=backend,
@@ -339,7 +418,9 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
             schedule=_golden_rows(g), spec_aborted=int(g.spec_aborted),
             stall_cycles=int(g.stall_cycles),
             fu_busy_cycles=tuple(int(x) for x in g.fu_busy_cycles),
-            wall_us=wall, raw=g, policy=pol)
+            wall_us=wall, raw=g, policy=pol,
+            fe_stall=tuple(int(x) for x in g.fe_stall),
+            streams=prep.streams)
     else:
         raise ValueError(f'backend must be "jax" or "golden", got {backend!r}')
 
@@ -376,6 +457,8 @@ class PopulationResult:
     policies: tuple[SchedPolicy, ...]
     raw: Any = dataclasses.field(repr=False, default=None)
     _results: Optional[tuple] = dataclasses.field(repr=False, default=None)
+    #: per-scenario frontend stream sets (None entries = merged frontend)
+    stream_sets: tuple = ()
 
     def __len__(self) -> int:
         return len(self.names)
@@ -387,7 +470,9 @@ class PopulationResult:
         fu = tuple(int(x) for x in self.n_fu[i])
         return _machine_result(self.names[i], self.scheduler, fu, out,
                                self.wall_us / max(len(self), 1),
-                               self.policies[i], self.max_fu_per_class)
+                               self.policies[i], self.max_fu_per_class,
+                               (self.stream_sets[i] if self.stream_sets
+                                else None))
 
     def __iter__(self):
         return (self[i] for i in range(len(self)))
@@ -455,7 +540,8 @@ def run_many(programs, *,
             n_fu=pop.n_fu, cycles=np.asarray([r.cycles for r in results]),
             halted=np.asarray([r.halted for r in results]), wall_us=wall,
             max_fu_per_class=pop.widest_fu, policies=pop.policies,
-            _results=results)
+            _results=results,
+            stream_sets=tuple(p.streams for p in pop.preps))
     if backend != "jax":
         raise ValueError(f'backend must be "jax" or "golden", got {backend!r}')
 
@@ -481,7 +567,8 @@ def run_many(programs, *,
     result = PopulationResult(
         scheduler=cost.name, backend="jax", names=pop.names, n_fu=pop.n_fu,
         cycles=out["cycles"], halted=halted, wall_us=wall,
-        max_fu_per_class=max_fu_per_class, policies=pop.policies, raw=out)
+        max_fu_per_class=max_fu_per_class, policies=pop.policies, raw=out,
+        stream_sets=tuple(p.streams for p in pop.preps))
     if check and not result.all_halted:
         bad = [pop.names[i] for i in np.nonzero(~halted)[0]]
         raise SimulationError(
@@ -538,13 +625,14 @@ class SweepResult:
 
 
 # ---------------------------------------------------------------------------
-# the axes model: named vmap axes over the machine's 8-argument signature
-# (ftab, p_len, n_fu, mem, eff, prio, quota, rs_cap) — see module docstring
+# the axes model: named vmap axes over the machine's 9-argument signature
+# (ftab, p_len, n_fu, mem, eff, prio, quota, rs_cap, streams) — see module
+# docstring
 # ---------------------------------------------------------------------------
-SCENARIO_AXIS = (0, 0, 0, 0, 0, 0, 0, 0)             # a population, batched
-SCENARIO_SHARED_FU_AXIS = (0, 0, None, 0, 0, 0, 0, 0)  # population × FU grid
-N_FU_AXIS = (None, None, 0, None, None, None, None, None)   # Fig-10 sweep
-POLICY_AXIS = (None, None, None, None, None, 0, 0, 0)       # policy sweep
+SCENARIO_AXIS = (0, 0, 0, 0, 0, 0, 0, 0, 0)          # a population, batched
+SCENARIO_SHARED_FU_AXIS = (0, 0, None, 0, 0, 0, 0, 0, 0)  # population × FU
+N_FU_AXIS = (None, None, 0, None, None, None, None, None, None)  # Fig-10
+POLICY_AXIS = (None, None, None, None, None, 0, 0, 0, None)  # policy sweep
 
 
 @functools.lru_cache(maxsize=32)
@@ -622,11 +710,14 @@ def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),
         run_prog = 64 if max_prog is None else max_prog
         ftab, p_len = machine.pack_program(prep.code, run_prog)
         mem, eff = machine.images(params, prep.mem_init, prep.effects)
+        stream_tab = (prep.streams.table(pol) if prep.streams is not None
+                      else batch.StreamSet.single(p_len).table())
         args = [jnp.asarray(ftab), jnp.asarray(p_len, jnp.int32), n_fu_arr,
                 jnp.asarray(mem), jnp.asarray(eff),
                 jnp.asarray(pol.weight_array(), jnp.int32),
                 jnp.asarray(pol.quota_array(), jnp.int32),
-                jnp.asarray(pol.rs_cap_array(), jnp.int32)]
+                jnp.asarray(pol.rs_cap_array(), jnp.int32),
+                jnp.asarray(stream_tab, jnp.int32)]
         axes = (N_FU_AXIS,)
         # the policy is runtime data — keep it out of the compilation key
         params_c = dataclasses.replace(params, policy=SchedPolicy())

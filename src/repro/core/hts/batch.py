@@ -35,6 +35,7 @@ import numpy as np
 from . import isa, machine
 from .builder import BuiltProgram, Program
 from .costs import NUM_FUNCS
+from .frontend import STREAM_FIELDS, MultiProgram, StreamSet
 from .golden import HtsParams
 from .policy import SchedPolicy
 
@@ -53,12 +54,19 @@ class Prepared:
     mem_init: dict[int, int]
     effects: dict[int, int]
     policy: Optional[SchedPolicy] = None    # attached by builder/merge
+    #: per-tenant frontends (``frontend.MultiProgram``); ``None`` = the
+    #: historical single merged in-order frontend
+    streams: Optional[StreamSet] = None
 
 
 def prepare(program) -> Prepared:
-    """Accept Program | BuiltProgram | Bench-like | asm text | code array."""
+    """Accept Program | MultiProgram | BuiltProgram | Bench-like | asm text
+    | code array."""
     if isinstance(program, Prepared):
         return program
+    if isinstance(program, MultiProgram):
+        return Prepared(program.name, program.code, program.mem_init,
+                        program.effects, program.policy, program.streams)
     if isinstance(program, Program):
         program = program.build()
     if isinstance(program, BuiltProgram):
@@ -178,7 +186,12 @@ class PackedPopulation:
       on the shared ``params.total_mem`` footprint;
     * ``n_fu`` (N, NUM_FUNCS) — per-scenario accelerator counts;
     * ``prio`` / ``quota`` / ``rs_cap`` (N, NUM_PIDS) — per-scenario
-      scheduling-policy tables.
+      scheduling-policy tables;
+    * ``streams`` (N, max_streams, 4) — per-scenario frontend stream
+      tables (``frontend.STREAM_FIELDS``), padded with inactive rows
+      (``end <= start`` — never fetched); single-frontend scenarios get
+      the one merged stream, so multi-frontend populations ride the same
+      shape buckets and batches as everything else.
 
     ``preps``/``policies`` retain the per-scenario sources so differential
     checks (``api.compare``) can drive the golden oracle scenario by
@@ -195,6 +208,7 @@ class PackedPopulation:
     prio: np.ndarray
     quota: np.ndarray
     rs_cap: np.ndarray
+    streams: np.ndarray
     max_prog: int
     params: HtsParams               # shared capacities (policy stripped)
 
@@ -207,9 +221,16 @@ class PackedPopulation:
         return int(self.n_fu.max())
 
     def machine_args(self):
-        """The 8 batched arrays in ``machine.make_machine`` run order."""
+        """The 9 batched arrays in ``machine.make_machine`` run order."""
         return (self.ftab, self.p_len, self.n_fu, self.mem, self.eff,
-                self.prio, self.quota, self.rs_cap)
+                self.prio, self.quota, self.rs_cap, self.streams)
+
+    def stream_table(self, i: int) -> np.ndarray:
+        """Scenario ``i``'s stream table without the batch padding rows
+        (what the golden oracle consumes in differential checks)."""
+        tab = self.streams[i]
+        keep = tab[:, 1] > tab[:, 0]
+        return tab[keep] if keep.any() else tab[:1]
 
 
 def _broadcast_n_fu(n_fu, n: int) -> np.ndarray:
@@ -290,11 +311,22 @@ def pack_population(programs: Sequence,
     quota = np.stack([pol.quota_array() for pol in pols]).astype(np.int32)
     rs_cap = np.stack([pol.rs_cap_array() for pol in pols]).astype(np.int32)
 
+    # per-scenario frontend stream tables, padded to the batch's widest
+    # stream count with inactive rows (end <= start: arrived-and-drained,
+    # semantics-free like the ftab padding)
+    tabs = [(p.streams.table(pol) if p.streams is not None
+             else StreamSet.single(int(p_len[i])).table())
+            for i, (p, pol) in enumerate(zip(preps, pols))]
+    max_ns = max(len(t) for t in tabs)
+    streams = np.zeros((n, max_ns, len(STREAM_FIELDS)), np.int32)
+    for i, t in enumerate(tabs):
+        streams[i, :len(t)] = t
+
     return PackedPopulation(
         names=tuple(p.name for p in preps), preps=preps, policies=pols,
         ftab=ftab, p_len=p_len, mem=mem, eff=eff,
         n_fu=_broadcast_n_fu(n_fu, n), prio=prio, quota=quota,
-        rs_cap=rs_cap, max_prog=int(max_prog),
+        rs_cap=rs_cap, streams=streams, max_prog=int(max_prog),
         # the policy tables above are the runtime truth — strip the params
         # copy so one compiled machine serves every policy in the batch
         params=dataclasses.replace(params, policy=SchedPolicy()))

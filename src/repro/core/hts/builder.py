@@ -560,10 +560,24 @@ class Program:
               require_distinct_pids: bool = False,
               priorities: Optional[dict[int, int]] = None,
               quotas: Optional[dict[int, int]] = None,
-              rs_caps: Optional[dict[int, int]] = None) -> "Program":
+              rs_caps: Optional[dict[int, int]] = None,
+              frontends: bool = False,
+              arrivals: Optional[Sequence[int]] = None,
+              fe_mode: Optional[str] = None):
         """N-way graph-level round-robin merge: N CPUs pushing their task
         streams into the one Task Queue (pids mark the owners) — the paper's
         multi-application sharing scenario, for any tenant count.
+
+        With ``frontends=True`` the tenants' instruction streams stay
+        **separate** — the paper's actual system model, N CPUs each pushing
+        independently — and the result is a
+        :class:`~repro.core.hts.frontend.MultiProgram`: one code image with
+        a per-tenant dispatch stream each (own program counter, decode
+        window and optional ``arrivals`` offset), arbitrated per cycle into
+        the shared reservation station (see ``frontend.py``).  ``fe_mode``
+        ("rr"/"weighted") selects that arbitration on the attached policy.
+        ``arrivals``/``fe_mode`` are only meaningful with
+        ``frontends=True``.
 
         ``priorities`` (``{pid: weight}``), ``quotas`` (``{pid: max
         in-flight units per accelerator class}``) and ``rs_caps`` (``{pid:
@@ -591,6 +605,17 @@ class Program:
           emitting tasks under the same pid is an error (multi-tenant
           accounting would silently merge their schedules).
         """
+        if frontends:
+            from .frontend import build_frontends
+            return build_frontends(
+                programs, name, arrivals=arrivals,
+                require_distinct_pids=require_distinct_pids,
+                priorities=priorities, quotas=quotas, rs_caps=rs_caps,
+                fe_mode=fe_mode)
+        if arrivals is not None or fe_mode is not None:
+            raise BuilderError("arrivals=/fe_mode= require frontends=True "
+                               "(a merged single stream has no per-tenant "
+                               "frontends)")
         programs = list(programs)
         if not programs:
             raise BuilderError("merge needs at least one program")

@@ -28,12 +28,27 @@ Within-cycle phase order (both simulators MUST follow it exactly):
                           is masked out without consuming the unit
                           (``policy.SchedPolicy``; all-default = pure age
                           order, the paper's arbiter).
-  6. frontend           — fetch/decode/dispatch one instruction (tasks allocate
-                          RS + tracker + optionally TLB/TM; control instructions
-                          execute on the scheduler's GPRs).  A task whose pid is
-                          at its per-pid RS admission cap (``policy.rs_caps``)
-                          is a structural stall exactly like a full RS, so a
-                          capped flood can never exhaust the shared window.
+  6. frontend           — the frontend *arbiter* grants one eligible dispatch
+                          stream (per-tenant frontends, ``frontend.py``) and
+                          fetch/decode/dispatches its next instruction (tasks
+                          allocate RS + tracker + optionally TLB/TM; control
+                          instructions execute on the scheduler's GPRs).  A
+                          stream is eligible when it has arrived (``cycle >=
+                          arrival``), is not drained, its decode window is
+                          free, it is not stalled on its own unresolved
+                          branch, and its next instruction can act — a TASK
+                          blocked on a full RS / full tracker / its pid's RS
+                          admission cap (``policy.rs_caps``) makes the stream
+                          ineligible, so the arbiter skips it and the stall
+                          backpressures *that tenant only*.  Arbitration is
+                          round-robin over eligible streams; with
+                          ``SchedPolicy(fe_mode="weighted")`` a stream's pid
+                          weight ranks first (round-robin within a class).
+                          One branch unit and one speculation domain are
+                          shared: while a speculation is open only the
+                          speculating stream is granted.  The default single
+                          stream covering the whole program reproduces the
+                          historical merged in-order frontend bit-for-bit.
   7. halt check / cycle++
 
 Memory-value semantics: the simulator tracks *scheduling*, not DSP math — as in
@@ -111,6 +126,11 @@ class Result:
     spec_aborted: int
     stall_cycles: int
     halted: bool                        # False ⇒ hit max_cycles (bug or livelock)
+    #: per-stream dispatch-stall cycles: cycles a stream had arrived and
+    #: still held undispatched instructions but was not granted the
+    #: frontend (single merged stream ⇒ one entry).
+    fe_stall: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(1, dtype=np.int64))
 
     def schedule_tuple(self):
         """Canonical tuple for equivalence testing against the JAX machine."""
@@ -135,11 +155,29 @@ def run(code: np.ndarray,
         params: HtsParams = HtsParams(),
         mem_init: Optional[dict[int, int]] = None,
         effects: Optional[dict[int, int]] = None,
-        max_cycles: int = 5_000_000) -> Result:
-    """Execute ``code`` under scheduler cost model ``costs``; return the schedule."""
+        max_cycles: int = 5_000_000,
+        streams: Optional[np.ndarray] = None) -> Result:
+    """Execute ``code`` under scheduler cost model ``costs``; return the schedule.
+
+    ``streams`` is the per-tenant frontend table — (n_streams, 4) int32 rows
+    of ``frontend.STREAM_FIELDS`` (start, end, arrival, weight).  ``None``
+    (the default) is the historical single merged in-order frontend covering
+    the whole program.
+    """
     tbl = isa.decode_table(code)
     P = len(tbl)
     p = params
+
+    if streams is None:
+        streams = np.asarray([[0, P, 0, 0]], dtype=np.int64)
+    else:
+        streams = np.asarray(streams, dtype=np.int64)
+    NS = len(streams)
+    s_start = [int(x) for x in streams[:, 0]]
+    s_end = [int(x) for x in streams[:, 1]]
+    s_arr = [int(x) for x in streams[:, 2]]
+    s_w = [min(max(int(x), 0), PRIO_CAP) for x in streams[:, 3]]
+    s_active = [s_end[i] > s_start[i] for i in range(NS)]
 
     regs = np.zeros(p.num_regs, dtype=np.int64)
     mem = np.zeros(p.total_mem, dtype=np.int64)
@@ -149,9 +187,11 @@ def run(code: np.ndarray,
     for k, v in (effects or {}).items():
         effect_mem[k] = v
 
-    pc = 0
+    pcs = list(s_start)                # per-stream program counters
+    fe_waits = [0] * NS                # per-stream decode windows
+    fe_ptr = 0                         # frontend round-robin pointer
+    fe_stall = np.zeros(NS, dtype=np.int64)
     cycle = 0
-    fe_wait = 0
     next_uid = 1
     age_ctr = 0
     ticket_ctr = 0
@@ -186,9 +226,9 @@ def run(code: np.ndarray,
     memread_active = False
     memread_rem = 0
 
-    # branch bookkeeping
+    # branch bookkeeping (one shared branch unit; ``stream`` owns it)
     br: Optional[dict] = None         # {kind, pc, off, cond, thr, addr, wait_uid,
-    #                                    speculating, value(optional)}
+    #                                    speculating, stream}
     spec_active = False
     spec_regs_ckpt: Optional[np.ndarray] = None   # GPR checkpoint at spec entry
 
@@ -310,12 +350,12 @@ def run(code: np.ndarray,
                     cdb[:] = [e for e in cdb if not e["is_spec"]]
                     if spec_regs_ckpt is not None:
                         regs[:] = spec_regs_ckpt   # roll back GPR side effects
-                    pc = target
-                    fe_wait = 0
+                    pcs[br["stream"]] = target
+                    fe_waits[br["stream"]] = 0
                 spec_active = False
                 spec_regs_ckpt = None
             else:
-                pc = target
+                pcs[br["stream"]] = target
             br = None
 
         # ---- 5. RS issue --------------------------------------------------
@@ -351,122 +391,163 @@ def run(code: np.ndarray,
             rs.remove(r)
             issued += 1
 
-        # ---- 6. frontend ---------------------------------------------------
-        progressed = True
-        if fe_wait > 0:
-            fe_wait -= 1
-            progressed = False
-        elif br is not None and not br["speculating"]:
-            progressed = False          # stalled on an unresolved branch
-        elif pc >= P:
-            progressed = False          # draining
-        else:
+        # ---- 6. frontend (arbitrated per-tenant streams) -------------------
+        # Eligibility snapshot: arrived, undrained streams whose decode
+        # window is free, not stalled on their own branch, and whose next
+        # instruction can act this cycle.  A structurally-stalled TASK
+        # (full RS / full tracker / pid at its rs_cap) makes the stream
+        # ineligible — the arbiter skips it, so admission caps backpressure
+        # one tenant instead of head-of-line blocking everyone.
+        drained_pre = [pcs[i] >= s_end[i] for i in range(NS)]
+        arrived = [cycle >= s_arr[i] for i in range(NS)]
+        elig = []
+        for i in range(NS):
+            ok = (s_active[i] and arrived[i] and not drained_pre[i]
+                  and fe_waits[i] == 0)
+            if ok and br is not None:
+                # one shared branch unit / speculation domain: while a
+                # speculation is open only the speculating stream runs;
+                # a non-speculative branch stalls only its own stream
+                ok = ((i == br["stream"]) if br["speculating"]
+                      else (i != br["stream"]))
+            if ok:
+                op_i = int(tbl[pcs[i]][0])
+                if op_i == isa.OP_TASK:
+                    pid_i = int(tbl[pcs[i]][7])
+                    if costs.in_order and not machine_empty():
+                        ok = False
+                    elif (len(rs) >= p.rs_entries
+                          or len(tracker) >= p.tracker_entries
+                          or sum(1 for r in rs if r.pid == pid_i)
+                          >= _rc[pid_i]):
+                        ok = False   # structural stall (incl. RS admission
+                        #              cap: this pid is at its RS quota)
+                    elif spec_active:
+                        if not tm_free:
+                            # drainable only if a committed victim exists
+                            ok = any(t["committed"] for t in tlb)
+                        elif len(tlb) >= p.tlb_entries:
+                            ok = False
+                elif op_i == isa.OP_IF:
+                    if br is not None:
+                        # depth-1 speculation: the one branch unit is busy
+                        ok = False
+                    elif ((int(tbl[pcs[i]][8]) & 0x3) != isa.BR_RR
+                          and costs.in_order and not machine_empty()):
+                        ok = False
+            elig.append(ok)
+
+        granted = None
+        if any(elig):
+            # round-robin over eligible streams; fe_mode="weighted" ranks
+            # a stream's pid priority weight first (policy.fe_mode is
+            # lowered into the table's weight column by the caller)
+            granted = min((i for i in range(NS) if elig[i]),
+                          key=lambda i: ((PRIO_CAP - s_w[i]) * NS
+                                         + (i - fe_ptr) % NS))
+            fe_ptr = (granted + 1) % NS
+        for i in range(NS):
+            # dispatch-stall accounting (per-stream head-of-line metric)
+            if (s_active[i] and arrived[i] and not drained_pre[i]
+                    and i != granted):
+                fe_stall[i] += 1
+            if fe_waits[i] > 0:        # decode windows tick every cycle
+                fe_waits[i] -= 1
+
+        progressed = granted is not None
+        if granted is not None:
+            g = granted
+            pc = pcs[g]
             op, acc, a, asz, b, bsz, tid, pid_, ctl, meta = (int(x) for x in tbl[pc])
             if op == isa.OP_TASK:
-                if costs.in_order and not machine_empty():
-                    progressed = False
-                elif (len(rs) >= p.rs_entries
-                      or len(tracker) >= p.tracker_entries
-                      or sum(1 for r in rs if r.pid == pid_) >= _rc[pid_]):
-                    progressed = False   # structural stall (incl. RS admission
-                    #                      cap: this pid is at its RS quota)
-                else:
-                    in_s = int(regs[a]) if ctl & isa.CTL_IN_INDIRECT else a
-                    out_s = int(regs[b]) if ctl & isa.CTL_OUT_INDIRECT else b
-                    in_e, out_e = in_s + asz, out_s + bsz
-                    phys_in = remap(in_s)
-                    dep = tracker_lookup(phys_in, phys_in + (in_e - in_s))
-                    if spec_active:
-                        if not tm_free:
-                            # TLB/TM full: drain the oldest committed entry.
-                            committed = [t for t in tlb if t["committed"]]
-                            if committed:
-                                victim = min(committed, key=lambda t: t["seq"])
-                                base = (p.tm_base
-                                        + victim["tm_s"] * p.tm_slot_words)
-                                for j in range(victim["oe"] - victim["os"]):
-                                    mem[victim["os"] + j] = mem[base + j]
-                                tm_free.append(victim["tm_s"])
-                                tlb.remove(victim)
-                                fe_wait = p.tlb_drain_cycles
-                            progressed = False
-                        elif len(tlb) >= p.tlb_entries:
-                            progressed = False
-                        else:
-                            slot_id = min(tm_free)   # lowest-index slot (matches machine)
-                            tm_free.remove(slot_id)
-                            tlb.append({"os": out_s, "oe": out_e, "tm_s": slot_id,
-                                        "committed": False, "seq": tlb_seq})
-                            tlb_seq += 1
-                            phys_out = p.tm_base + slot_id * p.tm_slot_words
-                            self_spec = True
-                            _dispatch_task(rs, tracker, by_uid, tasks, acc, dep,
-                                           phys_out, phys_out + (out_e - out_s),
-                                           out_s, next_uid, age_ctr, cycle,
-                                           self_spec, pid_)
-                            next_uid += 1
-                            age_ctr += 1
-                            fe_wait = costs.dispatch_serial_cost - 1
-                            pc += 1
+                in_s = int(regs[a]) if ctl & isa.CTL_IN_INDIRECT else a
+                out_s = int(regs[b]) if ctl & isa.CTL_OUT_INDIRECT else b
+                in_e, out_e = in_s + asz, out_s + bsz
+                phys_in = remap(in_s)
+                dep = tracker_lookup(phys_in, phys_in + (in_e - in_s))
+                if spec_active:
+                    if not tm_free:
+                        # TLB/TM full: drain the oldest committed entry
+                        # (eligibility guaranteed one exists).  Structural
+                        # work, not a dispatch — the cycle still stalls.
+                        committed = [t for t in tlb if t["committed"]]
+                        victim = min(committed, key=lambda t: t["seq"])
+                        base = (p.tm_base
+                                + victim["tm_s"] * p.tm_slot_words)
+                        for j in range(victim["oe"] - victim["os"]):
+                            mem[victim["os"] + j] = mem[base + j]
+                        tm_free.append(victim["tm_s"])
+                        tlb.remove(victim)
+                        fe_waits[g] = p.tlb_drain_cycles
+                        progressed = False
                     else:
+                        slot_id = min(tm_free)   # lowest-index slot (matches machine)
+                        tm_free.remove(slot_id)
+                        tlb.append({"os": out_s, "oe": out_e, "tm_s": slot_id,
+                                    "committed": False, "seq": tlb_seq})
+                        tlb_seq += 1
+                        phys_out = p.tm_base + slot_id * p.tm_slot_words
+                        self_spec = True
                         _dispatch_task(rs, tracker, by_uid, tasks, acc, dep,
-                                       out_s, out_e, out_s, next_uid, age_ctr,
-                                       cycle, False, pid_)
+                                       phys_out, phys_out + (out_e - out_s),
+                                       out_s, next_uid, age_ctr, cycle,
+                                       self_spec, pid_)
                         next_uid += 1
                         age_ctr += 1
-                        fe_wait = costs.dispatch_serial_cost - 1
-                        pc += 1
+                        fe_waits[g] = costs.dispatch_serial_cost - 1
+                        pcs[g] = pc + 1
+                else:
+                    _dispatch_task(rs, tracker, by_uid, tasks, acc, dep,
+                                   out_s, out_e, out_s, next_uid, age_ctr,
+                                   cycle, False, pid_)
+                    next_uid += 1
+                    age_ctr += 1
+                    fe_waits[g] = costs.dispatch_serial_cost - 1
+                    pcs[g] = pc + 1
             elif op == isa.OP_ADD:
                 regs[b] = regs[a] + regs[asz]
-                pc += 1
+                pcs[g] = pc + 1
             elif op == isa.OP_MUL:
                 regs[b] = regs[a] * regs[asz]
-                pc += 1
+                pcs[g] = pc + 1
             elif op == isa.OP_MOV:
                 regs[b] = a if ctl & isa.CTL_IMM else regs[a]
-                pc += 1
+                pcs[g] = pc + 1
             elif op == isa.OP_JUMP:
-                pc = a
+                pcs[g] = a                # absolute (stream-relocated at build)
             elif op == isa.OP_LBEG:
                 regs[asz] = int(regs[a]) if ctl & 1 else a
-                pc += 1
+                pcs[g] = pc + 1
             elif op == isa.OP_LEND:
                 regs[asz] -= 1
-                pc = pc - b if regs[asz] > 0 else pc + 1
+                pcs[g] = pc - b if regs[asz] > 0 else pc + 1
             elif op == isa.OP_IF:
                 kind = ctl & 0x3
                 cond = (ctl >> 2) & 0x3
                 thr = int(regs[asz])
-                if br is not None:
-                    # Depth-1 speculation: a second unresolved branch stalls the
-                    # frontend until the outstanding one resolves.
-                    progressed = False
-                elif kind == isa.BR_RR:
+                if kind == isa.BR_RR:
                     taken = eval_cond(cond, int(regs[a]), thr)
-                    pc = pc + b if taken else pc + 1
-                    fe_wait = 1      # single-cycle bubble (paper §IV-C3)
+                    pcs[g] = pc + b if taken else pc + 1
+                    fe_waits[g] = 1  # single-cycle bubble (paper §IV-C3)
                 else:
-                    if costs.in_order and not machine_empty():
-                        progressed = False
-                    else:
-                        phys = remap(a)
-                        wait_uid = tracker_lookup(phys, phys + 1)
-                        eff_kind = kind
-                        if kind == isa.BR_BR and wait_uid == 0:
-                            eff_kind = isa.BR_MR   # producer already done
-                        speculate = costs.speculation and not spec_active
-                        br = {"kind": eff_kind, "pc": pc, "off": b, "cond": cond,
-                              "thr": thr, "addr": a, "wait_uid": wait_uid,
-                              "speculating": speculate}
-                        if eff_kind == isa.BR_MR:
-                            memread_active = True
-                            memread_rem = p.mem_read_cycles
-                        if speculate:
-                            spec_active = True
-                            spec_regs_ckpt = regs.copy()
-                            pc += 1        # predicted not-taken
+                    phys = remap(a)
+                    wait_uid = tracker_lookup(phys, phys + 1)
+                    eff_kind = kind
+                    if kind == isa.BR_BR and wait_uid == 0:
+                        eff_kind = isa.BR_MR   # producer already done
+                    speculate = costs.speculation and not spec_active
+                    br = {"kind": eff_kind, "pc": pc, "off": b, "cond": cond,
+                          "thr": thr, "addr": a, "wait_uid": wait_uid,
+                          "speculating": speculate, "stream": g}
+                    if eff_kind == isa.BR_MR:
+                        memread_active = True
+                        memread_rem = p.mem_read_cycles
+                    if speculate:
+                        spec_active = True
+                        spec_regs_ckpt = regs.copy()
+                        pcs[g] = pc + 1    # predicted not-taken
             else:   # OP_NOP
-                pc += 1
+                pcs[g] = pc + 1
 
         if not progressed:
             stall_cycles += 1
@@ -474,16 +555,18 @@ def run(code: np.ndarray,
         cycle += 1
 
         # ---- 7. halt check ----------------------------------------------
-        if (pc >= P and not rs and not any(fu_busy) and not cdb
-                and br is None and not memread_active and fe_wait == 0):
+        if (all(pcs[i] >= s_end[i] for i in range(NS))
+                and not rs and not any(fu_busy) and not cdb
+                and br is None and not memread_active
+                and all(w == 0 for w in fe_waits)):
             return Result(cycles=cycle, tasks=tasks, mem=mem, regs=regs,
                           fu_busy_cycles=fu_busy_cycles,
                           spec_aborted=spec_aborted, stall_cycles=stall_cycles,
-                          halted=True)
+                          halted=True, fe_stall=fe_stall)
 
     return Result(cycles=cycle, tasks=tasks, mem=mem, regs=regs,
                   fu_busy_cycles=fu_busy_cycles, spec_aborted=spec_aborted,
-                  stall_cycles=stall_cycles, halted=False)
+                  stall_cycles=stall_cycles, halted=False, fe_stall=fe_stall)
 
 
 def _dispatch_task(rs, tracker, by_uid, tasks, acc, dep, out_s, out_e, src_s,

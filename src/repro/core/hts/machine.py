@@ -65,7 +65,8 @@ class MachineSpec:
 def make_machine(spec: MachineSpec, max_prog: int = 256,
                  population: bool = False):
     """Build the machine under ``spec``; returns
-    ``run(ftab, p_len, n_fu, mem_init, effects, prio, quota, rs_cap)``.
+    ``run(ftab, p_len, n_fu, mem_init, effects, prio, quota, rs_cap,
+    streams)``.
 
     With ``population=True`` the returned runner expects every argument
     with a leading *scenario* axis and simulates the whole batch in one
@@ -87,6 +88,16 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
     (default uncapped), ``rs_cap`` per-pid RS-entry admission caps (default
     uncapped — a pid at its cap takes a structural dispatch stall exactly
     like a full RS).
+    ``streams``: (n_streams, 4) int32 per-tenant frontend table —
+    ``frontend.STREAM_FIELDS`` rows (start, end, arrival, weight); one
+    per-stream program counter + decode window each, a frontend arbiter
+    (round-robin, weight-class first) granting one eligible stream per
+    cycle (see ``frontend.py`` and the golden docstring's phase 6).
+    ``None`` = the historical single merged in-order frontend covering
+    ``[0, p_len)`` — bit-identical to the pre-frontend machine.  The
+    stream count is a *shape* (one compilation per stream count); the
+    table's contents — boundaries, arrivals, weights — are traced runtime
+    data, so arrival/weight sweeps never recompile.
     Returns a dict of schedule/trace arrays (see ``out`` at the bottom).
 
     Every argument is a runtime input, so ``vmap`` can batch any of three
@@ -144,15 +155,20 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
             hit = (enable[:, None] & (uid[:, None] == u_iota[None, :])).any(0)
         return jnp.where(hit, value, arr)
 
-    def init_state(mem_init):
+    def init_state(mem_init, streams):
         # NB the read-only ``effects`` image is NOT part of the state: the
         # while-loop carry is select-masked per lane under batching, so
         # every loop-invariant array kept out of it is bandwidth saved on
         # every step of every scenario.
         z = functools.partial(jnp.zeros, dtype=I32)
         zb = functools.partial(jnp.zeros, dtype=jnp.bool_)
+        NS = streams.shape[0]
         return dict(
-            pc=I32(0), cycle=I32(0), dt=I32(1), fe_wait=I32(0),
+            # per-stream frontends: a PC + decode window per tenant stream,
+            # the arbiter's round-robin pointer, and per-stream
+            # dispatch-stall counters (see frontend phase)
+            pc=jnp.asarray(streams[:, 0], I32), cycle=I32(0), dt=I32(1),
+            fe_wait=z(NS), fe_ptr=I32(0), fe_stall=z(NS),
             next_uid=I32(1), age=I32(0), ticket=I32(0),
             regs=z(p.num_regs), mem=jnp.asarray(mem_init, I32),
             rs_valid=zb(S), rs_uid=z(S), rs_func=z(S), rs_dep=z(S),
@@ -169,6 +185,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
             br_active=jnp.bool_(False), br_kind=I32(0), br_pc=I32(0),
             br_off=I32(0), br_cond=I32(0), br_thr=I32(0), br_addr=I32(0),
             br_wait=I32(0), br_speculating=jnp.bool_(False),
+            br_stream=I32(0),
             spec_active=jnp.bool_(False), spec_ckpt=z(p.num_regs),
             mr_active=jnp.bool_(False), mr_rem=I32(0),
             halted=jnp.bool_(False), overflow=jnp.bool_(False),
@@ -351,8 +368,11 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         st["tlb_valid"] = st["tlb_valid"] & ~(squash & ~st["tlb_com"])
         st["cdb_valid"] = st["cdb_valid"] & ~(squash & st["cdb_spec"])
         st["regs"] = jnp.where(squash, st["spec_ckpt"], st["regs"])
-        st["pc"] = jnp.where(squash | plain, target, st["pc"])
-        st["fe_wait"] = jnp.where(squash, 0, st["fe_wait"])
+        # the redirect (and the squash's decode-window reset) lands on the
+        # branch-owning stream only
+        mine = jnp.arange(st["pc"].shape[0], dtype=I32) == st["br_stream"]
+        st["pc"] = jnp.where((squash | plain) & mine, target, st["pc"])
+        st["fe_wait"] = jnp.where(squash & mine, 0, st["fe_wait"])
 
         st["spec_active"] = st["spec_active"] & ~(commit | squash)
         st["br_active"] = st["br_active"] & ~fire
@@ -432,22 +452,102 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         return st
 
     # ------------------------------------------------------------------
-    # phase 6: frontend — one instruction
+    # phase 6: frontend — N per-tenant streams, one arbitrated dispatch.
+    # Eligibility is computed per stream (arrived, undrained, decode
+    # window free, not stalled on its own branch, next instruction able
+    # to act), then one stream is granted by the arbiter key: frontend
+    # weight class first, round-robin within a class.  A structurally
+    # stalled TASK (full RS / tracker / pid at its rs_cap) makes its
+    # stream ineligible — the arbiter skips it, which is what turns RS
+    # admission caps into per-stream backpressure instead of the merged
+    # model's head-of-line stall.  A single stream covering [0, p_len)
+    # reduces to the historical merged frontend bit-for-bit.
     # ------------------------------------------------------------------
-    def frontend(st, F, p_len, rs_cap, alive):
-        blocked_wait = st["fe_wait"] > 0
+    def frontend(st, F, p_len, rs_cap, streams, alive):
+        NS = streams.shape[0]
+        ns_iota = jnp.arange(NS, dtype=I32)
+        s_start, s_end = streams[:, 0], streams[:, 1]
+        s_arr = streams[:, 2]
+        s_w = jnp.clip(streams[:, 3], 0, PRIO_CAP)
+        s_active = s_end > s_start
+        pcs = st["pc"]
+        drained_pre = pcs >= s_end
+        arrived = st["cycle"] >= s_arr
+        fe_free = st["fe_wait"] == 0
+
+        # one shared branch unit / speculation domain: while a speculation
+        # is open only the speculating stream runs; a non-speculative
+        # branch stalls only its own stream
+        br_mine = ns_iota == st["br_stream"]
+        br_ok = jnp.where(st["br_active"],
+                          jnp.where(st["br_speculating"], br_mine, ~br_mine),
+                          True)
+        base_elig = s_active & arrived & ~drained_pre & fe_free & br_ok & alive
+
+        pccs = jnp.clip(pcs, 0, max(P - 1, 0))
+        ops_s = F["op"][pccs]
+        pids_s = F["pid"][pccs]
+        kinds_s = F["ctl"][pccs] & 0x3
+
+        # TASK-instruction gates (structural stalls + speculative TLB/TM)
+        rs_full = st["rs_valid"].all()
+        trk_full = st["trk_valid"].all()
+        rs_of_pid = (st["rs_valid"][None, :]
+                     & (st["rs_pid"][None, :] == pids_s[:, None])
+                     ).sum(axis=1).astype(I32)
+        pid_capped_s = rs_of_pid >= rs_cap[pids_s]
+        empty_req = jnp.bool_(c.in_order) & ~machine_empty(st)
+        spec = st["spec_active"]
+        slot_used = jax.vmap(
+            lambda s: (st["tlb_valid"] & (st["tlb_slot"] == s)).any())(
+                jnp.arange(p.tm_slots))
+        tm_slot = jnp.argmin(slot_used)
+        tm_avail = ~slot_used.all()
+        tlb_full = st["tlb_valid"].all()
+        committed_seq = jnp.where(st["tlb_valid"] & st["tlb_com"],
+                                  st["tlb_seq"], BIG)
+        victim = jnp.argmin(committed_seq)
+        has_victim = (committed_seq[victim] < BIG)
+        # under speculation a TASK can act iff it can take a TLB/TM slot,
+        # or a committed victim can be drained to free one
+        spec_gate = jnp.where(tm_avail, ~tlb_full, has_victim)
+        task_ok = (~rs_full & ~trk_full & ~pid_capped_s & ~empty_req
+                   & (~spec | spec_gate))
+        # IF: the one branch unit must be free; MR/BR additionally respect
+        # the in-order cost model's empty-machine requirement
+        if_ok = ~st["br_active"] & ((kinds_s == isa.BR_RR) | ~empty_req)
+        elig = base_elig & jnp.where(ops_s == isa.OP_TASK, task_ok,
+                                     jnp.where(ops_s == isa.OP_IF, if_ok,
+                                               True))
+
+        # the arbiter: weight class first, round-robin within a class
+        key = jnp.where(elig, (PRIO_CAP - s_w) * NS
+                        + ((ns_iota - st["fe_ptr"]) % NS), BIG)
+        gidx = jnp.argmin(key).astype(I32)
+        has = elig.any()
+        gmask = has & (ns_iota == gidx)
+        st["fe_ptr"] = jnp.where(has, (gidx + 1) % NS, st["fe_ptr"])
+
+        # decode windows tick every cycle on every stream
         st["fe_wait"] = jnp.where(alive,
                                   jnp.maximum(st["fe_wait"] - st["dt"], 0),
                                   st["fe_wait"])
-        blocked_br = st["br_active"] & ~st["br_speculating"]
-        drained = st["pc"] >= p_len
-        active = ~blocked_wait & ~blocked_br & ~drained & alive
 
-        pcc = jnp.clip(st["pc"], 0, max(P - 1, 0))
-        op = F["op"][pcc]
+        # dispatch-stall accounting for this cycle (the event-skipped
+        # window behind it is charged at the top of ``step`` — from
+        # pre-phase state, before a branch squash can redirect a pc)
+        stalled_now = s_active & arrived & ~drained_pre & ~gmask
+        st["fe_stall"] = st["fe_stall"] + jnp.where(
+            alive, stalled_now.astype(I32), 0)
+
+        # scalar fetch of the granted stream's instruction
+        pcc = pccs[gidx]
+        pc_g = pcs[gidx]
+        op = ops_s[gidx]
         a, asz, b, bsz = F["a"][pcc], F["asz"][pcc], F["b"][pcc], F["bsz"][pcc]
         ctl = F["ctl"][pcc]
         acc = F["acc"][pcc]
+        active = has
 
         progressed = jnp.bool_(False)
 
@@ -476,17 +576,20 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
                          lend_val, regs)
         st["regs"] = regs
 
-        pc_next = st["pc"]
+        pc_next = pc_g
         pc_next = jnp.where(is_add | is_mul | is_mov | is_lbeg | is_nop,
-                            st["pc"] + 1, pc_next)
+                            pc_g + 1, pc_next)
         pc_next = jnp.where(is_jmp, a, pc_next)
         pc_next = jnp.where(is_lend,
-                            jnp.where(lend_val > 0, st["pc"] - b, st["pc"] + 1),
+                            jnp.where(lend_val > 0, pc_g - b, pc_g + 1),
                             pc_next)
         progressed = progressed | is_add | is_mul | is_mov | is_jmp \
             | is_lbeg | is_lend | is_nop
 
         # ---- task dispatch ---------------------------------------------
+        # eligibility already cleared the structural gates (full RS /
+        # tracker / rs_cap / in-order) and the speculative TLB/TM gate for
+        # the granted stream — a granted TASK either dispatches or drains
         is_task = active & (op == isa.OP_TASK)
         in_s = jnp.where(ctl & isa.CTL_IN_INDIRECT, regs[a], a)
         out_s = jnp.where(ctl & isa.CTL_OUT_INDIRECT, regs[b], b)
@@ -494,32 +597,8 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         phys_in = remap(st, in_s)
         dep = tracker_lookup(st, phys_in, phys_in + (in_e - in_s))
 
-        rs_full = st["rs_valid"].all()
-        trk_full = st["trk_valid"].all()
-        # RS admission: this pid's RS occupancy is at its per-pid cap — a
-        # structural stall like rs_full, but chargeable to one tenant
-        pid_here = F["pid"][pcc]
-        rs_of_pid = (st["rs_valid"]
-                     & (st["rs_pid"] == pid_here)).sum(dtype=I32)
-        pid_capped = rs_of_pid >= rs_cap[pid_here]
-        empty_req = (jnp.bool_(c.in_order) & ~machine_empty(st))
-        stall_struct = rs_full | trk_full | pid_capped | empty_req
-
-        # speculative output remap through TLB/TM
-        slot_used = jax.vmap(
-            lambda s: (st["tlb_valid"] & (st["tlb_slot"] == s)).any())(
-                jnp.arange(p.tm_slots))
-        tm_slot = jnp.argmin(slot_used)
-        tm_avail = ~slot_used.all()
-        tlb_full = st["tlb_valid"].all()
-        committed_seq = jnp.where(st["tlb_valid"] & st["tlb_com"],
-                                  st["tlb_seq"], BIG)
-        victim = jnp.argmin(committed_seq)
-        has_victim = (committed_seq[victim] < BIG)
-
-        spec = st["spec_active"]
         # drain path: TM full and a committed victim exists
-        do_drain = is_task & ~stall_struct & spec & ~tm_avail & has_victim
+        do_drain = is_task & spec & ~tm_avail
         vic_base = p.tm_base + st["tlb_slot"][victim] * p.tm_slot_words
         st["mem"] = copy_window(st["mem"], st["mem"], st["tlb_os"][victim],
                                 vic_base,
@@ -527,10 +606,10 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
                                 do_drain)
         st["tlb_valid"] = st["tlb_valid"] & ~(do_drain
                                               & (l_iota == victim))
-        st["fe_wait"] = jnp.where(do_drain, p.tlb_drain_cycles, st["fe_wait"])
+        st["fe_wait"] = jnp.where(gmask & do_drain, p.tlb_drain_cycles,
+                                  st["fe_wait"])
 
-        spec_ok = spec & tm_avail & ~tlb_full
-        dispatch = is_task & ~stall_struct & (~spec | spec_ok)
+        dispatch = is_task & ~do_drain
         phys_out = jnp.where(spec, p.tm_base + tm_slot * p.tm_slot_words, out_s)
         phys_oe = phys_out + (out_e - out_s)
 
@@ -581,9 +660,9 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
                                    dispatch)
         st["next_uid"] = st["next_uid"] + jnp.where(dispatch, 1, 0)
         st["age"] = st["age"] + jnp.where(dispatch, 1, 0)
-        st["fe_wait"] = jnp.where(dispatch, c.dispatch_serial_cost - 1,
-                                  st["fe_wait"])
-        pc_next = jnp.where(dispatch, st["pc"] + 1, pc_next)
+        st["fe_wait"] = jnp.where(gmask & dispatch,
+                                  c.dispatch_serial_cost - 1, st["fe_wait"])
+        pc_next = jnp.where(dispatch, pc_g + 1, pc_next)
         progressed = progressed | dispatch
 
         # ---- if / branches ----------------------------------------------
@@ -594,21 +673,21 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         # RR: resolve inline with a 1-cycle bubble
         rr = is_if & (kind == isa.BR_RR)
         rr_taken = eval_cond(cond, regs[a], thr)
-        pc_next = jnp.where(rr, jnp.where(rr_taken, st["pc"] + b, st["pc"] + 1),
+        pc_next = jnp.where(rr, jnp.where(rr_taken, pc_g + b, pc_g + 1),
                             pc_next)
-        st["fe_wait"] = jnp.where(rr, 1, st["fe_wait"])
-        # MR/BR
-        mrbr = is_if & (kind != isa.BR_RR) & ~(jnp.bool_(c.in_order)
-                                               & ~machine_empty(st))
+        st["fe_wait"] = jnp.where(gmask & rr, 1, st["fe_wait"])
+        # MR/BR (eligibility already cleared the in-order empty-machine
+        # requirement and the branch unit being free)
+        mrbr = is_if & (kind != isa.BR_RR)
         phys_a = remap(st, a)
         wait_uid = tracker_lookup(st, phys_a, phys_a + 1)
         eff_kind = jnp.where((kind == isa.BR_BR) & (wait_uid == 0),
                              I32(isa.BR_MR), kind)
         speculate = jnp.bool_(c.speculation) & ~st["spec_active"]
         st["br_active"] = st["br_active"] | mrbr
-        for k, v in (("br_kind", eff_kind), ("br_pc", st["pc"]), ("br_off", b),
+        for k, v in (("br_kind", eff_kind), ("br_pc", pc_g), ("br_off", b),
                      ("br_cond", cond), ("br_thr", thr), ("br_addr", a),
-                     ("br_wait", wait_uid)):
+                     ("br_wait", wait_uid), ("br_stream", gidx)):
             st[k] = jnp.where(mrbr, v, st[k])
         st["br_speculating"] = jnp.where(mrbr, speculate, st["br_speculating"])
         start_mr = mrbr & (eff_kind == isa.BR_MR)
@@ -617,10 +696,10 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         enter_spec = mrbr & speculate
         st["spec_active"] = st["spec_active"] | enter_spec
         st["spec_ckpt"] = jnp.where(enter_spec, regs, st["spec_ckpt"])
-        pc_next = jnp.where(enter_spec, st["pc"] + 1, pc_next)
+        pc_next = jnp.where(enter_spec, pc_g + 1, pc_next)
         progressed = progressed | rr | mrbr
 
-        st["pc"] = pc_next
+        st["pc"] = jnp.where(gmask, pc_next, pcs)
         st["stall_cycles"] = st["stall_cycles"] + jnp.where(
             progressed | ~alive, 0, 1)
         return st
@@ -628,7 +707,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
     # ------------------------------------------------------------------
     # event-skip: time to the next scheduler event
     # ------------------------------------------------------------------
-    def next_dt(st, exists, F, p_len, rs_cap):
+    def next_dt(st, exists, F, p_len, rs_cap, streams):
         if not spec.event_skip:
             return I32(1)
         busy = st["fu_busy"] & exists
@@ -638,26 +717,42 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         cdb_dt = jnp.where(st["cdb_valid"],
                            jnp.maximum(st["cdb_ready"] - st["cycle"], 1), BIG)
         dt = jnp.minimum(dt, jnp.min(cdb_dt))
-        dt = jnp.minimum(dt, jnp.where(st["fe_wait"] > 0, st["fe_wait"], BIG))
-        # frontend can act next cycle → no skipping
-        pcc = jnp.clip(st["pc"], 0, max(P - 1, 0))
-        at_op = F["op"][pcc]
+        dt = jnp.minimum(dt, jnp.min(jnp.where(st["fe_wait"] > 0,
+                                               st["fe_wait"], BIG)))
+        # any stream's frontend can act next cycle → no skipping
+        NS = streams.shape[0]
+        ns_iota = jnp.arange(NS, dtype=I32)
+        s_end, s_arr = streams[:, 1], streams[:, 2]
+        s_active = s_end > streams[:, 0]
+        drained = st["pc"] >= s_end
+        pccs = jnp.clip(st["pc"], 0, max(P - 1, 0))
+        at_op = F["op"][pccs]
         in_order_block = (jnp.bool_(c.in_order) & ~machine_empty(st)
                           & ((at_op == isa.OP_TASK) | (at_op == isa.OP_IF)))
         # structural stall: a TASK blocked on a full RS / Memory Tracker /
         # its pid's RS admission cap can only unblock via an issue (covered
         # below) or a CDB grant (in the min) — skippable
-        pid_here = F["pid"][pcc]
-        pid_capped = ((st["rs_valid"]
-                       & (st["rs_pid"] == pid_here)).sum(dtype=I32)
-                      >= rs_cap[pid_here])
+        pid_here = F["pid"][pccs]
+        pid_capped = ((st["rs_valid"][None, :]
+                       & (st["rs_pid"][None, :] == pid_here[:, None]))
+                      .sum(axis=1).astype(I32) >= rs_cap[pid_here])
         struct_block = ((at_op == isa.OP_TASK)
                         & (st["rs_valid"].all() | st["trk_valid"].all()
                            | pid_capped))
-        fe_act = ((st["fe_wait"] == 0)
-                  & ~(st["br_active"] & ~st["br_speculating"])
-                  & (st["pc"] < p_len) & ~in_order_block & ~struct_block)
-        dt = jnp.where(fe_act, 1, dt)
+        br_mine = ns_iota == st["br_stream"]
+        br_ok = jnp.where(st["br_active"],
+                          jnp.where(st["br_speculating"], br_mine, ~br_mine),
+                          True)
+        fe_act = ((st["fe_wait"] == 0) & br_ok & s_active & ~drained
+                  & (s_arr <= st["cycle"] + 1)
+                  & ~in_order_block & ~struct_block)
+        dt = jnp.where(fe_act.any(), 1, dt)
+        # never skip across a stream arrival (frontend state changes there,
+        # and the per-stream stall accounting relies on windows lying
+        # entirely on one side of every arrival)
+        arr_dt = jnp.where(s_active & ~drained & (s_arr > st["cycle"]),
+                           s_arr - st["cycle"], BIG)
+        dt = jnp.minimum(dt, jnp.min(arr_dt))
         # a ready RS entry with a free unit issues next cycle
         free = exists & ~st["fu_busy"]
         n_free = jnp.zeros((NF,), I32).at[fu_cls].add(free.astype(I32))
@@ -673,7 +768,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         return (~st["halted"] & ~st["overflow"]
                 & (st["cycle"] < spec.max_cycles))
 
-    def step(st, exists, F, p_len, prio, quota, rs_cap, effects):
+    def step(st, exists, F, p_len, prio, quota, rs_cap, streams, effects):
         # ``alive`` gates every phase: a halted/overflowed lane is a fixed
         # point of the step, so the batched population machine can run one
         # while-loop with a scalar any-lane-alive condition and NO
@@ -681,23 +776,36 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         # machine the while condition implies alive == True, so the gates
         # are identities.
         alive = alive_of(st)
+        # Per-stream dispatch-stall accounting for the event-skipped window
+        # behind this step (``dt - 1`` cycles with no events, hence no
+        # grants).  It must read *pre-phase* state: the window's cycles lie
+        # before this step's branch resolve, which may redirect a stream's
+        # pc (squash) and flip its drained status.  next_dt clamps dt to
+        # arrival boundaries, so a stream was either arrived for the whole
+        # window or for none of it.
+        w_stalled = ((streams[:, 1] > streams[:, 0])
+                     & (st["pc"] < streams[:, 1])
+                     & (streams[:, 2] <= st["cycle"] - st["dt"]))
+        st["fe_stall"] = st["fe_stall"] + jnp.where(
+            alive & w_stalled, st["dt"] - 1, 0)
         st = fu_tick(st, exists, effects, alive)
         st, br_ready = memread_tick(st, alive)
         st, br_ready = cdb_grant(st, br_ready, alive)
         st = branch_resolve(st, br_ready)
         st = rs_issue(st, exists, prio, quota, alive)
-        st = frontend(st, F, p_len, rs_cap, alive)
-        done = ((st["pc"] >= p_len) & ~st["rs_valid"].any() & ~st["fu_busy"].any()
+        st = frontend(st, F, p_len, rs_cap, streams, alive)
+        done = ((st["pc"] >= streams[:, 1]).all() & ~st["rs_valid"].any()
+                & ~st["fu_busy"].any()
                 & ~st["cdb_valid"].any() & ~st["br_active"] & ~st["mr_active"]
-                & (st["fe_wait"] == 0))
-        dt = next_dt(st, exists, F, p_len, rs_cap)
+                & (st["fe_wait"] == 0).all())
+        dt = next_dt(st, exists, F, p_len, rs_cap, streams)
         st["cycle"] = st["cycle"] + jnp.where(alive,
                                               jnp.where(done, 1, dt), 0)
         st["dt"] = jnp.where(alive, dt, st["dt"])
         st["halted"] = st["halted"] | (alive & done)
         return st
 
-    def norm_args(ftab, p_len, n_fu, prio, quota, rs_cap):
+    def norm_args(ftab, p_len, n_fu, prio, quota, rs_cap, streams):
         F = {name: ftab[..., i].astype(I32)
              for i, name in enumerate(isa.FIELDS)}
         p_len = jnp.asarray(p_len, I32)
@@ -708,13 +816,20 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
             quota = jnp.full((NUM_PIDS,), BIG, I32)
         if rs_cap is None:
             rs_cap = jnp.full((NUM_PIDS,), BIG, I32)
-        return F, p_len, exists, prio, quota, rs_cap
+        if streams is None:
+            # the historical single merged frontend: one stream covering
+            # [0, p_len), arrival 0 (population form gets a leading axis)
+            streams = (jnp.zeros(p_len.shape + (1, 4), I32)
+                       .at[..., 0, 1].set(p_len))
+        else:
+            streams = jnp.asarray(streams, I32)
+        return F, p_len, exists, prio, quota, rs_cap, streams
 
     def collect(st):
         return dict(
             cycles=st["cycle"], halted=st["halted"], overflow=st["overflow"],
             n_tasks=st["next_uid"] - 1, spec_aborted=st["spec_aborted"],
-            stall_cycles=st["stall_cycles"],
+            stall_cycles=st["stall_cycles"], fe_stall=st["fe_stall"],
             fu_busy_cycles=st["fu_busy_cycles"],
             mem=st["mem"], regs=st["regs"],
             tr_func=st["tr_func"], tr_dispatch=st["tr_dispatch"],
@@ -724,20 +839,20 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         )
 
     def run(ftab, p_len, n_fu, mem_init, effects, prio=None, quota=None,
-            rs_cap=None):
-        F, p_len, exists, prio, quota, rs_cap = norm_args(
-            ftab, p_len, n_fu, prio, quota, rs_cap)
+            rs_cap=None, streams=None):
+        F, p_len, exists, prio, quota, rs_cap, streams = norm_args(
+            ftab, p_len, n_fu, prio, quota, rs_cap, streams)
         effects = jnp.asarray(effects, I32)
-        st = init_state(mem_init)
+        st = init_state(mem_init, streams)
         st = jax.lax.while_loop(
             lambda s: alive_of(s).any(),
             lambda s: step(s, exists, F, p_len, prio, quota, rs_cap,
-                           effects),
+                           streams, effects),
             st)
         return collect(st)
 
     def run_population(ftab, p_len, n_fu, mem_init, effects,
-                       prio, quota, rs_cap):
+                       prio, quota, rs_cap, streams=None):
         """The scenario-batched machine: every argument carries a leading
         scenario axis, and the whole population runs in ONE while loop
         whose condition is scalar (any lane alive).  Because a dead lane
@@ -745,16 +860,16 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         needed — which is what makes this markedly faster than
         ``vmap(run)`` (the generic batching of a while loop masks the
         whole ~25 KB/lane state every iteration)."""
-        F, p_len, exists, prio, quota, rs_cap = norm_args(
-            ftab, p_len, n_fu, prio, quota, rs_cap)
+        F, p_len, exists, prio, quota, rs_cap, streams = norm_args(
+            ftab, p_len, n_fu, prio, quota, rs_cap, streams)
         effects = jnp.asarray(effects, I32)
-        st = jax.vmap(init_state)(jnp.asarray(mem_init, I32))
+        st = jax.vmap(init_state)(jnp.asarray(mem_init, I32), streams)
 
         vstep = jax.vmap(step)
         st = jax.lax.while_loop(
             lambda s: alive_of(s).any(),
             lambda s: vstep(s, exists, F, p_len, prio, quota, rs_cap,
-                            effects),
+                            streams, effects),
             st)
         return collect(st)
 
@@ -795,12 +910,15 @@ def simulate(code: np.ndarray, costs: SchedulerCosts,
              n_fu=None, mem_init=None, effects=None,
              event_skip: bool = True, max_cycles: int = 5_000_000,
              max_fu_per_class: int = 16, max_prog: int = 256,
-             policy: SchedPolicy | None = None) -> dict[str, Any]:
+             policy: SchedPolicy | None = None,
+             streams=None) -> dict[str, Any]:
     """One-shot convenience wrapper around the cached compiled machine.
 
     ``policy`` (defaulting to ``params.policy``) is lowered to the traced
     ``prio``/``quota`` runtime arrays — the compiled machine is shared
-    across policies, so sweeping weights never recompiles.
+    across policies, so sweeping weights never recompiles.  ``streams``
+    is the optional (n_streams, 4) per-tenant frontend table
+    (``frontend.STREAM_FIELDS``); ``None`` = one merged frontend.
     """
     pol = policy if policy is not None else params.policy
     # the policy reaches the machine as runtime data, never as part of the
@@ -815,7 +933,8 @@ def simulate(code: np.ndarray, costs: SchedulerCosts,
     out = run(jnp.asarray(ftab), p_len, n_fu, jnp.asarray(mem),
               jnp.asarray(eff), jnp.asarray(pol.weight_array(), I32),
               jnp.asarray(pol.quota_array(), I32),
-              jnp.asarray(pol.rs_cap_array(), I32))
+              jnp.asarray(pol.rs_cap_array(), I32),
+              None if streams is None else jnp.asarray(streams, I32))
     return jax.tree.map(np.asarray, out)
 
 

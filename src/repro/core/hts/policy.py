@@ -69,12 +69,25 @@ class SchedPolicy:
     quotas: tuple[tuple[int, int], ...] = ()    # (pid, max in-flight/class)
     rs_caps: tuple[tuple[int, int], ...] = ()   # (pid, max RS entries)
     default_weight: int = 0
+    #: frontend arbitration between per-tenant dispatch streams
+    #: (``core/hts/frontend.py``): ``"rr"`` = round-robin over eligible
+    #: streams (the default — all tenants equal at dispatch), ``"weighted"``
+    #: = a stream's pid priority weight ranks first, round-robin within a
+    #: weight class.  Irrelevant to single-stream (merged) programs.
+    fe_mode: str = "rr"
+
+    @staticmethod
+    def _norm_fe_mode(fe_mode: str) -> str:
+        if fe_mode not in ("rr", "weighted"):
+            raise ValueError(f'fe_mode must be "rr" or "weighted", '
+                             f'got {fe_mode!r}')
+        return fe_mode
 
     @classmethod
     def of(cls, weights: Optional[Mapping[int, int]] = None,
            quotas: Optional[Mapping[int, int]] = None,
            rs_caps: Optional[Mapping[int, int]] = None,
-           default_weight: int = 0) -> "SchedPolicy":
+           default_weight: int = 0, fe_mode: str = "rr") -> "SchedPolicy":
         """Build a policy from ``{pid: weight}`` / ``{pid: quota}`` /
         ``{pid: rs_cap}`` dicts."""
         def norm(m, what, lo, hi):
@@ -94,7 +107,8 @@ class SchedPolicy:
         return cls(weights=norm(weights, "weight", 0, PRIO_CAP),
                    quotas=norm(quotas, "quota", 1, NO_QUOTA),
                    rs_caps=norm(rs_caps, "rs_cap", 1, NO_QUOTA),
-                   default_weight=int(default_weight))
+                   default_weight=int(default_weight),
+                   fe_mode=cls._norm_fe_mode(fe_mode))
 
     # ----------------------------------------------------------- lookups
     def weight_of(self, pid: int) -> int:
@@ -143,6 +157,10 @@ class SchedPolicy:
         if other.default_weight != self.default_weight:
             raise ValueError("cannot merge policies with different "
                              "default weights")
+        if other.fe_mode != self.fe_mode:
+            raise ValueError("cannot merge policies with different "
+                             "frontend modes "
+                             f"({self.fe_mode!r} vs {other.fe_mode!r})")
         out_w, out_q = dict(self.weights), dict(self.quotas)
         out_r = dict(self.rs_caps)
         for src, dst, what in ((other.weights, out_w, "weight"),
@@ -153,7 +171,8 @@ class SchedPolicy:
                     raise ValueError(f"conflicting {what} for pid {pid}: "
                                      f"{dst[pid]} vs {v}")
                 dst[pid] = v
-        return SchedPolicy.of(out_w, out_q, out_r, self.default_weight)
+        return SchedPolicy.of(out_w, out_q, out_r, self.default_weight,
+                              self.fe_mode)
 
     def issue_key(self, pid: int, age: int) -> int:
         """The arbiter's scalar sort key: priority class first (higher
@@ -175,4 +194,6 @@ class SchedPolicy:
         if self.rs_caps:
             parts.append("rs_caps " + ",".join(f"{p}:{q}"
                                                for p, q in self.rs_caps))
+        if self.fe_mode != "rr":
+            parts.append(f"frontends {self.fe_mode}")
         return "; ".join(parts)

@@ -86,6 +86,12 @@ class Scenario:
     tenants: tuple[Bench, ...]          # builder-backed, one per pid
     merged: Bench                       # N-way Program.merge, distinct pids
     policy: Optional[SchedPolicy] = None  # mixed-priority scenarios only
+    #: the same tenants as per-tenant frontend streams (``frontends=True``
+    #: scenarios) — one MultiProgram, same pids, same policy
+    multi: Optional[object] = None
+    #: per-tenant arrival offsets (``arrivals=True``; index-aligned with
+    #: ``pids``); () when arrivals were not drawn
+    arrivals: tuple[int, ...] = ()
 
     @property
     def n_tenants(self) -> int:
@@ -201,11 +207,20 @@ def _generate_tenant(rng: np.random.Generator, pid: int, base: int, span: int,
 PRIORITY_POOL = (0, 0, 1, 2, 4, 8)
 
 
+#: largest drawn per-tenant arrival offset (cycles).  Big enough that an
+#: early tenant can flood the shared window before a late one arrives,
+#: small relative to generated-program makespans (kernels are 53–18673
+#: cycles), so arrival-staggered scenarios still overlap.
+MAX_ARRIVAL = 256
+
+
 def generate_scenario(seed: int, *, n_tenants: Optional[int] = None,
                       kernels: Sequence[str] = DSP_MIX,
                       max_tasks: int = 5,
                       name: Optional[str] = None,
-                      mixed_priority: bool = False) -> Scenario:
+                      mixed_priority: bool = False,
+                      frontends: bool = False,
+                      arrivals: bool = False) -> Scenario:
     """One seeded scenario: ``n_tenants`` (2–8, drawn when omitted) programs
     with distinct pids, disjoint region/register budgets, merged N-way.
 
@@ -217,6 +232,14 @@ def generate_scenario(seed: int, *, n_tenants: Optional[int] = None,
     tenant.  The tenant *programs* are identical to the unprioritised
     scenario of the same seed (the policy draws happen after program
     generation), so fuzz failures stay one integer away from reproduction.
+
+    ``frontends=True`` additionally builds :attr:`Scenario.multi` — the
+    same tenants as per-tenant frontend streams
+    (:func:`frontend.build_frontends`, same pids and policy), the fuzz
+    target for the multi-stream dispatch model.  ``arrivals=True``
+    (implies ``frontends``) draws seeded per-tenant arrival offsets in
+    ``[0, MAX_ARRIVAL]`` into the stream table; the draws happen *after*
+    program and policy generation, so same-seed programs are unchanged.
     """
     rng = np.random.default_rng(seed)
     if n_tenants is None:
@@ -245,9 +268,21 @@ def generate_scenario(seed: int, *, n_tenants: Optional[int] = None,
                                 require_distinct_pids=True,
                                 priorities=priorities, quotas=quotas,
                                 rs_caps=rs_caps)
+    multi = None
+    arrival_offsets: tuple[int, ...] = ()
+    if frontends or arrivals:
+        if arrivals:    # drawn last: same-seed programs/policies unchanged
+            arrival_offsets = tuple(
+                int(rng.integers(0, MAX_ARRIVAL + 1)) for _ in pids)
+        from .frontend import build_frontends
+        multi = build_frontends(
+            [b.program for b in tenants], f"{merged_prog.name}_fe",
+            arrivals=arrival_offsets or None, require_distinct_pids=True,
+            priorities=priorities, quotas=quotas, rs_caps=rs_caps)
     return Scenario(name=merged_prog.name, seed=seed, pids=pids,
                     tenants=tenants, merged=Bench.of(merged_prog),
-                    policy=merged_prog.policy)
+                    policy=merged_prog.policy, multi=multi,
+                    arrivals=arrival_offsets)
 
 
 def generate_scenarios(n: int, *, seed0: int = 0, **kwargs):

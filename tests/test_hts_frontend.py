@@ -1,0 +1,330 @@
+"""Per-tenant frontends (core/hts/frontend.py): stream building + jump
+relocation, arbitration fairness (round-robin and weighted), rs_caps as
+per-stream backpressure (the head-of-line fix the rs_admission study
+motivated), single-stream degradation (bit-identical to the merged
+model), arrival offsets, per-stream frontend metrics, and the
+multi-frontend differential fuzz (golden ≡ JAX machine, event-skip on
+and off, singly and as one batched population)."""
+import numpy as np
+import pytest
+
+from repro.core import hts
+from repro.core.hts import frontend, golden, machine, workloads
+from repro.core.hts.builder import BuilderError, Program
+from repro.core.hts.costs import costs_by_name
+from repro.core.hts.policy import SchedPolicy
+
+#: acceptance floor for the multi-frontend differential fuzz (fast tier).
+FRONTEND_FUZZ_SEEDS = 25
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+def _chain(pid, base, n=4, func="dct"):
+    p = Program(f"t{pid}", region_base=base)
+    frame = p.input(0x10, 4, "frame")
+    with p.process(pid):
+        prev = frame
+        for i in range(n):
+            prev = p.task(func, in_=prev, out=4, in_size=4, tid=i)
+    return p
+
+
+def _flood(pid, base, n=8, func="dct"):
+    p = Program(f"g{pid}", region_base=base)
+    frame = p.input(0x10, 4, "frame")
+    with p.process(pid):
+        for i in range(n):
+            p.task(func, in_=frame, out=4, tid=i & 0xF)
+    return p
+
+
+def _loopy(pid, base, taken):
+    """Loop + mem-branch tenant: exercises lend/jump relocation + spec."""
+    p = Program(f"l{pid}", region_base=base)
+    frame = p.input(0x10, 4, "frame")
+    with p.process(pid):
+        w = p.walker(stride=8, count=2, name=f"w{pid}")
+        with p.loop(2):
+            p.task("vector_add", in_=frame, out=w, out_size=4, tid=1)
+            w.advance()
+        cond = p.region(1, name=f"c{pid}")
+        cond.init(9 if taken else 1)
+        br = p.branch(on=cond, cond=">=", thr=5, kind="mem")
+        with br.not_taken():
+            p.task("vector_dot", in_=frame, out=4, tid=2)
+        with br.taken():
+            p.task("vector_max", in_=frame, out=4, tid=3)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# stream building
+# ---------------------------------------------------------------------------
+def test_build_frontends_boundaries_and_relocation():
+    mp = hts.build_frontends([_loopy(1, 0x100, True), _loopy(2, 0x200, False)])
+    (s1, s2) = mp.streams
+    assert (s1.start, s1.pid) == (0, 1) and s2.pid == 2
+    assert s1.end == s2.start and len(mp.code) == s2.end
+    # the two streams are the same shape; absolute jump targets must be
+    # relocated into stream 2's range
+    from repro.core.hts import isa
+    ops = isa.decode_program(mp.code)
+    jumps = [(i, o.a) for i, o in enumerate(ops) if o.op == isa.OP_JUMP]
+    assert len(jumps) == 2
+    (i1, a1), (i2, a2) = jumps
+    assert s1.start <= a1 <= s1.end and s2.start <= a2 <= s2.end
+    assert a2 - a1 == s2.start - s1.start
+
+
+def test_merge_frontends_keyword_and_validation():
+    ts = [_chain(1, 0x100), _chain(2, 0x200)]
+    mp = Program.merge(ts, require_distinct_pids=True, frontends=True,
+                       arrivals=[0, 9], priorities={1: 4}, fe_mode="weighted")
+    assert isinstance(mp, frontend.MultiProgram)
+    assert mp.streams.arrivals == (0, 9)
+    assert mp.policy.fe_mode == "weighted"
+    # weighted mode lowers pid weights into the stream table
+    assert list(mp.streams.table(mp.policy)[:, 3]) == [4, 0]
+    # rr mode (default) zeroes the weight column even with weights set
+    assert list(mp.streams.table(SchedPolicy.of(weights={1: 4}))[:, 3]) == [0, 0]
+    with pytest.raises(BuilderError):
+        Program.merge(ts, arrivals=[0, 9])          # needs frontends=True
+    with pytest.raises(BuilderError):
+        Program.merge(ts, frontends=True, arrivals=[0])   # length mismatch
+    # isolation checks still run (same region base = overlap)
+    with pytest.raises(BuilderError):
+        Program.merge([_chain(1, 0x100), _chain(2, 0x100)], frontends=True)
+
+
+# ---------------------------------------------------------------------------
+# arbitration fairness
+# ---------------------------------------------------------------------------
+def test_round_robin_alternates_streams():
+    mp = hts.build_frontends([_flood(1, 0x100, 4), _flood(2, 0x200, 4),
+                              _flood(3, 0x300, 4)])
+    r = hts.run(mp, n_fu=1)
+    # with three always-eligible streams, dispatch cycles interleave
+    # 1,2,3,1,2,3,... — every consecutive dispatch is a different stream
+    order = [row.pid for row in sorted(r.schedule, key=lambda t: t.dispatch)]
+    assert order[:9] == [1, 2, 3, 1, 2, 3, 1, 2, 3]
+
+
+def test_weighted_frontend_prefers_high_weight_stream():
+    ts = [_flood(1, 0x100, 6), _flood(2, 0x200, 6)]
+    pol_rr = SchedPolicy.of(weights={2: 8})
+    pol_w = SchedPolicy.of(weights={2: 8}, fe_mode="weighted")
+    mp = hts.build_frontends(ts)
+    rr = hts.run(mp, n_fu=1, policy=pol_rr)
+    w = hts.run(mp, n_fu=1, policy=pol_w)
+    # round-robin alternates regardless of weights...
+    assert [t.pid for t in sorted(rr.schedule,
+                                  key=lambda t: t.dispatch)][:4] == [1, 2, 1, 2]
+    # ...weighted mode dispatches ALL of pid 2 before pid 1 is granted
+    # once (pid 2's stream is always eligible and heavier)
+    worder = [t.pid for t in sorted(w.schedule, key=lambda t: t.dispatch)]
+    assert worder[:7] == [2] * 6 + [1]
+    # weighted frontends cut the heavy tenant's dispatch-stall cycles
+    assert w.dispatch_stall_cycles(2) < rr.dispatch_stall_cycles(2)
+
+
+def test_fe_mode_validation():
+    with pytest.raises(ValueError):
+        SchedPolicy.of(fe_mode="fifo")
+    with pytest.raises(ValueError):
+        SchedPolicy.of(fe_mode="weighted").merge_with(SchedPolicy.of())
+
+
+# ---------------------------------------------------------------------------
+# rs_caps become per-stream backpressure (the head-of-line fix)
+# ---------------------------------------------------------------------------
+from benchmarks.priority import _max_rs_occupancy as _rs_occupancy  # noqa: E402
+# (the shared RS-residency metric — same definition the benchmarks report)
+
+
+def test_rs_cap_backpressure_bounds_flood_and_spares_late_tenant():
+    """The invariant the rs_admission study measured as impossible in the
+    merged model: the capped flood's RS occupancy is bounded by the cap
+    AND the late tenant is unharmed (its makespan does not regress)."""
+    arrive = 24
+    hi = _chain(1, 0x100, 6)
+    floods = [_flood(p, 0x200 + 0x80 * (p - 2), 10) for p in (2, 3)]
+    cap = 3
+
+    def build(rs_caps):
+        return Program.merge([hi] + floods, require_distinct_pids=True,
+                             frontends=True, arrivals=[arrive, 0, 0],
+                             priorities={1: 8}, rs_caps=rs_caps)
+
+    uncapped = hts.run(build(None), n_fu=2)
+    capped = hts.run(build({2: cap, 3: cap}), n_fu=2)
+    # flood occupancy provably bounded
+    assert max(_rs_occupancy(capped, p) for p in (2, 3)) <= cap
+    assert max(_rs_occupancy(uncapped, p) for p in (2, 3)) > cap
+    # the late tenant is NOT harmed by the caps (merged model: 1.5 -> 2.5x)
+    assert capped.app_makespan(1) <= uncapped.app_makespan(1)
+    # and the caps stall only the flood streams, never the hi stream
+    assert capped.dispatch_stall_cycles(1) <= uncapped.dispatch_stall_cycles(1)
+    # aggregate throughput is preserved (work-conserving arbiter)
+    assert capped.cycles <= uncapped.cycles * 1.1
+
+
+# ---------------------------------------------------------------------------
+# single-stream degradation: bit-identical to the merged model
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheduler", ("naive", "hts_spec"))
+def test_single_stream_degrades_to_merged_model(scheduler):
+    """A one-stream MultiProgram and the plain program must produce
+    bit-identical schedules and cycle counts on BOTH backends (and the
+    machine's default no-streams path equals the explicit one-stream
+    table)."""
+    prog = _loopy(1, 0x100, True)
+    mp = hts.build_frontends([prog], "one")
+    for backend in ("golden", "jax"):
+        a = hts.run(prog, scheduler=scheduler, backend=backend, n_fu=2)
+        b = hts.run(mp, scheduler=scheduler, backend=backend, n_fu=2)
+        assert a.cycles == b.cycles
+        assert a.schedule_tuple() == b.schedule_tuple()
+        assert a.stall_cycles == b.stall_cycles
+        assert tuple(a.fe_stall) == tuple(b.fe_stall)
+
+
+def test_merged_multitenant_unchanged_by_frontend_machinery():
+    """The historical merged (round-robin spliced) model is untouched:
+    a generated scenario's merged program still verifies golden == machine
+    and its Result carries the single-stream fe_stall."""
+    sc = workloads.generate_scenario(7, kernels=workloads.CHEAP_MIX)
+    hts.compare(sc.merged, schedulers=("hts_spec",))
+    r = hts.run(sc.merged, n_fu=2)
+    assert r.streams is None and len(r.fe_stall) == 1
+
+
+# ---------------------------------------------------------------------------
+# arrivals
+# ---------------------------------------------------------------------------
+def test_arrival_offset_delays_dispatch():
+    mp = hts.build_frontends([_chain(1, 0x100), _chain(2, 0x200)],
+                             arrivals=[0, 77])
+    r = hts.run(mp, n_fu=2)
+    first = {pid: min(t.dispatch for t in rows)
+             for pid, rows in r.by_pid().items()}
+    assert first[1] == 0
+    assert first[2] == 77          # granted the cycle its CPU arrives
+    assert r.streams.arrival_of(2) == 77
+
+
+def test_generated_arrivals_leave_programs_unchanged():
+    """arrivals=True draws offsets AFTER program generation: same-seed
+    tenant programs and the merged stream are unchanged."""
+    for seed in (3, 19):
+        plain = workloads.generate_scenario(seed)
+        with_fe = workloads.generate_scenario(seed, frontends=True,
+                                              arrivals=True)
+        assert plain.merged.asm == with_fe.merged.asm
+        assert [t.asm for t in plain.tenants] == \
+            [t.asm for t in with_fe.tenants]
+        assert with_fe.multi is not None
+        assert len(with_fe.arrivals) == len(with_fe.pids)
+        assert with_fe.multi.streams.arrivals == with_fe.arrivals
+        # and the draws are seed-deterministic
+        again = workloads.generate_scenario(seed, frontends=True,
+                                            arrivals=True)
+        assert again.arrivals == with_fe.arrivals
+
+
+# ---------------------------------------------------------------------------
+# per-stream frontend metrics
+# ---------------------------------------------------------------------------
+def test_fe_stall_exact_golden_vs_machine_both_modes():
+    mp = hts.build_frontends(
+        [_loopy(1, 0x100, True), _flood(2, 0x200, 6), _chain(3, 0x300)],
+        arrivals=[0, 5, 13])
+    tab = mp.streams.table()
+    p = golden.HtsParams()
+    for sched in ("naive", "hts_spec"):
+        g = golden.run(mp.code, costs_by_name(sched), p, mp.mem_init,
+                       mp.effects, streams=tab)
+        for skip in (True, False):
+            m = machine.simulate(mp.code, costs_by_name(sched), p,
+                                 mem_init=mp.mem_init, effects=mp.effects,
+                                 event_skip=skip, streams=tab)
+            assert list(g.fe_stall) == list(np.asarray(m["fe_stall"])), \
+                (sched, skip)
+            assert g.schedule_tuple() == machine.schedule_tuple(m)
+
+
+def test_frontend_metrics_and_fairness_report():
+    mp = hts.build_frontends([_chain(1, 0x100), _flood(2, 0x200, 8)],
+                             arrivals=[40, 0], priorities={1: 8})
+    shared = hts.run(mp, n_fu=2)
+    # time-to-first-issue is measured from the stream's arrival
+    assert shared.time_to_first_issue(1) == \
+        min(t.issue for t in shared.schedule_for(1)) - 40
+    assert shared.rs_occupancy_at_dispatch(2) > \
+        shared.rs_occupancy_at_dispatch(1)   # flood queues behind itself
+    stalls = shared.dispatch_stall_cycles()
+    assert set(stalls) == {1, 2} and all(v >= 0 for v in stalls.values())
+    solo = {1: hts.run(_chain(1, 0x100), n_fu=2),
+            2: hts.run(_flood(2, 0x200, 8), n_fu=2)}
+    rep = shared.fairness(solo)
+    assert set(rep.frontend) == {1, 2}
+    for pid in (1, 2):
+        m = rep.frontend[pid]
+        assert m["dispatch_stall_cycles"] == shared.dispatch_stall_cycles(pid)
+        assert m["time_to_first_issue"] == shared.time_to_first_issue(pid)
+
+
+# ---------------------------------------------------------------------------
+# packing: multi-frontend populations ride the same buckets
+# ---------------------------------------------------------------------------
+def test_population_packs_mixed_single_and_multi():
+    mp = hts.build_frontends([_chain(1, 0x100), _chain(2, 0x200)],
+                             arrivals=[0, 30])
+    single = _chain(1, 0x100)
+    pop = hts.pack_population([mp, single, mp.with_arrivals([0, 99])])
+    assert pop.streams.shape[1] == 2         # padded to the widest set
+    assert pop.stream_table(1).shape[0] == 1  # the merged scenario
+    res = hts.run_many(pop)
+    assert res.all_halted
+    # per-scenario results slice their own stream sets back out
+    assert res[0].streams is not None and res[1].streams is None
+    assert len(res[0].fe_stall) == 2 and len(res[1].fe_stall) == 1
+    # and per-scenario runs agree with standalone execution
+    for i, prog in enumerate([mp, single]):
+        assert res[i].cycles == hts.run(prog).cycles
+
+
+# ---------------------------------------------------------------------------
+# differential fuzz: the multi-frontend dispatch model, both backends
+# ---------------------------------------------------------------------------
+def _fuzz(seeds, kernels):
+    for seed in seeds:
+        sc = workloads.generate_scenario(
+            seed, kernels=kernels, frontends=True,
+            arrivals=(seed % 2 == 0), mixed_priority=(seed % 3 == 0))
+        hts.compare(sc.multi, schedulers=("hts_spec",))
+
+
+def test_multifrontend_differential_fuzz():
+    """FRONTEND_FUZZ_SEEDS seeded multi-frontend scenarios (staggered
+    arrivals on even seeds, drawn policies on every third) verify
+    golden == machine across event-skip modes."""
+    _fuzz(range(FRONTEND_FUZZ_SEEDS), workloads.CHEAP_MIX)
+
+
+@pytest.mark.slow
+def test_multifrontend_differential_fuzz_full_mix():
+    """Slow tier: the same fuzz over the FULL_MIX kernel pool (adds the
+    long-latency FFT/FIR heavyweights — deeper event-skip windows)."""
+    _fuzz(range(100, 100 + FRONTEND_FUZZ_SEEDS), workloads.FULL_MIX)
+
+
+def test_multifrontend_population_differential():
+    """A whole multi-frontend population through run_many, one batched
+    machine call per mode, checked scenario-by-scenario against golden."""
+    scs = [workloads.generate_scenario(s, kernels=workloads.CHEAP_MIX,
+                                       frontends=True, arrivals=True)
+           for s in range(4)]
+    rep = hts.compare([sc.multi for sc in scs], schedulers=("hts_spec",))
+    assert len(rep) == 4
