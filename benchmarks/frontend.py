@@ -211,7 +211,8 @@ def population_study(n: int = 8, *, seed0: int = 0,
         "cycles": [int(c) for c in rep.cycles[scheduler]],
         "all_verified": True,
         "batched_wall_us_median": statistics.median(walls),
-        "scenarios_per_sec": n / (statistics.median(walls) * 1e-6),
+        "scenarios_per_sec": pr.scenarios_per_second(
+            statistics.median(walls)),
     }
 
 

@@ -162,9 +162,10 @@ def measure_grid(instances, *, n_fu: int = 2, chunk: int = 32,
         "scheduler": scheduler,
         "reps": reps,
         "loop": {"total_us": loop_us,
-                 "scenarios_per_sec": n / (loop_us * 1e-6)},
+                 "scenarios_per_sec": hts.scenarios_per_second(n, loop_us)},
         "batched": {"total_us": batched_us,
-                    "scenarios_per_sec": n / (batched_us * 1e-6)},
+                    "scenarios_per_sec":
+                        hts.scenarios_per_second(n, batched_us)},
         "speedup": loop_us / batched_us,
         "hi_slowdown_spread": _grid_qos_spread(instances, batch_res),
     }
@@ -228,9 +229,10 @@ def measure_generated(pop: workloads.Population, *, n_fu: int = 2,
         "scheduler": scheduler,
         "reps": reps,
         "loop": {"total_us": loop_us,
-                 "scenarios_per_sec": n / (loop_us * 1e-6)},
+                 "scenarios_per_sec": hts.scenarios_per_second(n, loop_us)},
         "batched": {"total_us": batched_us,
-                    "scenarios_per_sec": n / (batched_us * 1e-6)},
+                    "scenarios_per_sec":
+                        hts.scenarios_per_second(n, batched_us)},
         "speedup": loop_us / batched_us,
     }
 

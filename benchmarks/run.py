@@ -11,7 +11,7 @@ import argparse
 import json
 
 from benchmarks import extensions, frontend, multitenant, paper_figs, \
-    population, priority
+    population, priority, serving
 
 SECTIONS = {
     "tableII": paper_figs.table2,
@@ -24,6 +24,7 @@ SECTIONS = {
     "priority": priority.section,
     "population": population.section,
     "frontend": frontend.section,
+    "serving": serving.section,
     "ablation": extensions.design_ablation,
 }
 

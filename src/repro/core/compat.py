@@ -1,0 +1,27 @@
+"""JAX version-compatibility shims shared across the repo.
+
+One place for the "which spelling does this JAX have" dance, so every
+module that wants ``shard_map`` (the pipeline executor in
+``sched/pipeline.py``, the scenario-axis sharder in ``hts/shard.py``)
+resolves it the same way instead of inlining its own fallback.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(body, *, mesh, in_specs, out_specs, check: bool = False):
+    """``shard_map`` across JAX spellings.
+
+    JAX >= 0.6 exposes ``jax.shard_map`` (validity flag ``check_vma``);
+    earlier releases ship ``jax.experimental.shard_map.shard_map`` (flag
+    ``check_rep``).  ``check`` maps onto whichever flag exists — the
+    callers here compute per-shard outputs with no cross-device
+    replication invariant, so it defaults off.
+    """
+    if hasattr(jax, "shard_map"):                   # jax >= 0.6 spelling
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check)

@@ -30,6 +30,15 @@ Public surface (the rest of the repo goes through this):
   counters, arrival offsets and a round-robin/weighted frontend arbiter;
   closes the merged-stream head-of-line bound the ``rs_admission`` study
   measured (``BENCH_frontend.json``).
+* serving + sharding (``serve.py`` / ``shard.py``): :func:`serve` builds
+  a continuously-batched :class:`Server` — ``submit(scenario) ->
+  Future[Result]``, shape-bucket routing, launch-on-full/deadline, a
+  per-bucket compilation cache (:meth:`Server.cache_info` proves a
+  warmed server never recompiles), bounded-queue backpressure and
+  per-bucket/per-tenant service metrics; ``run_many(devices=N)`` and
+  ``ServeSpec(devices=N)`` shard the scenario axis across devices via
+  ``shard_map`` (differentially verified by ``compare_population(
+  devices=N)``).
 
     >>> from repro.core import hts
     >>> p = hts.Program("demo")
@@ -45,7 +54,8 @@ tests and tools.
 from .api import (ALL_SCHEDULERS, CompareReport, FairnessReport,
                   MismatchError, PopulationCompareReport, PopulationResult,
                   Result, SimulationError, SweepResult, TaskRow, compare,
-                  compare_population, run, run_many, sweep)
+                  compare_population, run, run_many, scenarios_per_second,
+                  sweep)
 from .batch import PackedPopulation, pack_population, prog_bucket
 from .builder import (BuilderError, BuiltProgram, Program, Reg, Region,
                       TaskHandle, Walker)
@@ -53,14 +63,18 @@ from .costs import SchedulerCosts, costs_by_name
 from .frontend import MultiProgram, Stream, StreamSet, build_frontends
 from .golden import HtsParams
 from .policy import SchedPolicy
+from .serve import (CacheInfo, ManualClock, QueueFullError, Server,
+                    ServeReport, ServeSpec, SystemClock, serve)
 
 __all__ = [
-    "ALL_SCHEDULERS", "BuilderError", "BuiltProgram", "CompareReport",
-    "FairnessReport", "HtsParams", "MismatchError", "MultiProgram",
-    "PackedPopulation", "PopulationCompareReport", "PopulationResult",
-    "Program", "Reg", "Region", "Result", "SchedPolicy", "SchedulerCosts",
-    "SimulationError", "Stream", "StreamSet", "SweepResult", "TaskHandle",
-    "TaskRow", "Walker", "build_frontends", "compare",
+    "ALL_SCHEDULERS", "BuilderError", "BuiltProgram", "CacheInfo",
+    "CompareReport", "FairnessReport", "HtsParams", "ManualClock",
+    "MismatchError", "MultiProgram", "PackedPopulation",
+    "PopulationCompareReport", "PopulationResult", "Program",
+    "QueueFullError", "Reg", "Region", "Result", "SchedPolicy",
+    "SchedulerCosts", "Server", "ServeReport", "ServeSpec",
+    "SimulationError", "Stream", "StreamSet", "SweepResult", "SystemClock",
+    "TaskHandle", "TaskRow", "Walker", "build_frontends", "compare",
     "compare_population", "costs_by_name", "pack_population", "prog_bucket",
-    "run", "run_many", "sweep",
+    "run", "run_many", "scenarios_per_second", "serve", "sweep",
 ]

@@ -335,6 +335,13 @@ class FairnessReport:
         return "\n".join(lines)
 
 
+def scenarios_per_second(n: int, wall_us: float) -> float:
+    """Throughput of a measured run: ``n`` scenarios over ``wall_us`` host
+    microseconds (0.0 for an unmeasured/zero wall) — the one scenarios/sec
+    formula every benchmark and report shares."""
+    return float(n) / (wall_us * 1e-6) if wall_us else 0.0
+
+
 def _machine_rows(out: dict[str, Any]) -> tuple[TaskRow, ...]:
     return tuple(TaskRow(*row) for row in machine.schedule_tuple(out))
 
@@ -481,9 +488,16 @@ class PopulationResult:
     def all_halted(self) -> bool:
         return bool(np.asarray(self.halted).all())
 
+    def scenarios_per_second(self, wall_us: Optional[float] = None) -> float:
+        """Batched throughput (scenarios per host second).  ``wall_us``
+        overrides this call's own wall — benchmarks pass their measured
+        median so one formula serves every reported number."""
+        return scenarios_per_second(
+            len(self), self.wall_us if wall_us is None else wall_us)
+
     def scenarios_per_sec(self) -> float:
         """Batched throughput of this call (scenarios per host second)."""
-        return len(self) / (self.wall_us * 1e-6) if self.wall_us else 0.0
+        return self.scenarios_per_second()
 
     def table(self) -> str:
         lines = [f"population · {self.scheduler} · {self.backend} · "
@@ -501,7 +515,8 @@ def run_many(programs, *,
              params: HtsParams = HtsParams(), event_skip: bool = True,
              max_cycles: int = 5_000_000, max_prog: Optional[int] = None,
              max_fu_per_class: Optional[int] = None,
-             policy=None, check: bool = True) -> PopulationResult:
+             policy=None, check: bool = True,
+             devices: Optional[int] = None) -> PopulationResult:
     """Simulate a population of programs as **one vmapped machine call**.
 
     ``programs`` is a sequence of anything :func:`run` accepts (or an
@@ -515,6 +530,14 @@ def run_many(programs, *,
     population's, which is what ``benchmarks/population.py`` measures
     against a Python loop of :func:`run`.
 
+    ``devices=N`` shards the scenario axis across N devices
+    (:mod:`~repro.core.hts.shard`): lanes are padded to a multiple of N
+    (pad results dropped), each device runs the population machine's
+    while loop on its own shard, and the results are lane-for-lane
+    identical to the single-device path (``devices=None``, the default,
+    which skips ``shard_map`` entirely; ``devices=1`` exercises the
+    sharded code path on one device).  JAX backend only.
+
     ``backend="golden"`` runs the pure-Python oracle in a loop instead —
     same :class:`PopulationResult` surface, no batching (the differential
     baseline).
@@ -527,6 +550,8 @@ def run_many(programs, *,
                                       policy=policy, max_prog=max_prog))
     cost = _norm_costs(scheduler)
 
+    if devices is not None and backend != "jax":
+        raise ValueError(f'devices= requires backend="jax", got {backend!r}')
     if backend == "golden":
         t0 = time.perf_counter()
         results = tuple(
@@ -557,11 +582,18 @@ def run_many(programs, *,
     spec = machine.MachineSpec(params=pop.params, costs=cost,
                                event_skip=event_skip, max_cycles=max_cycles,
                                max_fu_per_class=max_fu_per_class)
-    runner = _population_runner(spec, pop.max_prog)
+    runner = _runner_for(spec, pop.max_prog, devices)
+    if devices is not None:
+        from . import shard
+        run_pop = shard.pad_lanes(pop, devices)
+    else:
+        run_pop = pop
     t0 = time.perf_counter()
-    out = runner(*(jnp.asarray(a) for a in pop.machine_args()))
+    out = runner(*(jnp.asarray(a) for a in run_pop.machine_args()))
     out = jax.tree.map(np.asarray, out)      # forces device completion
     wall = (time.perf_counter() - t0) * 1e6
+    if len(run_pop) > len(pop):              # drop the shard-padding lanes
+        out = {k: v[:len(pop)] for k, v in out.items()}
 
     halted = out["halted"] & ~out["overflow"]
     result = PopulationResult(
@@ -660,6 +692,19 @@ def _population_runner(spec: machine.MachineSpec, max_prog: int):
     carry select — strictly faster than ``_vmapped`` with SCENARIO_AXIS."""
     import jax
     return jax.jit(machine.make_machine(spec, max_prog, population=True))
+
+
+def _runner_for(spec: machine.MachineSpec, max_prog: int,
+                devices: Optional[int] = None):
+    """The compiled population runner for one ``(spec, bucket, devices)``
+    key — single-device native machine, or the ``shard_map``-sharded one.
+    Both are module-cached, so the returned callable is the *same object*
+    for every batch of the bucket; the serving engine (``serve.py``)
+    leans on that for its recompilation accounting."""
+    if devices is None:
+        return _population_runner(spec, max_prog)
+    from . import shard
+    return shard.sharded_runner(spec, max_prog, devices)
 
 
 def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),
@@ -816,11 +861,17 @@ def compare_population(programs, *,
                        max_cycles: int = 5_000_000,
                        max_prog: Optional[int] = None,
                        max_fu_per_class: Optional[int] = None,
-                       policy=None) -> PopulationCompareReport:
+                       policy=None,
+                       devices: Optional[int] = None) -> PopulationCompareReport:
     """Differential verification of a whole population: one vmapped machine
     batch per (scheduler, event-skip mode), checked scenario-by-scenario
     against a golden loop.  Raises :class:`MismatchError` naming the
     scenario, scheduler and mode on the first divergence.
+
+    ``devices=N`` routes the *machine-side* runs through the sharded
+    ``shard_map`` path (the golden loop stays host-side and unsharded),
+    so device sharding is differentially verified lane-for-lane by the
+    same oracle as everything else.
     """
     pop = (programs if isinstance(programs, PackedPopulation)
            else batch.pack_population(programs, params=params, n_fu=n_fu,
@@ -838,7 +889,7 @@ def compare_population(programs, *,
         for event_skip in (True, False):
             m = run_many(pop, scheduler=cost, event_skip=event_skip,
                          max_cycles=max_cycles,
-                         max_fu_per_class=max_fu_per_class)
+                         max_fu_per_class=max_fu_per_class, devices=devices)
             mode = f"jax event_skip={'on' if event_skip else 'off'}"
             for i in range(len(pop)):
                 if int(m.cycles[i]) != int(gold.cycles[i]):
@@ -931,4 +982,4 @@ __all__ = ["run", "run_many", "sweep", "compare", "compare_population",
            "Result", "PopulationResult", "SweepResult", "TaskRow",
            "FairnessReport", "CompareReport", "PopulationCompareReport",
            "MismatchError", "SimulationError", "SchedPolicy",
-           "PackedPopulation", "ALL_SCHEDULERS"]
+           "PackedPopulation", "ALL_SCHEDULERS", "scenarios_per_second"]

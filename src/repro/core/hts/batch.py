@@ -270,7 +270,8 @@ def pack_population(programs: Sequence,
                     *, params: HtsParams = HtsParams(),
                     n_fu: Union[int, Sequence] = 2,
                     policy=None,
-                    max_prog: Optional[int] = None) -> PackedPopulation:
+                    max_prog: Optional[int] = None,
+                    max_streams: Optional[int] = None) -> PackedPopulation:
     """Pack N programs into one :class:`PackedPopulation`.
 
     ``programs`` — anything :func:`prepare` accepts, one per scenario.
@@ -278,8 +279,14 @@ def pack_population(programs: Sequence,
     scenario.  ``policy`` — shared :class:`SchedPolicy`, one per scenario,
     or ``None`` (each program's attached policy, then ``params.policy``).
     ``max_prog`` — the shared table shape; defaults to the population's
-    :func:`prog_bucket`.  All scenarios share ``params`` capacities (the
-    machine is compiled once per ``(params, costs, shapes)``).
+    :func:`prog_bucket`.  ``max_streams`` — the shared frontend-stream
+    table width; defaults to the population's widest stream set.  The
+    stream count is a compilation *shape* (like ``max_prog``), so callers
+    that must keep one compiled machine across batches — the serving
+    engine's bucket cache — pin it explicitly; extra rows are inactive
+    padding (``end <= start``, never fetched).  All scenarios share
+    ``params`` capacities (the machine is compiled once per
+    ``(params, costs, shapes)``).
     """
     preps = tuple(prepare(p) for p in programs)
     if not preps:
@@ -318,6 +325,11 @@ def pack_population(programs: Sequence,
              else StreamSet.single(int(p_len[i])).table())
             for i, (p, pol) in enumerate(zip(preps, pols))]
     max_ns = max(len(t) for t in tabs)
+    if max_streams is not None:
+        if max_ns > max_streams:
+            raise ValueError(f"population has a {max_ns}-stream scenario > "
+                             f"max_streams {max_streams}")
+        max_ns = int(max_streams)
     streams = np.zeros((n, max_ns, len(STREAM_FIELDS)), np.int32)
     for i, t in enumerate(tabs):
         streams[i, :len(t)] = t

@@ -1,0 +1,407 @@
+"""hts.serve — continuous batching over the population machine.
+
+:func:`api.run_many` answers "simulate this population"; this module
+answers "keep simulating whatever arrives".  A :class:`Server` accepts
+single scenarios (``submit() -> Future[Result]``), routes each into an
+open batch for its *shape bucket*, and launches buckets through the same
+compiled population machine everything else uses — so a serving workload
+gets batched-throughput economics on an open arrival stream instead of a
+pre-packed population.
+
+The pieces, and why each exists:
+
+* **Bucket router** — the compiled machine is shaped by the program-table
+  size and the frontend-stream width, so requests are keyed by
+  ``(prog_bucket(p_len), prog_bucket(n_streams))`` (the same power-of-two
+  ladder as :func:`batch.prog_bucket`).  One open batch per bucket.
+* **Launch-on-full / launch-on-deadline** — a batch launches the moment
+  it reaches ``max_batch`` (inline, inside ``submit``), or when its
+  oldest request has waited ``deadline`` seconds (checked by ``poll()``,
+  which ``submit`` also runs on entry).  The clock is injectable
+  (:class:`ManualClock`) so deadline behaviour is deterministically
+  testable.
+* **Stable launch shapes** — partial batches are padded to ``max_batch``
+  lanes by replicating the batch's first request, and
+  ``pack_population(max_prog=bucket, max_streams=bucket)`` pins the other
+  two shape axes, so *every* launch of a bucket presents the identical
+  signature to the jitted runner: one XLA compile per bucket, ever.
+  :meth:`Server.cache_info` proves it — ``jit_compiles`` reads the
+  runners' own compilation-cache sizes (not a guess), so a warmed server
+  asserts zero recompilation across arbitrarily many batches.
+* **Backpressure** — at most ``max_queue`` requests may be pending across
+  all open batches; ``submit`` raises :class:`QueueFullError` beyond
+  that, after first flushing any deadline-expired batches.
+* **Sharding** — ``ServeSpec(devices=N)`` routes every launch through the
+  ``shard_map`` path (:mod:`shard` via ``run_many(devices=N)``), so a
+  multi-device host drains each batch across its devices.
+* **Service metrics** — every completed request records its queue wait
+  and time-to-result; :meth:`Server.report` aggregates per bucket and per
+  tenant (batch occupancy included), feeding ``benchmarks/serving.py``.
+
+    >>> from repro.core import hts
+    >>> with hts.serve(max_batch=4, deadline=0.01) as srv:
+    ...     futs = [srv.submit(p) for p in programs]
+    ...     srv.drain()
+    ...     cycles = [f.result().cycles for f in futs]
+
+The engine is deliberately single-threaded: launches happen inside
+``submit``/``poll``/``drain`` on the caller's thread, and futures are
+resolved before those calls return.  That keeps the semantics exactly
+reproducible (no scheduler races) while preserving the asynchronous
+*interface* — callers hold ``Future`` handles and may submit from
+producer code that never looks at results.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import Future
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from . import api, batch, isa, machine
+from .costs import SchedulerCosts
+from .golden import HtsParams
+from .policy import SchedPolicy
+
+
+class QueueFullError(RuntimeError):
+    """``submit`` refused: ``max_queue`` requests already pending."""
+
+
+# ---------------------------------------------------------------------------
+# clocks (injectable for deterministic deadline tests)
+# ---------------------------------------------------------------------------
+class SystemClock:
+    """Wall time (``time.monotonic``) — the production clock."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class ManualClock:
+    """A clock that only moves when told to — deadline tests advance it
+    explicitly, so launch-on-deadline is exact instead of sleep-flaky."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += float(dt)
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# spec + reports
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Everything a :class:`Server` is configured by.
+
+    ``n_fu``/``scheduler``/``params``/``policy``/``event_skip``/
+    ``max_cycles`` mean what they mean on :func:`api.run_many` and are
+    shared by every request (they are compilation-relevant, so per-request
+    variation would defeat the bucket cache; per-request *policies* still
+    work — attach them to the program, e.g. ``Program.merge(priorities=
+    ...)``, and leave ``policy=None``).
+
+    ``max_batch`` — lanes per launch (every launch is padded to exactly
+    this, so it is also the bucket's compiled batch shape).
+    ``max_queue`` — pending-request bound across all open batches.
+    ``deadline`` — seconds an open batch may age before ``poll()``
+    launches it partial.  ``devices`` — shard each launch over N devices
+    (``None`` = single-device path).
+    """
+    scheduler: Union[str, SchedulerCosts] = "hts_spec"
+    n_fu: Union[int, Sequence[int]] = 2
+    params: HtsParams = HtsParams()
+    policy: Optional[SchedPolicy] = None
+    event_skip: bool = True
+    max_cycles: int = 5_000_000
+    max_batch: int = 8
+    max_queue: int = 64
+    deadline: float = 0.050
+    devices: Optional[int] = None
+    max_fu_per_class: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheInfo:
+    """Compilation accounting.  ``hits``/``misses`` count bucket-runner
+    lookups at launch time (miss = first launch of a bucket); ``entries``
+    is the number of distinct buckets launched; ``jit_compiles`` is the
+    *runners' own* compilation-cache population — the honest number, read
+    from the jitted callables, not inferred.  A warmed server launches
+    batch after batch with ``jit_compiles`` frozen."""
+    hits: int
+    misses: int
+    entries: int
+    jit_compiles: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketStats:
+    batches: int
+    requests: int
+    pad_lanes: int
+    occupancy: float            # mean real-lanes / max_batch per launch
+    mean_wait: float            # seconds queued before launch
+    mean_ttr: float             # seconds submit -> result
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantStats:
+    requests: int
+    mean_wait: float
+    mean_ttr: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeReport:
+    """Aggregated service metrics for everything the server completed."""
+    requests: int
+    batches: int
+    per_bucket: dict
+    per_tenant: dict
+
+    def table(self) -> str:
+        lines = [f"served {self.requests} requests in {self.batches} "
+                 f"batches",
+                 f"{'bucket':<14} {'batches':>7} {'reqs':>6} {'occ':>6} "
+                 f"{'wait(ms)':>9} {'ttr(ms)':>9}"]
+        for key, b in sorted(self.per_bucket.items()):
+            lines.append(f"{str(key):<14} {b.batches:>7} {b.requests:>6} "
+                         f"{b.occupancy:>6.2f} {b.mean_wait * 1e3:>9.3f} "
+                         f"{b.mean_ttr * 1e3:>9.3f}")
+        if self.per_tenant:
+            lines.append(f"{'tenant':<14} {'':>7} {'reqs':>6} {'':>6} "
+                         f"{'wait(ms)':>9} {'ttr(ms)':>9}")
+            for name, t in sorted(self.per_tenant.items()):
+                lines.append(f"{name:<14} {'':>7} {t.requests:>6} {'':>6} "
+                             f"{t.mean_wait * 1e3:>9.3f} "
+                             f"{t.mean_ttr * 1e3:>9.3f}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Request:
+    prep: batch.Prepared
+    tenant: str
+    t_submit: float
+    future: Future
+
+
+@dataclasses.dataclass
+class _OpenBatch:
+    t_open: float
+    requests: list
+
+
+class Server:
+    """The continuous-batching engine.  Build via :func:`serve`."""
+
+    def __init__(self, spec: ServeSpec = ServeSpec(), *, clock=None):
+        self.spec = spec
+        self._clock = clock if clock is not None else SystemClock()
+        self._cost = api._norm_costs(spec.scheduler)
+        widest = max(batch.norm_n_fu(spec.n_fu))
+        self._max_fu = (spec.max_fu_per_class
+                        if spec.max_fu_per_class is not None
+                        else max(4, widest))
+        if widest > self._max_fu:
+            raise ValueError(f"n_fu {widest} exceeds max_fu_per_class "
+                             f"{self._max_fu}")
+        if spec.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if spec.max_queue < spec.max_batch:
+            raise ValueError("max_queue must be >= max_batch")
+        self._open: dict[tuple[int, int], _OpenBatch] = {}
+        self._runners: dict[tuple[int, int], object] = {}
+        self._hits = 0
+        self._misses = 0
+        self._pending = 0
+        self._closed = False
+        self._req_rows: list = []      # (bucket, tenant, wait, ttr)
+        self._batch_rows: list = []    # (bucket, n_real)
+
+    # -- admission ----------------------------------------------------------
+    def bucket_of(self, program) -> tuple[int, int]:
+        """The shape-bucket key a program routes to:
+        ``(prog_bucket(p_len), prog_bucket(n_streams, floor=1))``."""
+        prep = batch.prepare(program)
+        p_len = len(isa.decode_table(prep.code))
+        n_streams = len(prep.streams) if prep.streams is not None else 1
+        return (batch.prog_bucket(p_len),
+                batch.prog_bucket(n_streams, floor=1))
+
+    def submit(self, program, *, tenant: str = "-") -> Future:
+        """Enqueue one scenario; the Future resolves to its
+        :class:`~repro.core.hts.api.Result` when its batch launches
+        (inline on fill, or on a later ``poll``/``drain``).
+
+        Raises :class:`QueueFullError` when ``max_queue`` requests are
+        already pending (after flushing any deadline-expired batches) —
+        open-loop producers must shed or retry.
+        """
+        if self._closed:
+            raise RuntimeError("server is closed")
+        self.poll()                     # free space deadlines already owe
+        if self._pending >= self.spec.max_queue:
+            raise QueueFullError(
+                f"{self._pending} requests pending >= max_queue "
+                f"{self.spec.max_queue}")
+        prep = batch.prepare(program)
+        key = self.bucket_of(prep)
+        req = _Request(prep=prep, tenant=tenant,
+                       t_submit=self._clock.now(), future=Future())
+        ob = self._open.get(key)
+        if ob is None:
+            ob = self._open[key] = _OpenBatch(t_open=req.t_submit,
+                                              requests=[])
+        ob.requests.append(req)
+        self._pending += 1
+        if len(ob.requests) >= self.spec.max_batch:
+            self._launch(key)
+        return req.future
+
+    def poll(self) -> int:
+        """Launch every open batch whose oldest request has aged past
+        ``deadline``.  Returns the number of batches launched."""
+        now = self._clock.now()
+        due = [k for k, ob in self._open.items()
+               if now - ob.t_open >= self.spec.deadline]
+        for k in due:
+            self._launch(k)
+        return len(due)
+
+    def drain(self) -> int:
+        """Launch every open batch regardless of age (flush)."""
+        keys = list(self._open)
+        for k in keys:
+            self._launch(k)
+        return len(keys)
+
+    def close(self) -> None:
+        """Flush and refuse further submissions."""
+        self.drain()
+        self._closed = True
+
+    def __enter__(self) -> "Server":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def pending(self) -> int:
+        """Requests enqueued but not yet launched."""
+        return self._pending
+
+    # -- execution ----------------------------------------------------------
+    def _machine_spec(self) -> machine.MachineSpec:
+        # mirror run_many exactly (policy-stripped params) so the runner
+        # fetched here for accounting IS the runner run_many executes
+        return machine.MachineSpec(
+            params=dataclasses.replace(self.spec.params,
+                                       policy=SchedPolicy()),
+            costs=self._cost, event_skip=self.spec.event_skip,
+            max_cycles=self.spec.max_cycles,
+            max_fu_per_class=self._max_fu)
+
+    def _launch(self, key: tuple[int, int]) -> None:
+        ob = self._open.pop(key)
+        reqs = ob.requests
+        if not reqs:
+            return
+        if key in self._runners:
+            self._hits += 1
+        else:
+            self._runners[key] = api._runner_for(
+                self._machine_spec(), key[0], self.spec.devices)
+            self._misses += 1
+        # pad to the bucket's one-and-only launch shape: max_batch lanes
+        # (replicating the first request — pad results are discarded)
+        pad = self.spec.max_batch - len(reqs)
+        preps = [r.prep for r in reqs] + [reqs[0].prep] * pad
+        pop = batch.pack_population(
+            preps, params=self.spec.params, n_fu=self.spec.n_fu,
+            policy=self.spec.policy, max_prog=key[0], max_streams=key[1])
+        t_launch = self._clock.now()
+        res = api.run_many(pop, scheduler=self._cost,
+                           event_skip=self.spec.event_skip,
+                           max_cycles=self.spec.max_cycles,
+                           max_fu_per_class=self._max_fu,
+                           devices=self.spec.devices, check=False)
+        t_done = self._clock.now()
+        self._pending -= len(reqs)
+        self._batch_rows.append((key, len(reqs)))
+        for i, r in enumerate(reqs):
+            self._req_rows.append((key, r.tenant, t_launch - r.t_submit,
+                                   t_done - r.t_submit))
+            if bool(res.halted[i]):
+                r.future.set_result(res[i])
+            else:
+                r.future.set_exception(api.SimulationError(
+                    f"request {r.prep.name!r} (tenant {r.tenant!r}) did "
+                    f"not halt within {self.spec.max_cycles} cycles"))
+
+    # -- introspection ------------------------------------------------------
+    def cache_info(self) -> CacheInfo:
+        distinct = {id(r): r for r in self._runners.values()}
+        compiles = 0
+        for r in distinct.values():
+            size = getattr(r, "_cache_size", None)
+            compiles += int(size()) if callable(size) else 0
+        return CacheInfo(hits=self._hits, misses=self._misses,
+                         entries=len(self._runners), jit_compiles=compiles)
+
+    def report(self) -> ServeReport:
+        per_bucket: dict = {}
+        for key in {k for k, _ in self._batch_rows}:
+            rows = [r for r in self._req_rows if r[0] == key]
+            launches = [n for k, n in self._batch_rows if k == key]
+            per_bucket[key] = BucketStats(
+                batches=len(launches), requests=len(rows),
+                pad_lanes=sum(self.spec.max_batch - n for n in launches),
+                occupancy=float(np.mean(launches)) / self.spec.max_batch,
+                mean_wait=float(np.mean([r[2] for r in rows])),
+                mean_ttr=float(np.mean([r[3] for r in rows])))
+        per_tenant: dict = {}
+        for tenant in {r[1] for r in self._req_rows}:
+            rows = [r for r in self._req_rows if r[1] == tenant]
+            per_tenant[tenant] = TenantStats(
+                requests=len(rows),
+                mean_wait=float(np.mean([r[2] for r in rows])),
+                mean_ttr=float(np.mean([r[3] for r in rows])))
+        return ServeReport(requests=len(self._req_rows),
+                           batches=len(self._batch_rows),
+                           per_bucket=per_bucket, per_tenant=per_tenant)
+
+
+def serve(spec: Optional[ServeSpec] = None, *, clock=None,
+          **overrides) -> Server:
+    """Build a :class:`Server` — ``hts.serve()`` is the front door.
+
+    Pass a :class:`ServeSpec`, keyword overrides for its fields, or both
+    (overrides win).  ``clock`` injects a time source
+    (:class:`ManualClock` in tests; wall time otherwise).  Usable as a
+    context manager: ``with hts.serve(...) as srv: ...`` flushes and
+    closes on exit.
+    """
+    if spec is None:
+        spec = ServeSpec()
+    if overrides:
+        spec = dataclasses.replace(spec, **overrides)
+    return Server(spec, clock=clock)
+
+
+__all__ = ["serve", "Server", "ServeSpec", "ServeReport", "BucketStats",
+           "TenantStats", "CacheInfo", "QueueFullError", "SystemClock",
+           "ManualClock"]

@@ -1,0 +1,107 @@
+"""Scenario-axis sharding: one :class:`~repro.core.hts.batch.PackedPopulation`
+across devices.
+
+The scenario axis is embarrassingly parallel — every lane of a packed
+population is an independent machine instance — so sharding it is pure
+data placement: split the 9 batched machine arguments over a 1-D device
+mesh and run the **population machine** (``machine.make_machine(...,
+population=True)``) per shard.  Each device executes its own while loop
+over its own lanes (there are no collectives in the step body), so a
+shard drains as fast as *its* slowest lane, not the global one —
+work-homogeneous shards (``batch.plan_chunks``) compose with sharding
+exactly as they do with batching.
+
+Two pieces of shape bookkeeping make the SPMD program identical on every
+device:
+
+* :func:`pad_lanes` pads the lane count to a multiple of the device count
+  by replicating the population's *lightest* lane (smallest ``p_len`` —
+  pad lanes halt early and become fixed points of the alive-gated step).
+  Padding is semantics-free: real lanes keep their indices and callers
+  drop the tail.
+* :func:`sharded_runner` compiles one ``shard_map``-wrapped population
+  machine per ``(MachineSpec, max_prog, devices)`` — the same bucketing
+  discipline as the single-device ``api._population_runner``, with the
+  device count one more static key.
+
+``api.run_many(devices=N)`` is the front door; ``api.compare_population``
+accepts the same ``devices=`` so the sharded path is differentially
+verified lane-for-lane against the single-device golden loop
+(tests/test_multidevice.py drives it under a forced multi-device host
+pool).  ``shard_map`` itself resolves through :mod:`repro.core.compat`
+(the ``jax.shard_map`` vs ``jax.experimental.shard_map`` spelling shim
+shared with ``sched/pipeline.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from . import machine
+from .batch import PackedPopulation
+
+
+def device_count() -> int:
+    """Devices visible to this process (the ``devices=`` upper bound)."""
+    import jax
+    return len(jax.devices())
+
+
+def pad_lanes(pop: PackedPopulation, multiple: int) -> PackedPopulation:
+    """Pad ``pop`` to a lane count divisible by ``multiple``.
+
+    Pad lanes replicate the lightest real lane (smallest ``p_len``), so
+    they halt first and idle as fixed points of the alive-gated step
+    while their shard's real lanes finish.  Real lanes keep indices
+    ``0..len(pop)-1``; callers slice the results back to that prefix.
+    """
+    if multiple <= 0:
+        raise ValueError(f"multiple must be positive, got {multiple}")
+    n = len(pop)
+    total = -(-n // multiple) * multiple
+    if total == n:
+        return pop
+    src = int(np.argmin(pop.p_len))
+    k = total - n
+
+    def rep(a: np.ndarray) -> np.ndarray:
+        return np.concatenate([a, np.repeat(a[src:src + 1], k, axis=0)],
+                              axis=0)
+
+    return dataclasses.replace(
+        pop,
+        names=pop.names + (f"<pad:{pop.names[src]}>",) * k,
+        preps=pop.preps + (pop.preps[src],) * k,
+        policies=pop.policies + (pop.policies[src],) * k,
+        ftab=rep(pop.ftab), p_len=rep(pop.p_len),
+        mem=rep(pop.mem), eff=rep(pop.eff), n_fu=rep(pop.n_fu),
+        prio=rep(pop.prio), quota=rep(pop.quota), rs_cap=rep(pop.rs_cap),
+        streams=rep(pop.streams))
+
+
+@functools.lru_cache(maxsize=32)
+def sharded_runner(spec: machine.MachineSpec, max_prog: int, devices: int):
+    """One jitted, device-sharded population machine per
+    ``(spec, max_prog, devices)`` static bucket.
+
+    The scenario axis is split over a 1-D ``("scenario",)`` mesh; each
+    device runs the population machine's while loop on its own lane
+    shard (no collectives — per-shard trip counts are independent, which
+    is the whole point).  Lane counts must divide ``devices``
+    (:func:`pad_lanes`).
+    """
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from ..compat import shard_map
+
+    avail = device_count()
+    if not 1 <= devices <= avail:
+        raise ValueError(f"devices={devices} requested but this process "
+                         f"sees {avail} device(s)")
+    mesh = jax.make_mesh((devices,), ("scenario",))
+    fn = machine.make_machine(spec, max_prog, population=True)
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=P("scenario"),
+                             out_specs=P("scenario")))

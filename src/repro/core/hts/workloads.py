@@ -292,6 +292,53 @@ def generate_scenarios(n: int, *, seed0: int = 0, **kwargs):
 
 
 # ---------------------------------------------------------------------------
+# open-loop arrival streams: the serving workload
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One open-loop request: ``scenario`` arrives ``t`` seconds into the
+    stream (host seconds — the serving clock, not scheduler cycles)."""
+    t: float
+    scenario: Scenario
+
+
+def arrival_stream(seed: int, rate: float, n: int, *, seed0: int = 0,
+                   dist: str = "poisson", **scenario_kwargs
+                   ) -> tuple[Arrival, ...]:
+    """A seeded open-loop request stream: ``n`` scenarios with arrival times.
+
+    Closed-batch replay (everything available at t=0) is where batching
+    looks free; open arrivals are where a scheduler earns its keep — this
+    is the reproducible request stream the serving benchmark
+    (``benchmarks/serving.py``) and the serve fuzz tests draw from.
+
+    Inter-arrival gaps are ``Exp(1/rate)`` (``dist="poisson"``, a Poisson
+    process) or ``Uniform(0, 2/rate)`` (``dist="uniform"``) — mean arrival
+    rate ``rate`` requests/second either way.  The arrival draws come from
+    their own ``numpy`` Generator seeded with ``seed``, and scenario ``i``
+    **is** ``generate_scenario(seed0 + i, **scenario_kwargs)`` — so
+    changing the stream's ``seed``/``rate``/``dist`` never changes the
+    scenario programs, and a failing stream case replays from two
+    integers.
+    """
+    if rate <= 0:
+        raise ValueError(f"rate must be positive, got {rate}")
+    if n < 0:
+        raise ValueError(f"n must be non-negative, got {n}")
+    rng = np.random.default_rng(seed)
+    if dist == "poisson":
+        gaps = rng.exponential(1.0 / rate, n)
+    elif dist == "uniform":
+        gaps = rng.uniform(0.0, 2.0 / rate, n)
+    else:
+        raise ValueError(f'dist must be "poisson" or "uniform", got {dist!r}')
+    times = np.cumsum(gaps)
+    return tuple(Arrival(float(times[i]),
+                         generate_scenario(seed0 + i, **scenario_kwargs))
+                 for i in range(n))
+
+
+# ---------------------------------------------------------------------------
 # populations: scenarios grouped into vmap-ready shape buckets
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,319 @@
+"""The serving subsystem (fast tier): bucket routing, launch-on-full /
+launch-on-deadline under a manual clock, bounded-queue backpressure, the
+no-recompile-after-warmup cache guarantee, seeded arrival streams, and the
+serve ≡ run ≡ run_many differential.  Sharding rides along on its
+single-device-legal surface (``devices=1`` equivalence, ``pad_lanes``
+bookkeeping, error paths); true multi-device runs live in
+tests/test_multidevice.py (slow tier, forced host device pool).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import hts
+from repro.core.hts import api, batch, shard, workloads
+from repro.core.hts.builder import Program
+
+#: distinct max_cycles => distinct MachineSpec => this module's cache tests
+#: read a jit runner no other test module has touched.
+CACHE_CYCLES = 4_999_999
+
+
+def _tiny(name, n_tasks, kernel="vector_dot", base=0x100):
+    p = Program(name, region_base=base)
+    frame = p.input(0x10, 4, "frame")
+    prev = frame
+    for i in range(n_tasks):
+        prev = p.task(kernel, in_=prev, out=4, in_size=4, tid=i)
+    return p
+
+
+@pytest.fixture(scope="module")
+def progs():
+    return [workloads.generate_scenario(s, n_tenants=2,
+                                        kernels=workloads.CHEAP_MIX).merged
+            for s in range(6)]
+
+
+# ---------------------------------------------------------------------------
+# scenarios_per_second (the deduped throughput formula)
+# ---------------------------------------------------------------------------
+def test_scenarios_per_second_formula():
+    assert hts.scenarios_per_second(10, 2e6) == 5.0
+    assert hts.scenarios_per_second(10, 0.0) == 0.0      # unmeasured
+    assert hts.scenarios_per_second(0, 1e6) == 0.0
+
+
+def test_population_result_scenarios_per_second(progs):
+    r = hts.run_many(progs[:3], scheduler="hts_spec")
+    assert r.scenarios_per_second() == pytest.approx(
+        hts.scenarios_per_second(3, r.wall_us))
+    # benchmarks pass their own measured median wall
+    assert r.scenarios_per_second(1e6) == 3.0
+    assert r.scenarios_per_sec() == r.scenarios_per_second()
+
+
+# ---------------------------------------------------------------------------
+# seeded arrival streams
+# ---------------------------------------------------------------------------
+def test_arrival_stream_seeded_and_monotonic():
+    s1 = workloads.arrival_stream(7, rate=100.0, n=20, n_tenants=2)
+    s2 = workloads.arrival_stream(7, rate=100.0, n=20, n_tenants=2)
+    assert len(s1) == 20
+    times = [a.t for a in s1]
+    assert times == sorted(times) and times[0] > 0
+    assert [a.t for a in s2] == times                    # reproducible
+    # mean inter-arrival gap tracks 1/rate (loose: 20 exponential draws)
+    assert 0.2 / 100 < times[-1] / 20 < 5.0 / 100
+
+
+def test_arrival_stream_programs_independent_of_stream_params():
+    """Changing seed/rate/dist re-times the stream but never changes the
+    scenario programs — scenario i IS generate_scenario(seed0 + i)."""
+    a = workloads.arrival_stream(1, rate=10.0, n=4, seed0=3, n_tenants=2)
+    b = workloads.arrival_stream(99, rate=500.0, n=4, seed0=3,
+                                 dist="uniform", n_tenants=2)
+    for i in range(4):
+        ref = batch.prepare(
+            workloads.generate_scenario(3 + i, n_tenants=2).merged)
+        assert np.array_equal(batch.prepare(a[i].scenario.merged).code,
+                              ref.code)
+        assert np.array_equal(batch.prepare(b[i].scenario.merged).code,
+                              ref.code)
+    assert [x.t for x in a] != [x.t for x in b]
+
+
+def test_arrival_stream_validation():
+    with pytest.raises(ValueError):
+        workloads.arrival_stream(0, rate=0.0, n=3)
+    with pytest.raises(ValueError):
+        workloads.arrival_stream(0, rate=1.0, n=-1)
+    with pytest.raises(ValueError):
+        workloads.arrival_stream(0, rate=1.0, n=3, dist="bursty")
+    assert workloads.arrival_stream(0, rate=1.0, n=0) == ()
+
+
+# ---------------------------------------------------------------------------
+# shard bookkeeping (single-device-legal surface)
+# ---------------------------------------------------------------------------
+def test_pad_lanes_shape_and_markers(progs):
+    pop = batch.pack_population(progs[:3], n_fu=2)
+    padded = shard.pad_lanes(pop, 4)
+    assert len(padded) == 4 and len(pop) == 3
+    assert padded.names[:3] == pop.names
+    assert padded.names[3].startswith("<pad:")
+    src = int(np.argmin(pop.p_len))                     # lightest lane
+    assert int(padded.p_len[3]) == int(pop.p_len[src])
+    for a, b in zip(padded.machine_args(), pop.machine_args()):
+        assert np.array_equal(a[:3], b)                 # real lanes intact
+        assert np.array_equal(a[3], b[src])             # pad replicates src
+    assert shard.pad_lanes(pop, 3) is pop               # already divisible
+    with pytest.raises(ValueError):
+        shard.pad_lanes(pop, 0)
+
+
+def test_run_many_devices1_matches_default(progs):
+    r0 = hts.run_many(progs[:3], scheduler="hts_spec")
+    r1 = hts.run_many(progs[:3], scheduler="hts_spec", devices=1)
+    assert np.array_equal(r0.cycles, r1.cycles)
+    for i in range(3):
+        assert r0[i].schedule_tuple() == r1[i].schedule_tuple()
+
+
+def test_devices_error_paths(progs):
+    with pytest.raises(ValueError, match="backend"):
+        hts.run_many(progs[:2], backend="golden", devices=1)
+    too_many = shard.device_count() + 1
+    with pytest.raises(ValueError, match="device"):
+        hts.run_many(progs[:2], scheduler="hts_spec", devices=too_many)
+
+
+# ---------------------------------------------------------------------------
+# the serving engine
+# ---------------------------------------------------------------------------
+def test_serve_differential_vs_run_many(progs):
+    """The headline semantics: results served out of shape-bucket batches
+    are identical to running the programs directly."""
+    clock = hts.ManualClock()
+    with hts.serve(max_batch=4, max_queue=32, deadline=1.0,
+                   clock=clock) as srv:
+        futs = [srv.submit(p, tenant=f"t{i % 2}")
+                for i, p in enumerate(progs)]
+        srv.drain()
+        got = [f.result(timeout=0) for f in futs]
+    ref = hts.run_many(progs, scheduler="hts_spec")
+    assert [r.cycles for r in got] == [int(c) for c in ref.cycles]
+    for r, i in zip(got, range(len(progs))):
+        assert r.schedule_tuple() == ref[i].schedule_tuple()
+    rep = srv.report()
+    assert rep.requests == len(progs)
+    assert set(rep.per_tenant) == {"t0", "t1"}
+    assert rep.per_tenant["t0"].requests == 3
+    assert "served" in rep.table()
+
+
+def test_serve_arrival_stream_differential():
+    """Open-loop serving: a seeded arrival stream replayed on the manual
+    clock, every result checked against a direct hts.run."""
+    stream = workloads.arrival_stream(11, rate=1000.0, n=8, n_tenants=2,
+                                      kernels=workloads.CHEAP_MIX)
+    clock = hts.ManualClock()
+    srv = hts.serve(max_batch=4, max_queue=16, deadline=0.005, clock=clock)
+    futs = []
+    for arr in stream:
+        clock.t = arr.t
+        futs.append(srv.submit(arr.scenario.merged))
+    clock.advance(1.0)
+    srv.poll()                                   # deadline-flush the tail
+    assert srv.pending == 0
+    for arr, f in zip(stream, futs):
+        ref = hts.run(arr.scenario.merged, scheduler="hts_spec", n_fu=2)
+        assert f.result(timeout=0).cycles == ref.cycles
+
+
+def test_serve_launch_on_full_is_inline(progs):
+    srv = hts.serve(max_batch=3, deadline=99.0, clock=hts.ManualClock())
+    f1 = srv.submit(progs[0])
+    f2 = srv.submit(progs[1])
+    assert not f1.done() and srv.pending == 2
+    f3 = srv.submit(progs[2])                    # fills the batch
+    assert f1.done() and f2.done() and f3.done()
+    assert srv.pending == 0
+
+
+def test_serve_deadline_launch_manual_clock(progs):
+    clock = hts.ManualClock()
+    srv = hts.serve(max_batch=8, deadline=0.050, clock=clock)
+    f = srv.submit(progs[0])
+    assert srv.poll() == 0 and not f.done()      # too young
+    clock.advance(0.049)
+    assert srv.poll() == 0                       # still under deadline
+    clock.advance(0.002)
+    assert srv.poll() == 1                       # aged past 50 ms
+    assert f.done()
+    # a partial launch pads to max_batch: occupancy shows 1 real lane of 8
+    b = srv.report().per_bucket
+    (stats,) = b.values()
+    assert stats.pad_lanes == 7 and stats.occupancy == pytest.approx(1 / 8)
+
+
+def test_serve_submit_flushes_expired_batches(progs):
+    """submit() itself runs the deadline check, so an open-loop producer
+    that never calls poll() still gets deadline launches."""
+    clock = hts.ManualClock()
+    srv = hts.serve(max_batch=8, deadline=0.010, clock=clock)
+    f = srv.submit(progs[0])
+    clock.advance(0.020)
+    srv.submit(progs[1])                         # flushes the aged batch
+    assert f.done() and srv.pending == 1
+
+
+def test_serve_bucket_routing():
+    """Requests route by (program bucket, stream bucket): a long program
+    and a multi-frontend scenario land in different open batches than a
+    short merged one."""
+    short = _tiny("short", 2)
+    long = _tiny("long", 40)                     # > MIN_BUCKET instructions
+    multi = workloads.generate_scenario(0, n_tenants=2, frontends=True,
+                                        kernels=workloads.CHEAP_MIX).multi
+    srv = hts.serve(max_batch=8, max_queue=32, deadline=99.0,
+                    clock=hts.ManualClock())
+    k_short, k_long, k_multi = (srv.bucket_of(p)
+                                for p in (short, long, multi))
+    assert k_short == (batch.MIN_BUCKET, 1)
+    assert k_long[0] > batch.MIN_BUCKET          # longer program ladder
+    assert k_multi[1] == 2                       # 2 frontend streams
+    futs = [srv.submit(p) for p in (short, long, multi, short)]
+    assert len(srv._open) == 3                   # three open batches
+    srv.drain()
+    for f in futs:
+        assert f.result(timeout=0).halted
+    rep = srv.report()
+    assert set(rep.per_bucket) == {k_short, k_long, k_multi}
+    assert rep.per_bucket[k_short].requests == 2
+
+
+def test_serve_backpressure_queue_full(progs):
+    clock = hts.ManualClock()
+    srv = hts.serve(max_batch=4, max_queue=4, deadline=0.050, clock=clock)
+    long = _tiny("long", 40)                     # second bucket
+    for p in (progs[0], progs[1], progs[2], long):
+        srv.submit(p)                            # neither bucket fills
+    assert srv.pending == 4
+    with pytest.raises(hts.QueueFullError):
+        srv.submit(progs[3])
+    # deadline expiry frees the queue: submit() flushes before admitting
+    clock.advance(0.060)
+    f = srv.submit(progs[3])
+    assert srv.pending == 1 and not f.done()
+    srv.drain()
+    assert f.result(timeout=0).halted
+
+
+def test_serve_never_recompiles_after_warmup(progs):
+    """The acceptance-criteria guarantee: once a bucket has launched, a
+    further >= 3 batches through it add ZERO jit compilations — every
+    launch is padded to the bucket's one compiled signature."""
+    spec = hts.ServeSpec(max_batch=3, max_queue=32, deadline=99.0,
+                         max_cycles=CACHE_CYCLES)
+    srv = hts.serve(spec, clock=hts.ManualClock())
+    assert srv.cache_info() == hts.CacheInfo(0, 0, 0, 0)
+    [srv.submit(p) for p in progs[:3]]           # warm the bucket
+    warm = srv.cache_info()
+    assert warm.misses == 1 and warm.entries == 1
+    assert warm.jit_compiles >= 1
+    for wave in range(3):                        # full batches
+        fs = [srv.submit(p) for p in progs[3:6]]
+        assert all(f.done() for f in fs)
+    srv.submit(progs[0])                         # plus a padded partial
+    srv.drain()
+    after = srv.cache_info()
+    assert after.jit_compiles == warm.jit_compiles   # zero recompiles
+    assert after.hits == 4 and after.misses == 1
+
+
+def test_serve_nonhalting_request_fails_its_future_only(progs):
+    srv = hts.serve(max_batch=2, deadline=99.0, max_cycles=50,
+                    clock=hts.ManualClock())
+    f1 = srv.submit(progs[0])                    # needs >> 50 cycles
+    f2 = srv.submit(progs[1])
+    assert f1.done() and f2.done()
+    with pytest.raises(hts.SimulationError):
+        f1.result(timeout=0)
+    with pytest.raises(hts.SimulationError):
+        f2.result(timeout=0)
+
+
+def test_serve_close_and_validation(progs):
+    srv = hts.serve(max_batch=4, deadline=99.0, clock=hts.ManualClock())
+    f = srv.submit(progs[0])
+    srv.close()                                  # flushes
+    assert f.done()
+    with pytest.raises(RuntimeError):
+        srv.submit(progs[0])
+    with pytest.raises(ValueError):
+        hts.serve(max_batch=0)
+    with pytest.raises(ValueError):
+        hts.serve(max_batch=8, max_queue=4)      # queue < one batch
+    with pytest.raises(ValueError):
+        hts.serve(n_fu=8, max_fu_per_class=4)
+
+
+def test_serve_devices1_matches_unsharded(progs):
+    """The sharded launch path on one device (always legal) serves the
+    same results as the plain server."""
+    with hts.serve(max_batch=3, deadline=99.0, devices=1,
+                   clock=hts.ManualClock()) as srv:
+        futs = [srv.submit(p) for p in progs[:3]]
+        got = [f.result(timeout=0).cycles for f in futs]
+    ref = hts.run_many(progs[:3], scheduler="hts_spec")
+    assert got == [int(c) for c in ref.cycles]
+
+
+def test_serve_spec_overrides():
+    spec = hts.ServeSpec(max_batch=2)
+    srv = hts.serve(spec, deadline=0.5)
+    assert srv.spec.max_batch == 2 and srv.spec.deadline == 0.5
+    assert dataclasses.is_dataclass(srv.spec)
+    assert isinstance(api._norm_costs(srv.spec.scheduler).name, str)

@@ -179,6 +179,66 @@ def test_grad_compression_psum():
     assert "COMPRESS_OK" in out
 
 
+def test_sharded_run_many_matches_single_device():
+    """run_many(devices=4) with lane padding (6 lanes over 4 devices) is
+    lane-for-lane identical — cycles AND schedule tuples — to the
+    single-device population machine, and compare_population(devices=2)
+    verifies the sharded path against the golden oracle."""
+    out = run_py("""
+        import numpy as np
+        from repro.core import hts
+        from repro.core.hts import shard, workloads
+
+        assert shard.device_count() == 4
+        progs = [workloads.generate_scenario(s, n_tenants=2,
+                                             kernels=workloads.CHEAP_MIX
+                                             ).merged for s in range(6)]
+        r0 = hts.run_many(progs, scheduler="hts_spec")
+        r4 = hts.run_many(progs, scheduler="hts_spec", devices=4)
+        assert len(r4) == 6                      # pad lanes dropped
+        assert np.array_equal(r0.cycles, r4.cycles)
+        for i in range(6):
+            assert r0[i].schedule_tuple() == r4[i].schedule_tuple(), i
+        hts.compare_population(progs[:4], schedulers=("hts_spec",),
+                               devices=2)
+        print("SHARD_OK", list(map(int, r4.cycles)))
+    """, devices=4)
+    assert "SHARD_OK" in out
+
+
+def test_serve_sharded_matches_unsharded():
+    """A ServeSpec(devices=2) server: same served results as devices=None,
+    and zero recompiles after its buckets warm up."""
+    out = run_py("""
+        from repro.core import hts
+        from repro.core.hts import workloads
+
+        progs = [workloads.generate_scenario(s, n_tenants=2,
+                                             kernels=workloads.CHEAP_MIX
+                                             ).merged for s in range(8)]
+        results = {}
+        for devices in (None, 2):
+            with hts.serve(max_batch=4, max_queue=32, deadline=99.0,
+                           devices=devices,
+                           clock=hts.ManualClock()) as srv:
+                futs = [srv.submit(p) for p in progs]
+                srv.drain()
+                results[devices] = [f.result(timeout=0).cycles
+                                    for f in futs]
+                if devices == 2:
+                    warm = srv.cache_info()
+                    fs = [srv.submit(p) for p in progs[:4]]
+                    fs += [srv.submit(p) for p in progs[4:]]
+                    assert all(f.done() for f in fs)
+                    after = srv.cache_info()
+                    assert after.jit_compiles == warm.jit_compiles, \\
+                        (warm, after)
+        assert results[None] == results[2], results
+        print("SERVE_SHARD_OK", results[2])
+    """, devices=2)
+    assert "SERVE_SHARD_OK" in out
+
+
 @pytest.mark.slow
 def test_mini_dryrun_multipod():
     """The dry-run path end-to-end on a shrunken (2,2,2) multi-pod mesh with
