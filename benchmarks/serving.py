@@ -15,9 +15,17 @@ recovers of the batched-path economics on two request streams:
   (``BENCH_population.json``'s 5.9x grid headline).
 * **generated stream**: the raw ``workloads.arrival_stream`` —
   heterogeneous seeded scenarios in arrival order.  Event-count spread
-  caps batching here (a batch drains at its slowest lane), so this point
-  reports the honest smaller number, consistent with the population
-  benchmark's 1.5x on work-sorted heterogeneous chunks.
+  caps *static* batching here (a batch drains at its slowest lane), so
+  this point reports the honest smaller number, consistent with the
+  population benchmark's 1.5x on work-sorted heterogeneous chunks.
+* **compacted points** (``generated_compacted``/``qos_compacted``): the
+  same streams served with ``slice_steps="auto"`` at a narrower
+  ``COMPACT_MAX_BATCH`` lane width — slice-and-refill continuous
+  batching, where halted lanes are harvested between bounded step slices
+  and refilled from the queue.  This is the fix for the static generated
+  point: batched step cost grows with lane width, so the winning shape
+  on a heterogeneous stream is narrow lanes kept permanently full by
+  refill — not wide lanes idling behind their slowest neighbour.
 
 The stream is replayed *saturating* (submitted back-to-back in arrival
 order): arrival seeds fix the stream's identity and order, and the
@@ -66,6 +74,18 @@ HI_PID = 1
 QOS_WEIGHTS = (0, 1, 2, 8)
 QOS_QUOTAS = (None, 1)
 VERIFY_PREFIX = 4
+#: slice budget for the compacted points — "auto" sizes each slice from
+#: the bucket's measured completed-request step-count medians
+SLICE_STEPS = "auto"
+#: lane width for the compacted points.  Batched step cost grows with
+#: lane width on CPU, so width only pays where lanes stay oversubscribed;
+#: compaction's refill keeps *narrow* lanes permanently full, which is
+#: the winning trade on a heterogeneous stream (wide static batches idle
+#: behind their slowest lane instead).
+COMPACT_MAX_BATCH = 4
+#: every stream a point measures (the ``*_compacted`` pair serve with
+#: ``slice_steps=SLICE_STEPS`` at ``COMPACT_MAX_BATCH`` lanes)
+STREAMS = ("qos", "generated", "generated_compacted", "qos_compacted")
 
 
 # ---------------------------------------------------------------------------
@@ -133,18 +153,30 @@ def generated_stream(n: int):
 # one measurement point (runs in a subprocess with a forced device pool)
 # ---------------------------------------------------------------------------
 def measure_stream(progs, *, devices: int, max_batch: int,
-                   reps: int) -> dict:
+                   reps: int, slice_steps=None) -> dict:
     """Serve-vs-sequential medians for one request list on this process's
     device pool.  ``devices=1`` uses the plain launch path; ``devices>1``
-    the sharded one."""
+    the sharded one.  ``slice_steps`` switches the server to
+    slice-and-refill continuous batching (compaction) — the knob that
+    rescues heterogeneous streams from slowest-lane drain."""
     from repro.core import hts
 
     # scenario-sized capacities for the batched path (as in
-    # benchmarks/population.py); the sequential baseline keeps facade
-    # defaults — that is the workflow being replaced
-    params = hts.HtsParams(max_tasks=192, cdb_entries=64)
-    spec = hts.ServeSpec(max_batch=max_batch, max_queue=4 * max_batch,
+    # benchmarks/population.py), right-sized to these streams: the
+    # heaviest request type retires ~28 tasks, so 64/32 keeps >2×
+    # headroom while shrinking the per-step state every serve mode pays
+    # for (a request that did overflow would fail loudly, not silently).
+    # The sequential baseline keeps facade defaults — that is the
+    # workflow being replaced
+    params = hts.HtsParams(max_tasks=64, cdb_entries=32)
+    # compaction turns the admission queue into the refill reservoir, so
+    # sliced points size it to the in-flight stream (a starved reservoir
+    # re-introduces the drain tails compaction exists to remove); static
+    # points keep the bounded 4×width backpressure queue
+    max_queue = len(progs) if slice_steps is not None else 4 * max_batch
+    spec = hts.ServeSpec(max_batch=max_batch, max_queue=max_queue,
                          deadline=10.0, params=params,
+                         slice_steps=slice_steps,
                          devices=devices if devices > 1 else None)
 
     def serve_once():
@@ -187,6 +219,8 @@ def measure_stream(progs, *, devices: int, max_batch: int,
     rep = srv.report()
     return {
         "n_requests": n,
+        "max_batch": max_batch,
+        "slice_steps": slice_steps,
         "serve": {"total_us": serve_us,
                   "scenarios_per_sec": hts.scenarios_per_second(n, serve_us)},
         "sequential": {"total_us": seq_us,
@@ -204,6 +238,11 @@ def measure_stream(progs, *, devices: int, max_batch: int,
 
 
 def measure_point(devices: int, n: int, max_batch: int, reps: int) -> dict:
+    """One device count, both streams, both batching modes.  The
+    ``*_compacted`` entries serve with ``slice_steps=SLICE_STEPS``
+    (slice-and-refill); the heterogeneous generated stream is where
+    compaction earns its keep — static batches there drain at the
+    slowest lane."""
     return {
         "devices": devices,
         "reps": reps,
@@ -212,6 +251,13 @@ def measure_point(devices: int, n: int, max_batch: int, reps: int) -> dict:
                               max_batch=max_batch, reps=reps),
         "generated": measure_stream(generated_stream(n), devices=devices,
                                     max_batch=max_batch, reps=reps),
+        "generated_compacted": measure_stream(
+            generated_stream(n), devices=devices,
+            max_batch=COMPACT_MAX_BATCH, reps=reps,
+            slice_steps=SLICE_STEPS),
+        "qos_compacted": measure_stream(
+            qos_stream(n), devices=devices, max_batch=COMPACT_MAX_BATCH,
+            reps=reps, slice_steps=SLICE_STEPS),
     }
 
 
@@ -244,7 +290,8 @@ def trajectory(*, device_counts=DEFAULT_DEVICE_COUNTS, n: int = DEFAULT_N,
                    "qos_types": len(QOS_WEIGHTS) * len(QOS_QUOTAS),
                    "generated_kw": GEN_SCENARIO_KW},
         "serve_spec": {"max_batch": max_batch,
-                       "max_queue": 4 * max_batch},
+                       "max_queue": 4 * max_batch,
+                       "slice_steps_compacted": SLICE_STEPS},
         "points": points,
         "headline": {
             "n_requests": n,
@@ -258,6 +305,12 @@ def trajectory(*, device_counts=DEFAULT_DEVICE_COUNTS, n: int = DEFAULT_N,
             "met": one["speedup_vs_sequential"] >= 2.0,
             "generated_stream_speedup":
                 points[0]["generated"]["speedup_vs_sequential"],
+            "generated_stream_speedup_compacted":
+                points[0]["generated_compacted"]["speedup_vs_sequential"],
+            "compacted_target_speedup": 1.0,
+            "compacted_met":
+                points[0]["generated_compacted"]["speedup_vs_sequential"]
+                >= 1.0,
             "post_warmup_jit_compiles_all_points": 0,
             "verified_prefix_per_point": VERIFY_PREFIX,
         },
@@ -268,13 +321,25 @@ def trajectory(*, device_counts=DEFAULT_DEVICE_COUNTS, n: int = DEFAULT_N,
 
 
 def section():
-    """``benchmarks.run`` integration: one in-process 1-device qos point."""
+    """``benchmarks.run`` integration: one in-process 1-device qos point
+    plus a compacted heterogeneous point (the slice-and-refill regime)."""
     point = measure_stream(qos_stream(16), devices=1, max_batch=8, reps=1)
-    return [("serving/qos_stream16/batch8", point["serve"]["total_us"], {
-        "speedup_vs_sequential": point["speedup_vs_sequential"],
-        "scenarios_per_sec": point["serve"]["scenarios_per_sec"],
-        "mean_occupancy": point["mean_occupancy"],
-    })]
+    compact = measure_stream(generated_stream(16), devices=1,
+                             max_batch=COMPACT_MAX_BATCH, reps=1,
+                             slice_steps=SLICE_STEPS)
+    return [
+        ("serving/qos_stream16/batch8", point["serve"]["total_us"], {
+            "speedup_vs_sequential": point["speedup_vs_sequential"],
+            "scenarios_per_sec": point["serve"]["scenarios_per_sec"],
+            "mean_occupancy": point["mean_occupancy"],
+        }),
+        (f"serving/generated16/batch{COMPACT_MAX_BATCH}/compacted",
+         compact["serve"]["total_us"], {
+             "speedup_vs_sequential": compact["speedup_vs_sequential"],
+             "scenarios_per_sec": compact["serve"]["scenarios_per_sec"],
+             "mean_occupancy": compact["mean_occupancy"],
+         }),
+    ]
 
 
 def main() -> None:
@@ -310,7 +375,7 @@ def main() -> None:
         # verified, zero post-warmup compiles, throughput measured
         assert data["headline"]["speedup_vs_sequential"] > 0
         for p in data["points"]:
-            for stream in ("qos", "generated"):
+            for stream in STREAMS:
                 assert p[stream]["cache"]["post_warmup_jit_compiles"] == 0
                 assert p[stream]["verified_prefix"] == VERIFY_PREFIX
     else:
@@ -328,10 +393,11 @@ def main() -> None:
         print(f"wrote {out}")
 
     for p in data["points"]:
-        for stream in ("qos", "generated"):
+        for stream in STREAMS:
             s = p[stream]
             print(f"  devices={p['devices']} {stream} "
-                  f"({s['n_requests']} requests, {s['batches']} batches, "
+                  f"({s['n_requests']} requests, batch {s['max_batch']}, "
+                  f"{s['batches']} launches, "
                   f"occupancy {s['mean_occupancy']:.2f}):")
             print(f"    sequential {s['sequential']['total_us']:>12.0f} us "
                   f" ({s['sequential']['scenarios_per_sec']:>8.1f} scen/s)")
@@ -343,7 +409,10 @@ def main() -> None:
     print(f"  headline: {h['speedup_vs_sequential']:.2f}x serve vs "
           f"sequential on the 1-device qos stream (target >= "
           f"{h['target_speedup']}x: {'MET' if h['met'] else 'NOT MET'}); "
-          f"generated stream {h['generated_stream_speedup']:.2f}x")
+          f"generated stream {h['generated_stream_speedup']:.2f}x static, "
+          f"{h['generated_stream_speedup_compacted']:.2f}x compacted "
+          f"(target >= {h['compacted_target_speedup']}x: "
+          f"{'MET' if h['compacted_met'] else 'NOT MET'})")
 
 
 if __name__ == "__main__":

@@ -488,6 +488,18 @@ class PopulationResult:
     def all_halted(self) -> bool:
         return bool(np.asarray(self.halted).all())
 
+    @property
+    def steps(self) -> Optional[np.ndarray]:
+        """Per-scenario while-loop step counts — the *measured* batching
+        cost of each lane (a batch runs as long as its slowest lane's
+        step count).  Feed this to ``batch.plan_chunks(profile=...)`` to
+        re-chunk a long sweep from real costs instead of the
+        instruction-count proxy.  ``None`` on the golden backend (the
+        oracle has no step counter)."""
+        if self.raw is None or "steps" not in self.raw:
+            return None
+        return np.asarray(self.raw["steps"])
+
     def scenarios_per_second(self, wall_us: Optional[float] = None) -> float:
         """Batched throughput (scenarios per host second).  ``wall_us``
         overrides this call's own wall — benchmarks pass their measured
@@ -705,6 +717,33 @@ def _runner_for(spec: machine.MachineSpec, max_prog: int,
         return _population_runner(spec, max_prog)
     from . import shard
     return shard.sharded_runner(spec, max_prog, devices)
+
+
+@functools.lru_cache(maxsize=32)
+def _population_slicer(spec: machine.MachineSpec, max_prog: int):
+    """The resumable population machine for one ``(spec, bucket)``:
+    ``init`` and ``run_slice`` jitted (``budget`` traced — slice-size
+    sweeps never recompile), ``collect`` left as the plain host-friendly
+    dict mapping (it also works row-wise on numpy snapshots of the
+    carry, which is how ``serve.py`` harvests individual lanes)."""
+    import jax
+    rm = machine.make_machine(spec, max_prog, population=True,
+                              resumable=True)
+    return machine.ResumableMachine(init=jax.jit(rm.init),
+                                    run_slice=jax.jit(rm.run_slice),
+                                    collect=rm.collect)
+
+
+def _slicer_for(spec: machine.MachineSpec, max_prog: int,
+                devices: Optional[int] = None) -> machine.ResumableMachine:
+    """The cached :class:`~repro.core.hts.machine.ResumableMachine` for a
+    ``(spec, bucket, devices)`` key — the slice-and-refill counterpart of
+    :func:`_runner_for` (same bucket discipline, same module-level
+    caching, so serve's recompilation accounting covers it too)."""
+    if devices is None:
+        return _population_slicer(spec, max_prog)
+    from . import shard
+    return shard.sharded_slicer(spec, max_prog, devices)
 
 
 def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),

@@ -128,24 +128,44 @@ def work_estimate(program) -> int:
 
 
 def plan_chunks(programs: Sequence, max_chunk: int = 32,
-                min_chunk: int = 8) -> tuple[tuple[int, ...], ...]:
+                min_chunk: int = 8,
+                profile=None) -> tuple[tuple[int, ...], ...]:
     """Scenario indices grouped into straggler-isolating vmap chunks.
 
     A chunk runs as long as its slowest lane, so one heavy scenario in a
     wide batch wastes every other lane's steps.  Scenarios are sorted by
-    :func:`work_estimate` (ascending) and partitioned **geometrically**:
-    the lightest half of the population rides in ``max_chunk``-wide
-    batches, the next quarter in half-width ones, and so on down to
-    ``min_chunk`` — so the heavy tail executes in narrow batches where it
-    can only hold up a few lanes.  Widths are powers of two (times
-    ``max_chunk``), so a plan compiles at most one machine per distinct
-    width.  Each chunk packs (``pack_population``) and runs
-    (``run_many``) as one batch.
+    cost (ascending) and partitioned **geometrically**: the lightest half
+    of the population rides in ``max_chunk``-wide batches, the next
+    quarter in half-width ones, and so on down to ``min_chunk`` — so the
+    heavy tail executes in narrow batches where it can only hold up a few
+    lanes.  Widths are powers of two (times ``max_chunk``), so a plan
+    compiles at most one machine per distinct width.  Each chunk packs
+    (``pack_population``) and runs (``run_many``) as one batch.
+
+    The cost key is :func:`work_estimate` (the static instruction-count
+    proxy) unless ``profile`` supplies *measured* per-scenario step
+    counts: either a length-N sequence/array of step counts, or anything
+    with a ``.steps`` attribute — in particular a first run's
+    :class:`~repro.core.hts.api.PopulationResult`, whose ``steps`` are
+    the machine's own while-loop trip counts.  Profile-guided plans
+    re-chunk long ``run_many`` sweeps from real costs, which is what
+    closes the heterogeneous-population gap the proxy leaves open (the
+    proxy tracks event counts, not their spread).
     """
     if not 0 < min_chunk <= max_chunk:
         raise ValueError("need 0 < min_chunk <= max_chunk")
-    order = sorted(range(len(programs)),
-                   key=lambda i: work_estimate(programs[i]))
+    if profile is None:
+        key = [work_estimate(p) for p in programs]
+    else:
+        key = np.asarray(getattr(profile, "steps", profile))
+        if key is None or key.dtype == object or key.ndim != 1:
+            raise ValueError("profile must be a 1-D sequence of per-"
+                             "scenario step counts or expose .steps")
+        if len(key) != len(programs):
+            raise ValueError(f"profile has {len(key)} step counts for "
+                             f"{len(programs)} programs")
+        key = [int(x) for x in key]
+    order = sorted(range(len(programs)), key=lambda i: key[i])
     chunks: list[tuple[int, ...]] = []
     k, n, width = 0, len(order), max_chunk
     while k < n:

@@ -45,6 +45,32 @@ BIG = jnp.int32(2**30)
 
 
 @dataclasses.dataclass(frozen=True)
+class ResumableMachine:
+    """The population machine factored into snapshot/resume pieces.
+
+    ``init(ftab, p_len, n_fu, mem_init, effects, prio, quota, rs_cap,
+    streams)`` builds the while-loop carry (one state row per lane);
+    ``run_slice(carry, <same 9 args>, budget)`` advances every alive lane
+    by at most ``budget`` machine steps (while-loop trips — the unit wall
+    time is spent in under event-skip) and returns the carry — lanes at
+    their limit (or halted) are fixed points, so slices compose exactly:
+    any split of a run into slices reaches the same final state as one
+    uninterrupted run.  ``collect(carry)`` maps a carry (or one host-side
+    row of it) to the usual output dict.
+
+    ``budget`` is traced runtime data — varying it never recompiles — and
+    the carry is an ordinary dict of arrays, so a host can snapshot it,
+    harvest halted lanes, splice in freshly initialised rows (lane
+    *refill*: only ``pc`` and ``mem`` of a fresh row depend on the
+    program; see ``init``'s state layout) and resume.  That is the whole
+    mechanism behind ``serve.py``'s slice-and-refill continuous batching.
+    """
+    init: Any
+    run_slice: Any
+    collect: Any
+
+
+@dataclasses.dataclass(frozen=True)
 class MachineSpec:
     """Static configuration baked into the compiled machine."""
     params: HtsParams = HtsParams()
@@ -63,7 +89,7 @@ class MachineSpec:
 
 
 def make_machine(spec: MachineSpec, max_prog: int = 256,
-                 population: bool = False):
+                 population: bool = False, resumable: bool = False):
     """Build the machine under ``spec``; returns
     ``run(ftab, p_len, n_fu, mem_init, effects, prio, quota, rs_cap,
     streams)``.
@@ -73,6 +99,15 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
     while loop (scalar any-lane-alive condition, vmapped step body) — the
     fast path behind ``api.run_many``.  Unlike ``jax.vmap(run)``, it pays
     no per-lane select over the loop carry.
+
+    With ``population=True, resumable=True`` the same machine comes back
+    factored as a :class:`ResumableMachine` — the carry is built once
+    (``init``), advanced in bounded step slices (``run_slice(carry, ...,
+    budget)``; a lane at its per-lane step limit is a fixed point of the
+    step, exactly like a halted lane, so slices compose bit-exactly with
+    run-to-completion) and read out with ``collect``.  ``serve.py``
+    builds continuous batching (harvest halted lanes between slices,
+    refill their slots) on top of it.
 
     The *program is a runtime input* — ``ftab`` is the (max_prog, 10) decoded
     field table (``isa.decode_table`` output, zero-padded) and ``p_len`` its
@@ -189,7 +224,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
             spec_active=jnp.bool_(False), spec_ckpt=z(p.num_regs),
             mr_active=jnp.bool_(False), mr_rem=I32(0),
             halted=jnp.bool_(False), overflow=jnp.bool_(False),
-            stall_cycles=I32(0), spec_aborted=I32(0),
+            stall_cycles=I32(0), spec_aborted=I32(0), steps=I32(0),
             # uid-indexed trace
             tr_func=jnp.full((U,), NEG, I32), tr_dispatch=jnp.full((U,), NEG, I32),
             tr_issue=jnp.full((U,), NEG, I32), tr_complete=jnp.full((U,), NEG, I32),
@@ -768,14 +803,25 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         return (~st["halted"] & ~st["overflow"]
                 & (st["cycle"] < spec.max_cycles))
 
-    def step(st, exists, F, p_len, prio, quota, rs_cap, streams, effects):
+    def step(st, exists, F, p_len, prio, quota, rs_cap, streams, effects,
+             limit):
         # ``alive`` gates every phase: a halted/overflowed lane is a fixed
         # point of the step, so the batched population machine can run one
         # while-loop with a scalar any-lane-alive condition and NO
         # per-lane carry select (see ``run_population``).  In the single
         # machine the while condition implies alive == True, so the gates
-        # are identities.
-        alive = alive_of(st)
+        # are identities.  ``limit`` is the lane's *step-count* ceiling
+        # for this entry (BIG = run to completion): a lane at its limit
+        # freezes as a fixed point too, which is what lets ``run_slice``
+        # pause and re-enter the loop with bit-exact composition.  The
+        # ceiling counts steps (while-loop trips), not cycles, because
+        # under event-skip a trip's cycle advance is arbitrary — steps
+        # are the unit wall time is actually spent in, so a step ceiling
+        # bounds a slice's cost where a cycle ceiling cannot (one
+        # event-dense lane can burn hundreds of trips inside a modest
+        # cycle window).
+        alive = alive_of(st) & (st["steps"] < limit)
+        st["steps"] = st["steps"] + jnp.where(alive, 1, 0)
         # Per-stream dispatch-stall accounting for the event-skipped window
         # behind this step (``dt - 1`` cycles with no events, hence no
         # grants).  It must read *pre-phase* state: the window's cycles lie
@@ -829,7 +875,8 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         return dict(
             cycles=st["cycle"], halted=st["halted"], overflow=st["overflow"],
             n_tasks=st["next_uid"] - 1, spec_aborted=st["spec_aborted"],
-            stall_cycles=st["stall_cycles"], fe_stall=st["fe_stall"],
+            stall_cycles=st["stall_cycles"], steps=st["steps"],
+            fe_stall=st["fe_stall"],
             fu_busy_cycles=st["fu_busy_cycles"],
             mem=st["mem"], regs=st["regs"],
             tr_func=st["tr_func"], tr_dispatch=st["tr_dispatch"],
@@ -847,7 +894,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         st = jax.lax.while_loop(
             lambda s: alive_of(s).any(),
             lambda s: step(s, exists, F, p_len, prio, quota, rs_cap,
-                           streams, effects),
+                           streams, effects, BIG),
             st)
         return collect(st)
 
@@ -866,13 +913,61 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         st = jax.vmap(init_state)(jnp.asarray(mem_init, I32), streams)
 
         vstep = jax.vmap(step)
+        limit = jnp.full_like(p_len, BIG)
         st = jax.lax.while_loop(
             lambda s: alive_of(s).any(),
             lambda s: vstep(s, exists, F, p_len, prio, quota, rs_cap,
-                            streams, effects),
+                            streams, effects, limit),
             st)
         return collect(st)
 
+    # ------------------------------------------------------------------
+    # resumable population machine: the same while loop, re-enterable
+    # ------------------------------------------------------------------
+    def init_population(ftab, p_len, n_fu, mem_init, effects,
+                        prio, quota, rs_cap, streams=None):
+        """The population while-loop carry, fresh: one state row per lane.
+
+        Only ``pc`` (= each stream's start pc) and ``mem`` (= the memory
+        image) depend on the arguments — every other field is a constant
+        fill — which is the invariant lane refill relies on (a host can
+        build a fresh row for a *different* program from any fresh row by
+        overwriting just those two fields).
+        """
+        _, p_len, _, _, _, _, streams = norm_args(
+            ftab, p_len, n_fu, prio, quota, rs_cap, streams)
+        return jax.vmap(init_state)(jnp.asarray(mem_init, I32), streams)
+
+    def run_slice(carry, ftab, p_len, n_fu, mem_init, effects,
+                  prio, quota, rs_cap, streams, budget):
+        """Advance every alive lane by at most ``budget`` machine steps.
+
+        Per-lane limits are ``carry steps + budget`` at entry, so every
+        lane pauses exactly at its ceiling and the returned carry feeds
+        straight back in.  The budget counts *steps* (while-loop trips),
+        not cycles: under event-skip a trip's cycle advance is data-
+        dependent, so only a step ceiling bounds what a slice costs in
+        wall time — which is the whole point of slicing.  ``budget`` is
+        traced: sweeping it never recompiles.  ``mem_init`` is unused
+        (the carry owns the memory image) but kept so the argument list
+        stays exactly ``PackedPopulation.machine_args()``.
+        """
+        F, p_len, exists, prio, quota, rs_cap, streams = norm_args(
+            ftab, p_len, n_fu, prio, quota, rs_cap, streams)
+        effects = jnp.asarray(effects, I32)
+        limit = carry["steps"] + jnp.asarray(budget, I32)
+        vstep = jax.vmap(step)
+        return jax.lax.while_loop(
+            lambda s: (alive_of(s) & (s["steps"] < limit)).any(),
+            lambda s: vstep(s, exists, F, p_len, prio, quota, rs_cap,
+                            streams, effects, limit),
+            carry)
+
+    if resumable:
+        if not population:
+            raise ValueError("resumable=True requires population=True")
+        return ResumableMachine(init=init_population, run_slice=run_slice,
+                                collect=collect)
     if population:
         return run_population
     return run

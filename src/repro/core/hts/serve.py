@@ -13,30 +13,60 @@ The pieces, and why each exists:
 * **Bucket router** — the compiled machine is shaped by the program-table
   size and the frontend-stream width, so requests are keyed by
   ``(prog_bucket(p_len), prog_bucket(n_streams))`` (the same power-of-two
-  ladder as :func:`batch.prog_bucket`).  One open batch per bucket.
+  ladder as :func:`batch.prog_bucket`).  One open batch per bucket.  The
+  key is read straight off the :class:`~repro.core.hts.batch.Prepared`
+  request (program length = code rows, stream count = stream-set size) —
+  admission is the engine's hot path and never decodes the program.
 * **Launch-on-full / launch-on-deadline** — a batch launches the moment
   it reaches ``max_batch`` (inline, inside ``submit``), or when its
   oldest request has waited ``deadline`` seconds (checked by ``poll()``,
   which ``submit`` also runs on entry).  The clock is injectable
   (:class:`ManualClock`) so deadline behaviour is deterministically
   testable.
-* **Stable launch shapes** — partial batches are padded to ``max_batch``
-  lanes by replicating the batch's first request, and
-  ``pack_population(max_prog=bucket, max_streams=bucket)`` pins the other
-  two shape axes, so *every* launch of a bucket presents the identical
-  signature to the jitted runner: one XLA compile per bucket, ever.
-  :meth:`Server.cache_info` proves it — ``jit_compiles`` reads the
-  runners' own compilation-cache sizes (not a guess), so a warmed server
-  asserts zero recompilation across arbitrarily many batches.
+* **Slice-and-refill compaction** (``slice_steps=``) — a static launch
+  holds all its lanes until the *slowest* one halts, which is exactly
+  where heterogeneous streams lose their batching win.  With
+  ``slice_steps`` set, a launch instead runs the resumable machine
+  (:func:`machine.make_machine` ``resumable=True``) in bounded slices:
+  after each slice, lanes whose machines have halted are harvested
+  (their futures resolve immediately) and the freed slots are
+  **refilled** from the bucket's queue — the batch never idles a lane
+  while requests wait.  The budget counts *machine steps* (while-loop
+  trips), not cycles: under event-skip a step's cycle advance is data-
+  dependent, and steps are where wall time actually goes, so only a step
+  budget stops one event-dense request from stalling the whole width for
+  an unbounded stretch.  ``slice_steps="auto"`` sizes each slice from
+  the bucket's measured completed-request step counts, so a slice is a
+  few typical requests long.  In this mode ``submit`` lets a bucket's
+  queue deepen past ``max_batch`` (the queue *is* the refill reservoir)
+  and launches on deadline, ``drain()``, or queue pressure.
+* **Stable launch shapes** — partial batches are padded to the bucket's
+  one lane width (``max_batch``, rounded up to a device multiple) by
+  replicating the batch's first request, and ``pack_population(
+  max_prog=bucket, max_streams=bucket)`` pins the other two shape axes,
+  so *every* launch of a bucket presents the identical signature to the
+  jitted runner: one XLA compile per bucket, ever (two for a sliced
+  bucket: carry init + slice, both compiled once — the slice budget is
+  traced, so adapting it never recompiles).  :meth:`Server.cache_info`
+  proves it — ``jit_compiles`` reads the runners' own compilation-cache
+  sizes (not a guess), so a warmed server asserts zero recompilation
+  across arbitrarily many batches *and refills*.
 * **Backpressure** — at most ``max_queue`` requests may be pending across
   all open batches; ``submit`` raises :class:`QueueFullError` beyond
-  that, after first flushing any deadline-expired batches.
+  that, after first flushing any deadline-expired batches.  The one
+  exception: a request that *completes* its bucket's batch is always
+  admitted — it launches inline and frees ``max_batch`` slots, so
+  refusing it would be an off-by-one that deadlocks an exactly-full
+  queue.
 * **Sharding** — ``ServeSpec(devices=N)`` routes every launch through the
-  ``shard_map`` path (:mod:`shard` via ``run_many(devices=N)``), so a
-  multi-device host drains each batch across its devices.
+  ``shard_map`` path (:mod:`shard` via ``run_many(devices=N)`` or the
+  sharded resumable machine), so a multi-device host drains each batch
+  across its devices; lane refill composes (the lane width is pinned to a
+  device multiple once per server).
 * **Service metrics** — every completed request records its queue wait
   and time-to-result; :meth:`Server.report` aggregates per bucket and per
-  tenant (batch occupancy included), feeding ``benchmarks/serving.py``.
+  tenant (measured slice occupancy included), feeding
+  ``benchmarks/serving.py``.
 
     >>> from repro.core import hts
     >>> with hts.serve(max_batch=4, deadline=0.01) as srv:
@@ -50,6 +80,13 @@ resolved before those calls return.  That keeps the semantics exactly
 reproducible (no scheduler races) while preserving the asynchronous
 *interface* — callers hold ``Future`` handles and may submit from
 producer code that never looks at results.
+
+Lifecycle: after :meth:`Server.close` (which flushes), ``submit``,
+``poll`` and ``drain`` all raise ``RuntimeError`` — a closed server is
+closed, not silently inert.  Leaving the ``with`` block normally closes
+(flushes); leaving it on an exception calls :meth:`Server.abort`, which
+*cancels* still-queued futures instead of launching work the caller will
+never observe.
 """
 from __future__ import annotations
 
@@ -60,14 +97,15 @@ from typing import Optional, Sequence, Union
 
 import numpy as np
 
-from . import api, batch, isa, machine
+from . import api, batch, machine
 from .costs import SchedulerCosts
 from .golden import HtsParams
 from .policy import SchedPolicy
 
 
 class QueueFullError(RuntimeError):
-    """``submit`` refused: ``max_queue`` requests already pending."""
+    """``submit`` refused: ``max_queue`` requests already pending (and the
+    incoming request would not have completed a batch)."""
 
 
 # ---------------------------------------------------------------------------
@@ -110,11 +148,20 @@ class ServeSpec:
     ...)``, and leave ``policy=None``).
 
     ``max_batch`` — lanes per launch (every launch is padded to exactly
-    this, so it is also the bucket's compiled batch shape).
+    this — rounded up to a device multiple — so it is also the bucket's
+    compiled batch shape).
     ``max_queue`` — pending-request bound across all open batches.
     ``deadline`` — seconds an open batch may age before ``poll()``
     launches it partial.  ``devices`` — shard each launch over N devices
     (``None`` = single-device path).
+
+    ``slice_steps`` — ``None`` (default) launches static batches that
+    run to completion; an int runs every launch in slices of at most that
+    many machine steps per lane, with halted lanes harvested and refilled
+    from the bucket queue between slices (continuous batching); ``"auto"``
+    sizes slices from the bucket's measured completed-request step counts
+    (4x the median of the last 64, floor {AUTO_MIN}; first launch at
+    {AUTO} steps).
     """
     scheduler: Union[str, SchedulerCosts] = "hts_spec"
     n_fu: Union[int, Sequence[int]] = 2
@@ -127,6 +174,16 @@ class ServeSpec:
     deadline: float = 0.050
     devices: Optional[int] = None
     max_fu_per_class: Optional[int] = None
+    slice_steps: Optional[Union[int, str]] = None
+
+
+#: first-launch slice budget (machine steps) under ``slice_steps="auto"``
+#: (no measured completions yet to take a median of)
+AUTO_SLICE_STEPS = 256
+#: smallest auto slice — below this, per-slice dispatch overhead dominates
+AUTO_SLICE_STEPS_MIN = 32
+ServeSpec.__doc__ = ServeSpec.__doc__.format(AUTO=AUTO_SLICE_STEPS,
+                                             AUTO_MIN=AUTO_SLICE_STEPS_MIN)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,8 +192,10 @@ class CacheInfo:
     lookups at launch time (miss = first launch of a bucket); ``entries``
     is the number of distinct buckets launched; ``jit_compiles`` is the
     *runners' own* compilation-cache population — the honest number, read
-    from the jitted callables, not inferred.  A warmed server launches
-    batch after batch with ``jit_compiles`` frozen."""
+    from the jitted callables (a sliced bucket's runner is two callables:
+    carry init + slice), not inferred.  A warmed server launches batch
+    after batch — and refill after refill — with ``jit_compiles``
+    frozen."""
     hits: int
     misses: int
     entries: int
@@ -148,8 +207,9 @@ class BucketStats:
     batches: int
     requests: int
     pad_lanes: int
-    occupancy: float            # mean real-lanes / max_batch per launch
-    mean_wait: float            # seconds queued before launch
+    occupancy: float            # mean real-lane fraction (measured per
+    #                             slice for compacted launches)
+    mean_wait: float            # seconds queued before a lane ran it
     mean_ttr: float             # seconds submit -> result
 
 
@@ -190,6 +250,29 @@ class ServeReport:
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
+_TREE_OPS = None
+
+
+def _tree_ops():
+    """Two shared jitted helpers for sliced launches: gather W rows out of
+    a device-resident tree (``take``), and scatter W replacement rows into
+    one (``put``).  Index vectors are padded to the fixed lane width with
+    duplicates that carry identical rows (so scatter order cannot matter),
+    which keeps each helper at one compilation per tree shape.  Per-lane
+    eager indexing would instead pay dispatch overhead per *field* per
+    lane — on a CPU host that overhead dwarfs the slice compute itself."""
+    global _TREE_OPS
+    if _TREE_OPS is None:
+        import jax
+
+        take = jax.jit(lambda tree, idx: jax.tree_util.tree_map(
+            lambda v: v[idx], tree))
+        put = jax.jit(lambda tree, idx, rows: jax.tree_util.tree_map(
+            lambda v, r: v.at[idx].set(r), tree, rows))
+        _TREE_OPS = (take, put)
+    return _TREE_OPS
+
+
 @dataclasses.dataclass
 class _Request:
     prep: batch.Prepared
@@ -222,6 +305,16 @@ class Server:
             raise ValueError("max_batch must be >= 1")
         if spec.max_queue < spec.max_batch:
             raise ValueError("max_queue must be >= max_batch")
+        sc = spec.slice_steps
+        if sc is not None and sc != "auto" and (
+                not isinstance(sc, (int, np.integer)) or sc < 1):
+            raise ValueError('slice_steps must be None, "auto", or a '
+                             f'positive int, got {sc!r}')
+        self._compaction = sc is not None
+        # lane width: max_batch rounded up to a device multiple, so the
+        # sharded paths see one fixed, divisible shape per bucket
+        mult = spec.devices or 1
+        self._lanes = -(-spec.max_batch // mult) * mult
         self._open: dict[tuple[int, int], _OpenBatch] = {}
         self._runners: dict[tuple[int, int], object] = {}
         self._hits = 0
@@ -229,51 +322,69 @@ class Server:
         self._pending = 0
         self._closed = False
         self._req_rows: list = []      # (bucket, tenant, wait, ttr)
-        self._batch_rows: list = []    # (bucket, n_real)
+        self._batch_rows: list = []    # (bucket, n_real, pad, occupancy)
+        self._done_steps: dict[tuple[int, int], list] = {}
 
     # -- admission ----------------------------------------------------------
     def bucket_of(self, program) -> tuple[int, int]:
         """The shape-bucket key a program routes to:
         ``(prog_bucket(p_len), prog_bucket(n_streams, floor=1))``."""
-        prep = batch.prepare(program)
-        p_len = len(isa.decode_table(prep.code))
+        return self._bucket_key(batch.prepare(program))
+
+    @staticmethod
+    def _bucket_key(prep: batch.Prepared) -> tuple[int, int]:
+        # the hot admission path: length is the code-row count and the
+        # stream count is the stream-set size — no program decode here
         n_streams = len(prep.streams) if prep.streams is not None else 1
-        return (batch.prog_bucket(p_len),
+        return (batch.prog_bucket(len(prep.code)),
                 batch.prog_bucket(n_streams, floor=1))
+
+    def _require_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("server is closed")
 
     def submit(self, program, *, tenant: str = "-") -> Future:
         """Enqueue one scenario; the Future resolves to its
-        :class:`~repro.core.hts.api.Result` when its batch launches
-        (inline on fill, or on a later ``poll``/``drain``).
+        :class:`~repro.core.hts.api.Result` when a launch runs it
+        (inline on fill or queue pressure, or on a later
+        ``poll``/``drain``).
 
         Raises :class:`QueueFullError` when ``max_queue`` requests are
         already pending (after flushing any deadline-expired batches) —
-        open-loop producers must shed or retry.
+        unless this request completes its bucket's batch, in which case
+        it is admitted and the batch launches inline, freeing its slots.
+        Open-loop producers must shed or retry on refusal.
         """
-        if self._closed:
-            raise RuntimeError("server is closed")
+        self._require_open()
         self.poll()                     # free space deadlines already owe
-        if self._pending >= self.spec.max_queue:
+        prep = batch.prepare(program)
+        key = self._bucket_key(prep)
+        ob = self._open.get(key)
+        waiting = len(ob.requests) if ob is not None else 0
+        full = self._pending >= self.spec.max_queue
+        if full and waiting + 1 < self.spec.max_batch:
             raise QueueFullError(
                 f"{self._pending} requests pending >= max_queue "
                 f"{self.spec.max_queue}")
-        prep = batch.prepare(program)
-        key = self.bucket_of(prep)
         req = _Request(prep=prep, tenant=tenant,
                        t_submit=self._clock.now(), future=Future())
-        ob = self._open.get(key)
         if ob is None:
             ob = self._open[key] = _OpenBatch(t_open=req.t_submit,
                                               requests=[])
         ob.requests.append(req)
         self._pending += 1
-        if len(ob.requests) >= self.spec.max_batch:
+        # static mode launches the moment a batch fills; compaction mode
+        # lets the bucket queue deepen (it is the refill reservoir) and
+        # launches on deadline/drain — or right here under queue pressure
+        if len(ob.requests) >= self.spec.max_batch and (
+                full or not self._compaction):
             self._launch(key)
         return req.future
 
     def poll(self) -> int:
         """Launch every open batch whose oldest request has aged past
         ``deadline``.  Returns the number of batches launched."""
+        self._require_open()
         now = self._clock.now()
         due = [k for k, ob in self._open.items()
                if now - ob.t_open >= self.spec.deadline]
@@ -283,25 +394,47 @@ class Server:
 
     def drain(self) -> int:
         """Launch every open batch regardless of age (flush)."""
+        self._require_open()
         keys = list(self._open)
         for k in keys:
             self._launch(k)
         return len(keys)
 
     def close(self) -> None:
-        """Flush and refuse further submissions."""
+        """Flush, then refuse further ``submit``/``poll``/``drain``.
+        Idempotent."""
+        if self._closed:
+            return
         self.drain()
+        self._closed = True
+
+    def abort(self) -> None:
+        """Discard queued work without launching: cancel every pending
+        future, empty the queue, close the server.  This is the
+        exception-path exit (``with`` blocks call it when unwinding) —
+        flushing there would burn simulation time on results nobody will
+        ever read."""
+        if self._closed:
+            return
+        for ob in self._open.values():
+            for r in ob.requests:
+                r.future.cancel()
+        self._open.clear()
+        self._pending = 0
         self._closed = True
 
     def __enter__(self) -> "Server":
         return self
 
-    def __exit__(self, *exc) -> None:
-        self.close()
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            self.abort()
+        else:
+            self.close()
 
     @property
     def pending(self) -> int:
-        """Requests enqueued but not yet launched."""
+        """Requests admitted whose futures have not yet resolved."""
         return self._pending
 
     # -- execution ----------------------------------------------------------
@@ -315,24 +448,67 @@ class Server:
             max_cycles=self.spec.max_cycles,
             max_fu_per_class=self._max_fu)
 
-    def _launch(self, key: tuple[int, int]) -> None:
-        ob = self._open.pop(key)
-        reqs = ob.requests
-        if not reqs:
-            return
-        if key in self._runners:
+    def _runner(self, key: tuple[int, int]):
+        r = self._runners.get(key)
+        if r is not None:
             self._hits += 1
-        else:
-            self._runners[key] = api._runner_for(
-                self._machine_spec(), key[0], self.spec.devices)
-            self._misses += 1
-        # pad to the bucket's one-and-only launch shape: max_batch lanes
-        # (replicating the first request — pad results are discarded)
-        pad = self.spec.max_batch - len(reqs)
-        preps = [r.prep for r in reqs] + [reqs[0].prep] * pad
-        pop = batch.pack_population(
+            return r
+        spec = self._machine_spec()
+        r = (api._slicer_for(spec, key[0], self.spec.devices)
+             if self._compaction
+             else api._runner_for(spec, key[0], self.spec.devices))
+        self._runners[key] = r
+        self._misses += 1
+        return r
+
+    def _pack(self, preps, key: tuple[int, int]) -> batch.PackedPopulation:
+        return batch.pack_population(
             preps, params=self.spec.params, n_fu=self.spec.n_fu,
             policy=self.spec.policy, max_prog=key[0], max_streams=key[1])
+
+    def _resolve(self, key, req: _Request, result, t_filled: float,
+                 t_done: float) -> None:
+        """Resolve one request's future (and its accounting) — the ONLY
+        place ``_pending`` decrements, so a request admitted is a request
+        either resolved or still counted."""
+        self._pending -= 1
+        self._req_rows.append((key, req.tenant, t_filled - req.t_submit,
+                               t_done - req.t_submit))
+        if result is not None:
+            self._done_steps.setdefault(key, []).append(
+                int(np.asarray(result.raw["steps"])))
+            req.future.set_result(result)
+        else:
+            req.future.set_exception(api.SimulationError(
+                f"request {req.prep.name!r} (tenant {req.tenant!r}) did "
+                f"not halt within {self.spec.max_cycles} cycles"))
+
+    def _launch(self, key: tuple[int, int]) -> None:
+        ob = self._open.pop(key, None)
+        if ob is None or not ob.requests:
+            return
+        try:
+            if self._compaction:
+                self._launch_sliced(key, ob.requests)
+            else:
+                self._launch_static(key, ob.requests)
+        except BaseException as e:
+            # exception-safe: a failed launch fails its *own* futures and
+            # restores the queue accounting, instead of leaking hung
+            # futures and permanently shrinking capacity
+            for r in ob.requests:
+                if not r.future.done():
+                    self._pending -= 1
+                    r.future.set_exception(e)
+            raise
+
+    def _launch_static(self, key: tuple[int, int], reqs: list) -> None:
+        self._runner(key)           # cache accounting (run_many reuses it)
+        # pad to the bucket's one-and-only launch shape (replicating the
+        # first request — pad results are discarded)
+        pad = self._lanes - len(reqs)
+        preps = [r.prep for r in reqs] + [reqs[0].prep] * pad
+        pop = self._pack(preps, key)
         t_launch = self._clock.now()
         res = api.run_many(pop, scheduler=self._cost,
                            event_skip=self.spec.event_skip,
@@ -340,37 +516,169 @@ class Server:
                            max_fu_per_class=self._max_fu,
                            devices=self.spec.devices, check=False)
         t_done = self._clock.now()
-        self._pending -= len(reqs)
-        self._batch_rows.append((key, len(reqs)))
+        self._batch_rows.append((key, len(reqs), pad,
+                                 len(reqs) / self._lanes))
         for i, r in enumerate(reqs):
-            self._req_rows.append((key, r.tenant, t_launch - r.t_submit,
-                                   t_done - r.t_submit))
-            if bool(res.halted[i]):
-                r.future.set_result(res[i])
-            else:
-                r.future.set_exception(api.SimulationError(
-                    f"request {r.prep.name!r} (tenant {r.tenant!r}) did "
-                    f"not halt within {self.spec.max_cycles} cycles"))
+            self._resolve(key, r, res[i] if bool(res.halted[i]) else None,
+                          t_launch, t_done)
+
+    # -- slice-and-refill (compaction) --------------------------------------
+    def _slice_budget(self, key: tuple[int, int]) -> int:
+        sc = self.spec.slice_steps
+        if sc == "auto":
+            hist = self._done_steps.get(key)
+            if not hist:
+                return AUTO_SLICE_STEPS
+            # a few typical requests per slice: fine enough that an
+            # event-dense straggler cannot stall the width for long,
+            # coarse enough that dispatch overhead stays amortised
+            return max(AUTO_SLICE_STEPS_MIN,
+                       4 * int(np.median(hist[-64:])))
+        return int(sc)
+
+    def _lane_result(self, req: _Request, out: dict, n_fu_row,
+                     wall_us: float) -> api.Result:
+        fu = tuple(int(x) for x in n_fu_row)
+        pol = batch.norm_policy(self.spec.policy, req.prep,
+                                self.spec.params)
+        return api._machine_result(req.prep.name, self._cost.name, fu, out,
+                                   wall_us, pol, self._max_fu,
+                                   req.prep.streams)
+
+    def _refill_rows(self, key, fresh, req: _Request):
+        """Host-side rows that splice a fresh lane for ``req`` into a
+        running launch: the packed row for all 9 machine arguments, and a
+        carry row that is the fresh-state template with the two program-
+        dependent fields (``pc``, ``mem``) overwritten — the exact state
+        ``init`` would have built for it."""
+        row = self._pack([req.prep], key)
+        arow = [b[0] for b in row.machine_args()]
+        crow = dict(fresh)
+        crow["pc"] = row.streams[0][:, 0]
+        crow["mem"] = row.mem[0]
+        return crow, arow
+
+    def _launch_sliced(self, key: tuple[int, int], reqs: list) -> None:
+        """Run one bucket's queue through ``self._lanes`` lanes with
+        bounded step slices, harvesting halted lanes and refilling their
+        slots between slices, until the queue is dry and every lane has
+        drained.  Each request's future resolves the moment its own lane
+        halts — not when the batch does.
+
+        The carry and the 9 machine arguments stay **device-resident**
+        across slices: per slice only the three per-lane liveness fields
+        come back to the host (to decide harvests), then *all* dead lanes
+        are gathered in one jitted tree-take and *all* refills spliced in
+        one jitted tree-put (:func:`_tree_ops`).  The state itself never
+        round-trips, so the per-slice host cost is independent of
+        ``HtsParams`` capacities and of how many lanes turned over."""
+        import jax
+        import jax.numpy as jnp
+
+        take_rows, put_rows = _tree_ops()
+        rm = self._runner(key)
+        queue = list(reqs)                       # FIFO submit order
+        W = self._lanes
+        take, queue = queue[:W], queue[W:]
+        pad = W - len(take)
+        pop = self._pack([r.prep for r in take] + [take[0].prep] * pad, key)
+        args = [jnp.asarray(a) for a in pop.machine_args()]
+        n_fu_host = np.array(pop.machine_args()[2])   # host mirror for reads
+        carry = dict(rm.init(*args))
+        # one fresh state row as the refill template: machine.init only
+        # varies pc and mem with the program (documented invariant), so a
+        # fresh row for ANY program is this template + those two fields
+        fresh = jax.device_get({k: v[0] for k, v in carry.items()})
+        lanes: list = list(take) + [None] * pad
+        # retire pad lanes before the first slice: marking the clones
+        # halted makes them step fixed points and immediately refillable
+        if pad:
+            carry["halted"] = carry["halted"].at[len(take):].set(True)
+        t_fill = [self._clock.now()] * W
+        served = 0
+        occ_num = 0.0
+        occ_den = 0
+        while any(r is not None for r in lanes):
+            occ_num += sum(r is not None for r in lanes) / W
+            occ_den += 1
+            budget = np.int32(self._slice_budget(key))
+            carry = dict(rm.run_slice(carry, *args, budget))
+            now = self._clock.now()
+            halted, overflow, cycle = jax.device_get(
+                (carry["halted"], carry["overflow"], carry["cycle"]))
+            dead = halted | overflow | (cycle >= self.spec.max_cycles)
+            done = [i for i in range(W)
+                    if lanes[i] is not None and dead[i]]
+            if not done:
+                continue
+            # one gather for every lane that died this slice (index vector
+            # padded to W so the helper keeps a single compiled shape)
+            idx = np.asarray(done + [done[0]] * (W - len(done)), np.int32)
+            rows = jax.device_get(take_rows(carry, idx))
+            ref_idx: list[int] = []
+            ref_crows: list[dict] = []
+            ref_arows: list[list] = []
+            for j, i in enumerate(done):
+                r = lanes[i]
+                row = rm.collect({k: v[j] for k, v in rows.items()})
+                res = self._lane_result(r, row, n_fu_host[i],
+                                        (now - t_fill[i]) * 1e6)
+                self._resolve(key, r, res if res.halted else None,
+                              t_fill[i], now)
+                served += 1
+                lanes[i] = None
+                if queue:
+                    nxt = queue.pop(0)
+                    crow, arow = self._refill_rows(key, fresh, nxt)
+                    ref_idx.append(i)
+                    ref_crows.append(crow)
+                    ref_arows.append(arow)
+                    n_fu_host[i] = np.array(arow[2])
+                    lanes[i] = nxt
+                    t_fill[i] = now
+            if ref_idx:
+                # one splice for every refill this slice (padded with
+                # duplicates of refill 0 — identical rows, so the scatter
+                # is order-independent)
+                k = W - len(ref_idx)
+                ridx = np.asarray(ref_idx + [ref_idx[0]] * k, np.int32)
+                ref_crows += [ref_crows[0]] * k
+                ref_arows += [ref_arows[0]] * k
+                crows = {f: np.stack([c[f] for c in ref_crows])
+                         for f in ref_crows[0]}
+                arows = [np.stack([a[j] for a in ref_arows])
+                         for j in range(len(args))]
+                carry, args = put_rows((carry, args), ridx, (crows, arows))
+                carry, args = dict(carry), list(args)
+        self._batch_rows.append((key, served, max(0, W - served),
+                                 occ_num / max(occ_den, 1)))
 
     # -- introspection ------------------------------------------------------
     def cache_info(self) -> CacheInfo:
-        distinct = {id(r): r for r in self._runners.values()}
+        parts = []
+        for r in self._runners.values():
+            if isinstance(r, machine.ResumableMachine):
+                parts += [r.init, r.run_slice]
+            else:
+                parts.append(r)
+        distinct = {id(p): p for p in parts}
         compiles = 0
-        for r in distinct.values():
-            size = getattr(r, "_cache_size", None)
+        for p in distinct.values():
+            size = getattr(p, "_cache_size", None)
             compiles += int(size()) if callable(size) else 0
         return CacheInfo(hits=self._hits, misses=self._misses,
                          entries=len(self._runners), jit_compiles=compiles)
 
     def report(self) -> ServeReport:
         per_bucket: dict = {}
-        for key in {k for k, _ in self._batch_rows}:
+        for key in {row[0] for row in self._batch_rows}:
             rows = [r for r in self._req_rows if r[0] == key]
-            launches = [n for k, n in self._batch_rows if k == key]
+            launches = [row for row in self._batch_rows if row[0] == key]
             per_bucket[key] = BucketStats(
-                batches=len(launches), requests=len(rows),
-                pad_lanes=sum(self.spec.max_batch - n for n in launches),
-                occupancy=float(np.mean(launches)) / self.spec.max_batch,
+                batches=len(launches),
+                requests=len(rows),
+                pad_lanes=sum(row[2] for row in launches),
+                occupancy=float(np.mean([row[3] for row in launches])),
                 mean_wait=float(np.mean([r[2] for r in rows])),
                 mean_ttr=float(np.mean([r[3] for r in rows])))
         per_tenant: dict = {}
@@ -393,7 +701,8 @@ def serve(spec: Optional[ServeSpec] = None, *, clock=None,
     (overrides win).  ``clock`` injects a time source
     (:class:`ManualClock` in tests; wall time otherwise).  Usable as a
     context manager: ``with hts.serve(...) as srv: ...`` flushes and
-    closes on exit.
+    closes on normal exit, aborts (cancels queued futures) on an
+    exception.
     """
     if spec is None:
         spec = ServeSpec()
@@ -404,4 +713,4 @@ def serve(spec: Optional[ServeSpec] = None, *, clock=None,
 
 __all__ = ["serve", "Server", "ServeSpec", "ServeReport", "BucketStats",
            "TenantStats", "CacheInfo", "QueueFullError", "SystemClock",
-           "ManualClock"]
+           "ManualClock", "AUTO_SLICE_STEPS"]

@@ -105,3 +105,39 @@ def sharded_runner(spec: machine.MachineSpec, max_prog: int, devices: int):
     fn = machine.make_machine(spec, max_prog, population=True)
     return jax.jit(shard_map(fn, mesh=mesh, in_specs=P("scenario"),
                              out_specs=P("scenario")))
+
+
+@functools.lru_cache(maxsize=32)
+def sharded_slicer(spec: machine.MachineSpec, max_prog: int,
+                   devices: int) -> machine.ResumableMachine:
+    """The resumable population machine, device-sharded: ``init`` and
+    ``run_slice`` each wrapped in one ``shard_map`` over the same 1-D
+    ``("scenario",)`` mesh as :func:`sharded_runner`.
+
+    The carry and all 9 machine arguments split over the scenario axis;
+    the slice ``budget`` is replicated (every device pauses its own lanes
+    at the same per-lane cycle ceiling).  Lane counts must divide
+    ``devices`` (:func:`pad_lanes`) — the serving engine rounds its lane
+    width up to a device multiple once, so every slice of every launch
+    presents the identical sharded signature.
+    """
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from ..compat import shard_map
+
+    avail = device_count()
+    if not 1 <= devices <= avail:
+        raise ValueError(f"devices={devices} requested but this process "
+                         f"sees {avail} device(s)")
+    mesh = jax.make_mesh((devices,), ("scenario",))
+    rm = machine.make_machine(spec, max_prog, population=True,
+                              resumable=True)
+    init = jax.jit(shard_map(rm.init, mesh=mesh, in_specs=P("scenario"),
+                             out_specs=P("scenario")))
+    run_slice = jax.jit(shard_map(
+        rm.run_slice, mesh=mesh,
+        in_specs=(P("scenario"),) * 10 + (P(),),
+        out_specs=P("scenario")))
+    return machine.ResumableMachine(init=init, run_slice=run_slice,
+                                    collect=rm.collect)

@@ -72,6 +72,37 @@ def test_plan_chunks_partitions_and_sorts(small_pop):
         batch.plan_chunks(progs, max_chunk=4, min_chunk=8)
 
 
+def test_plan_chunks_profile_overrides_static_estimate(small_pop):
+    """profile= replaces the instruction-count proxy with measured step
+    counts: a profile inverting the static order inverts the plan."""
+    n = len(small_pop)
+    profile = list(range(n, 0, -1))              # heaviest first by index
+    plan = batch.plan_chunks(small_pop, max_chunk=2, min_chunk=1,
+                             profile=profile)
+    flat = [i for ch in plan for i in ch]
+    assert flat == list(reversed(range(n)))      # sorted by profile, not len
+    with pytest.raises(ValueError):
+        batch.plan_chunks(small_pop, profile=profile[:-1])   # wrong length
+    with pytest.raises(ValueError):
+        batch.plan_chunks(small_pop, profile=[profile])      # not 1-D
+
+
+def test_plan_chunks_profile_from_population_result(small_pop):
+    """The intended loop: run once, re-chunk on the machine's measured
+    per-lane while-loop trip counts (PopulationResult.steps)."""
+    first = hts.run_many(small_pop, scheduler="hts_spec")
+    steps = first.steps
+    assert steps is not None and steps.shape == (len(small_pop),)
+    assert (steps >= 1).all()
+    # a result object is accepted directly (its .steps is the profile)
+    plan = batch.plan_chunks(small_pop, max_chunk=2, min_chunk=1,
+                             profile=first)
+    flat = [i for ch in plan for i in ch]
+    assert sorted(flat) == list(range(len(small_pop)))
+    ordered = [int(steps[i]) for i in flat]
+    assert ordered == sorted(ordered)            # measured-ascending plan
+
+
 # ---------------------------------------------------------------------------
 # packing
 # ---------------------------------------------------------------------------

@@ -241,11 +241,17 @@ def test_serve_backpressure_queue_full(progs):
     for p in (progs[0], progs[1], progs[2], long):
         srv.submit(p)                            # neither bucket fills
     assert srv.pending == 4
+    # a request that would NOT complete its batch is refused at the bound
     with pytest.raises(hts.QueueFullError):
-        srv.submit(progs[3])
+        srv.submit(long)                         # 2nd-bucket batch: 2/4
+    # but one that COMPLETES a batch is admitted — it launches inline and
+    # frees max_batch slots (refusing it would deadlock a full queue)
+    f4 = srv.submit(progs[3])                    # 1st bucket fills: 4/4
+    assert f4.done() and f4.result(timeout=0).halted
+    assert srv.pending == 1                      # only `long` still queued
     # deadline expiry frees the queue: submit() flushes before admitting
     clock.advance(0.060)
-    f = srv.submit(progs[3])
+    f = srv.submit(progs[4])
     assert srv.pending == 1 and not f.done()
     srv.drain()
     assert f.result(timeout=0).halted
@@ -317,3 +323,169 @@ def test_serve_spec_overrides():
     assert srv.spec.max_batch == 2 and srv.spec.deadline == 0.5
     assert dataclasses.is_dataclass(srv.spec)
     assert isinstance(api._norm_costs(srv.spec.scheduler).name, str)
+    with pytest.raises(ValueError):
+        hts.serve(slice_steps=0)
+    with pytest.raises(ValueError):
+        hts.serve(slice_steps="adaptive")
+
+
+# ---------------------------------------------------------------------------
+# engine bugfix pins (admission cost, launch exception-safety, lifecycle)
+# ---------------------------------------------------------------------------
+def test_serve_submit_prepares_once_and_never_decodes(progs, monkeypatch):
+    """Admission is the hot path: one prepare() per submit and ZERO
+    program decodes — the bucket key reads lengths off the Prepared
+    request instead of running the decoder just to count rows."""
+    from repro.core.hts import isa
+
+    calls = {"prepare": 0, "decode": 0}
+    real_prepare, real_decode = batch.prepare, isa.decode_table
+    monkeypatch.setattr(batch, "prepare", lambda p: (
+        calls.__setitem__("prepare", calls["prepare"] + 1),
+        real_prepare(p))[1])
+    monkeypatch.setattr(isa, "decode_table", lambda code: (
+        calls.__setitem__("decode", calls["decode"] + 1),
+        real_decode(code))[1])
+    srv = hts.serve(max_batch=8, deadline=99.0, clock=hts.ManualClock())
+    srv.submit(progs[0])                         # queued, no launch
+    assert calls == {"prepare": 1, "decode": 0}
+    srv.submit(progs[1])
+    assert calls == {"prepare": 2, "decode": 0}
+
+
+@pytest.mark.parametrize("slice_steps", [None, 32])
+def test_serve_launch_failure_fails_futures_and_restores_queue(
+        progs, monkeypatch, slice_steps):
+    """A launch that raises must fail its own futures and give their slots
+    back — not leak hung futures and permanently shrink the queue."""
+    srv = hts.serve(max_batch=4, max_queue=8, deadline=99.0,
+                    slice_steps=slice_steps, clock=hts.ManualClock())
+    f1 = srv.submit(progs[0])
+    f2 = srv.submit(progs[1])
+
+    def boom(*a, **k):
+        raise RuntimeError("injected pack failure")
+
+    monkeypatch.setattr(batch, "pack_population", boom)
+    with pytest.raises(RuntimeError, match="injected pack failure"):
+        srv.drain()
+    assert srv.pending == 0                      # accounting restored
+    for f in (f1, f2):
+        with pytest.raises(RuntimeError, match="injected pack failure"):
+            f.result(timeout=0)
+    monkeypatch.undo()
+    # the server is still fully serviceable: no leaked pending counts
+    fs = [srv.submit(p) for p in progs]
+    srv.drain()
+    assert srv.pending == 0
+    assert all(f.result(timeout=0).halted for f in fs)
+
+
+def test_serve_post_close_raises_everywhere(progs):
+    srv = hts.serve(max_batch=4, deadline=99.0, clock=hts.ManualClock())
+    f = srv.submit(progs[0])
+    srv.close()                                  # flushes
+    assert f.done()
+    srv.close()                                  # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(progs[0])
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.poll()
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.drain()
+
+
+def test_serve_exit_on_exception_aborts_queued_work(progs):
+    """Leaving the with-block on an exception cancels queued futures
+    instead of burning simulation time on results nobody will read."""
+    with pytest.raises(KeyError):
+        with hts.serve(max_batch=4, deadline=99.0,
+                       clock=hts.ManualClock()) as srv:
+            f = srv.submit(progs[0])
+            raise KeyError("caller bug")
+    assert f.cancelled() and srv.pending == 0
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(progs[0])
+    # normal exit still flushes
+    with hts.serve(max_batch=4, deadline=99.0,
+                   clock=hts.ManualClock()) as srv:
+        f = srv.submit(progs[0])
+    assert f.result(timeout=0).halted
+
+
+# ---------------------------------------------------------------------------
+# slice-and-refill continuous batching
+# ---------------------------------------------------------------------------
+#: distinct max_cycles => this module's sliced cache tests own their runner
+SLICED_CACHE_CYCLES = 4_999_998
+
+
+@pytest.mark.parametrize("event_skip", [True, False])
+def test_serve_sliced_refill_differential_fuzz(event_skip):
+    """The tentpole differential: slice-and-refill serving returns the
+    same per-request results as a direct hts.run — seeded merged and
+    multi-frontend scenarios, a queue always deeper than the lane width
+    so every batch actually refills mid-flight."""
+    seeds = list(range(25)) if event_skip else list(range(40, 53))
+    progs = []
+    for s in seeds:
+        multi = s % 5 == 0
+        sc = workloads.generate_scenario(s, n_tenants=2, frontends=multi,
+                                         kernels=workloads.CHEAP_MIX)
+        progs.append(sc.multi if multi else sc.merged)
+    srv = hts.serve(max_batch=4, max_queue=64, deadline=99.0,
+                    event_skip=event_skip, slice_steps=24,
+                    clock=hts.ManualClock())
+    with srv:
+        futs = [srv.submit(p) for p in progs]
+        srv.drain()
+        for p, f in zip(progs, futs):
+            got = f.result(timeout=0)
+            ref = hts.run(p, scheduler="hts_spec", n_fu=2,
+                          event_skip=event_skip)
+            assert got.halted and got.cycles == ref.cycles, p.name
+            assert got.stall_cycles == ref.stall_cycles, p.name
+            assert got.spec_aborted == ref.spec_aborted, p.name
+            assert got.fe_stall == ref.fe_stall, p.name
+            assert got.schedule == ref.schedule, p.name
+    rep = srv.report()
+    assert rep.requests == len(progs)
+    # refill is the point: lanes stay busier than a padded static launch
+    assert all(b.occupancy > 0.5 for b in rep.per_bucket.values())
+
+
+def test_serve_sliced_never_recompiles_across_refills(progs):
+    """The cache guarantee extends to compaction: one carry-init compile
+    plus one slice compile per bucket, frozen across launches, refills,
+    and adaptive (auto) slice budgets."""
+    spec = hts.ServeSpec(max_batch=3, max_queue=32, deadline=99.0,
+                         slice_steps="auto",
+                         max_cycles=SLICED_CACHE_CYCLES)
+    srv = hts.serve(spec, clock=hts.ManualClock())
+    [srv.submit(p) for p in progs[:3]]
+    srv.drain()
+    warm = srv.cache_info()
+    assert warm.misses == 1 and warm.entries == 1
+    assert warm.jit_compiles == 2                # carry init + slice
+    for wave in (progs[3:6], progs[:4], progs[1:6]):
+        fs = [srv.submit(p) for p in wave]
+        srv.drain()
+        assert all(f.done() for f in fs)
+    after = srv.cache_info()
+    assert after.jit_compiles == warm.jit_compiles   # frozen across refills
+    assert after.misses == 1
+
+
+def test_serve_sliced_devices1_matches_unsharded(progs):
+    """The sharded resumable path on one device (always legal) serves the
+    same results as the plain sliced server and the batched reference."""
+    got = {}
+    for devices in (None, 1):
+        with hts.serve(max_batch=2, max_queue=16, deadline=99.0,
+                       devices=devices, slice_steps=48,
+                       clock=hts.ManualClock()) as srv:
+            futs = [srv.submit(p) for p in progs]
+            srv.drain()
+            got[devices] = [f.result(timeout=0).cycles for f in futs]
+    ref = hts.run_many(progs, scheduler="hts_spec")
+    assert got[None] == got[1] == [int(c) for c in ref.cycles]

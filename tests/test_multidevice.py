@@ -239,6 +239,40 @@ def test_serve_sharded_matches_unsharded():
     assert "SERVE_SHARD_OK" in out
 
 
+def test_serve_sliced_sharded_matches_run():
+    """Slice-and-refill compaction under devices=2: sharded lanes are
+    harvested and refilled mid-flight, every served result matches a
+    direct hts.run, and the sliced runner pair (carry init + slice) adds
+    zero compiles after its first launch."""
+    out = run_py("""
+        from repro.core import hts
+        from repro.core.hts import workloads
+
+        progs = [workloads.generate_scenario(60 + s, n_tenants=2,
+                                             kernels=workloads.CHEAP_MIX
+                                             ).merged for s in range(10)]
+        ref = [hts.run(p, scheduler="hts_spec", n_fu=2).cycles
+               for p in progs]
+        with hts.serve(max_batch=4, max_queue=32, deadline=99.0,
+                       devices=2, slice_steps=64,
+                       clock=hts.ManualClock()) as srv:
+            futs = [srv.submit(p) for p in progs]
+            srv.drain()                 # one sliced launch, 10 reqs thru 4
+            got = [f.result(timeout=0).cycles for f in futs]
+            warm = srv.cache_info()
+            fs = [srv.submit(p) for p in progs[:5]]
+            srv.drain()
+            assert all(f.done() for f in fs)
+            after = srv.cache_info()
+            assert after.jit_compiles == warm.jit_compiles, (warm, after)
+            occ = srv.report().per_bucket
+            assert all(b.occupancy > 0.5 for b in occ.values()), occ
+        assert got == ref, (got, ref)
+        print("SERVE_SLICED_SHARD_OK")
+    """, devices=2)
+    assert "SERVE_SLICED_SHARD_OK" in out
+
+
 @pytest.mark.slow
 def test_mini_dryrun_multipod():
     """The dry-run path end-to-end on a shrunken (2,2,2) multi-pod mesh with
