@@ -1,0 +1,326 @@
+"""Design-space explorer: FU mixes under an area budget, Pareto-ranked.
+
+The point of heterogeneous cost tables is architectural search: with
+per-(class, unit) latency multipliers as *traced runtime data*, a whole
+design grid — every FU mix × both issue arbiters — evaluates as ONE
+compiled ``hts.run_many`` batch (cost tables, FU counts, and the eft flag
+all ride the scenario vmap axis; nothing recompiles between design
+points).
+
+The explored space
+------------------
+Two unit implementations of the hot class (``dct``, the only class the
+workload exercises):
+
+* **fast** — cost multiplier 1, area 3 (the paper's calibrated unit);
+* **slow** — cost multiplier 3, area 1 (a cheaper, 3x-latency variant).
+
+A *design* is a (n_slow, n_fast) mix with total area ``3*n_fast + n_slow``
+within the budget.  Slow units sit at the LOW flattened indices, where the
+baseline greedy arbiter looks first — so greedy genuinely pays for slow
+units while the ``eft`` arbiter routes around them whenever a fast unit is
+free; each design is evaluated under both arbiters.
+
+The workload is the repo's standard contended shape (one latency-sensitive
+chain + greedy same-class floods, distinct pids), so every design point
+reports **makespan** (total cycles), **area**, and **fairness** (max
+per-tenant slowdown vs that tenant's solo run *on the same design* — solo
+baselines are one more batched run).  A point is Pareto-optimal if no
+other point is <= on all three axes and < on one.
+
+Honesty + verification:
+
+* every reported design point is ``hts.compare``-verified — golden oracle
+  ≡ compiled machine with event-skip on AND off;
+* the same grid re-runs with uniform (all-ones) cost tables, where EFT
+  provably degrades to greedy — the measured ``uniform_eft_delta_cycles``
+  is committed (expected: exactly 0 on every design).
+
+    PYTHONPATH=src python -m benchmarks.explorer            # writes JSON
+    PYTHONPATH=src python -m benchmarks.explorer --smoke    # CI-sized run
+
+JSON lands in ``BENCH_explorer.json`` (repo root by default); see
+docs/BENCHMARKS.md for the schema.  Headline acceptance: >= 8 Pareto
+points under the area budget, every point verified, and zero
+uniform-cost eft-vs-greedy delta.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.core import hts
+from repro.core.hts.builder import Program
+from repro.core.hts.policy import SchedPolicy
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_explorer.json"
+
+#: the two dct-unit implementations (cost multiplier, area units)
+UNIT_TYPES = {"fast": {"cost": 1, "area": 3}, "slow": {"cost": 3, "area": 1}}
+AREA_BUDGET = 9
+MAX_UNITS = 4          # machine pool width per class
+HI_PID = 1
+
+
+# ---------------------------------------------------------------------------
+# workload: the contended multi-tenant shape (all-dct, so the dct mix IS
+# the design)
+# ---------------------------------------------------------------------------
+def _hi_chain(chain: int = 6) -> Program:
+    p = Program("hi", region_base=0x100)
+    frame = p.input(0x10, 4, "frame")
+    with p.process(HI_PID):
+        prev = frame
+        for i in range(chain):
+            prev = p.task("dct", in_=prev, out=4, in_size=4, tid=i)
+    return p
+
+
+def _greedy(pid: int, tasks: int = 8) -> Program:
+    p = Program(f"greedy{pid}", region_base=0x180 + 0x80 * (pid - 2))
+    frame = p.input(0x10, 4, "frame")
+    with p.process(pid):
+        for i in range(tasks):
+            p.task("dct", in_=frame, out=4, tid=i & 0xF)
+    return p
+
+
+def build_workload(n_greedy: int = 2):
+    """(merged program, {pid: solo program}) of the contended shape."""
+    tenants = [_hi_chain()] + [_greedy(2 + k) for k in range(n_greedy)]
+    merged = Program.merge(tenants, "explorer_contended",
+                           require_distinct_pids=True)
+    pids = [HI_PID] + [2 + k for k in range(n_greedy)]
+    return merged, dict(zip(pids, tenants))
+
+
+# ---------------------------------------------------------------------------
+# the design grid
+# ---------------------------------------------------------------------------
+def enumerate_designs(area_budget: int = AREA_BUDGET,
+                      max_units: int = MAX_UNITS):
+    """Every (n_slow, n_fast) dct mix within the area budget.
+
+    Slow units first in the cost row — the adversarial layout for the
+    greedy arbiter.  Returns dicts with the mix, its area, the per-class
+    ``n_fu`` override and the ``fu_cost`` row.
+    """
+    fast, slow = UNIT_TYPES["fast"], UNIT_TYPES["slow"]
+    designs = []
+    for n_fast in range(max_units + 1):
+        for n_slow in range(max_units + 1 - n_fast):
+            if n_fast + n_slow == 0:
+                continue
+            area = n_fast * fast["area"] + n_slow * slow["area"]
+            if area > area_budget:
+                continue
+            designs.append({
+                "name": f"{n_slow}slow+{n_fast}fast",
+                "n_slow": n_slow, "n_fast": n_fast,
+                "area": area,
+                "n_units": n_slow + n_fast,
+                "cost_row": (slow["cost"],) * n_slow
+                            + (fast["cost"],) * n_fast,
+            })
+    return designs
+
+
+def _lane_plan(designs, modes=("greedy", "eft"), uniform: bool = False):
+    """Per-lane (n_fu, fu_cost, policy) for one batched grid evaluation."""
+    n_fu, fu_cost, pols, keys = [], [], [], []
+    for d in designs:
+        for mode in modes:
+            n_fu.append({"dct": d["n_units"]})
+            fu_cost.append(None if uniform else {"dct": d["cost_row"]})
+            pols.append(SchedPolicy(issue_mode=mode))
+            keys.append((d["name"], mode))
+    return n_fu, fu_cost, pols, keys
+
+
+def _norm_point_n_fu(spec):
+    from repro.core.hts import costs
+    return tuple(spec.get("dct", 1) if costs.FUNC_NAMES[c] == "dct" else 1
+                 for c in range(costs.NUM_FUNCS))
+
+
+def evaluate_grid(designs, *, modes=("greedy", "eft"),
+                  uniform: bool = False, scheduler: str = "hts_spec"):
+    """The whole design × arbiter grid as ONE run_many batch (plus one
+    more for the per-tenant solo baselines).  Returns per-(design, mode)
+    rows with makespan, area, and max per-tenant slowdown."""
+    merged, solos = build_workload()
+    n_fu, fu_cost, pols, keys = _lane_plan(designs, modes, uniform)
+    n_fu = [_norm_point_n_fu(s) for s in n_fu]
+    shared = hts.run_many([merged] * len(keys), scheduler=scheduler,
+                          n_fu=n_fu, fu_cost=fu_cost, policy=pols)
+    # solo baselines: every tenant on every (design, mode) lane
+    pids = list(solos)
+    solo_res = hts.run_many(
+        [solos[p] for _ in keys for p in pids], scheduler=scheduler,
+        n_fu=[f for f in n_fu for _ in pids],
+        fu_cost=[c for c in fu_cost for _ in pids],
+        policy=[p for p in pols for _ in pids])
+    rows = []
+    for i, (dname, mode) in enumerate(keys):
+        d = next(x for x in designs if x["name"] == dname)
+        solo_c = {p: int(solo_res.cycles[i * len(pids) + j])
+                  for j, p in enumerate(pids)}
+        r = shared[i]
+        slowdowns = {p: r.app_makespan(p) / solo_c[p] for p in pids}
+        rows.append({
+            "design": dname, "mode": mode,
+            "area": d["area"], "n_slow": d["n_slow"], "n_fast": d["n_fast"],
+            "makespan": int(shared.cycles[i]),
+            "max_slowdown": round(max(slowdowns.values()), 4),
+        })
+    return rows
+
+
+def pareto(rows):
+    """Non-dominated rows, minimising (makespan, area, max_slowdown)."""
+    def key(r):
+        return (r["makespan"], r["area"], r["max_slowdown"])
+
+    def dominates(a, b):
+        ka, kb = key(a), key(b)
+        return all(x <= y for x, y in zip(ka, kb)) and ka != kb
+
+    return [r for r in rows
+            if not any(dominates(o, r) for o in rows if o is not r)]
+
+
+def verify_grid(designs, *, modes=("greedy", "eft"),
+                schedulers=("hts_spec",)) -> dict:
+    """Every design point compare-verified: golden ≡ machine, event-skip
+    on and off (compare raises on the first divergence)."""
+    merged, _ = build_workload()
+    n_fu, fu_cost, pols, keys = _lane_plan(designs, modes)
+    rep = hts.compare([merged] * len(keys),
+                      n_fu=[_norm_point_n_fu(s) for s in n_fu],
+                      fu_cost=fu_cost, policy=pols, schedulers=schedulers)
+    return {"verified": True, "n_points": len(rep),
+            "schedulers": list(rep.schedulers), "n_modes": rep.n_modes}
+
+
+def trajectory(*, area_budget: int = AREA_BUDGET,
+               verify_all: bool = True, verify_n: int = 4) -> dict:
+    designs = enumerate_designs(area_budget)
+    rows = evaluate_grid(designs)
+    frontier = pareto(rows)
+    for r in rows:
+        r["on_frontier"] = r in frontier
+
+    # honesty check: uniform costs => eft degrades to greedy exactly
+    uni = evaluate_grid(designs, uniform=True)
+    by_design = {}
+    for r in uni:
+        by_design.setdefault(r["design"], {})[r["mode"]] = r["makespan"]
+    uniform_delta = max(abs(m["eft"] - m["greedy"])
+                        for m in by_design.values())
+
+    verified = verify_grid(designs if verify_all else designs[:verify_n])
+
+    het = [r for r in rows if r["n_slow"] and r["n_fast"]]
+    eft_wins = sum(
+        1 for r in het if r["mode"] == "eft" and r["makespan"] < next(
+            o["makespan"] for o in het
+            if o["design"] == r["design"] and o["mode"] == "greedy"))
+    best = {m: min(r["makespan"] for r in rows if r["mode"] == m)
+            for m in ("greedy", "eft")}
+    return {
+        "bench": "explorer",
+        "workload": "contended: 1 chain (pid 1) + 2 greedy dct floods",
+        "unit_types": UNIT_TYPES,
+        "area_budget": area_budget,
+        "n_designs": len(designs),
+        "designs": [{k: d[k] for k in
+                     ("name", "n_slow", "n_fast", "area", "cost_row")}
+                    for d in designs],
+        "points": rows,
+        "pareto_frontier": frontier,
+        "uniform_eft_delta_cycles": uniform_delta,
+        "verified": verified,
+        "headline": {
+            "n_designs": len(designs),
+            "n_points": len(rows),
+            "n_frontier": len(frontier),
+            "frontier_min_points": 8,
+            "met": len(frontier) >= 8,
+            "best_makespan_greedy": best["greedy"],
+            "best_makespan_eft": best["eft"],
+            "eft_wins_mixed_designs": eft_wins,
+            "n_mixed_designs": len(het) // 2,
+            "uniform_eft_delta_cycles": uniform_delta,
+            "all_points_compare_verified": verified["verified"]
+                and verified["n_points"] == len(rows),
+        },
+    }
+
+
+def section():
+    """``benchmarks.run`` integration: (name, us, derived) rows."""
+    import time
+    designs = enumerate_designs()
+    t0 = time.perf_counter()
+    rows = evaluate_grid(designs)
+    us = (time.perf_counter() - t0) * 1e6
+    frontier = pareto(rows)
+    return [(f"explorer/grid{len(rows)}/budget{AREA_BUDGET}", us, {
+        "n_designs": len(designs),
+        "n_frontier": len(frontier),
+        "best_makespan_eft": min(r["makespan"] for r in rows
+                                 if r["mode"] == "eft"),
+        "best_makespan_greedy": min(r["makespan"] for r in rows
+                                    if r["mode"] == "greedy"),
+    })]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--area-budget", type=int, default=AREA_BUDGET)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (smaller budget, 4 points verified; "
+                         "no JSON unless --out is given)")
+    ap.add_argument("--out", default=None,
+                    help=f"output path (default {DEFAULT_OUT}; "
+                         "smoke runs write no JSON unless set)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        data = trajectory(area_budget=min(args.area_budget, 7),
+                          verify_all=False, verify_n=4)
+    else:
+        data = trajectory(area_budget=args.area_budget)
+
+    out = None
+    if args.out:
+        out = pathlib.Path(args.out)
+    elif not args.smoke:
+        out = DEFAULT_OUT
+    if out is not None:
+        out.write_text(json.dumps(data, indent=2, default=float) + "\n")
+        print(f"wrote {out}")
+
+    h = data["headline"]
+    print(f"  {data['n_designs']} designs within area {data['area_budget']}"
+          f" x 2 arbiters = {h['n_points']} points, one batched machine")
+    for r in data["pareto_frontier"]:
+        print(f"    frontier: {r['design']:<14} {r['mode']:<6} "
+              f"makespan {r['makespan']:>6}  area {r['area']:>2}  "
+              f"slowdown {r['max_slowdown']:.2f}")
+    print(f"  best makespan: greedy {h['best_makespan_greedy']}, "
+          f"eft {h['best_makespan_eft']} "
+          f"(eft wins {h['eft_wins_mixed_designs']}/{h['n_mixed_designs']} "
+          "mixed designs)")
+    print(f"  uniform-cost eft-vs-greedy delta: "
+          f"{h['uniform_eft_delta_cycles']} cycles")
+    print(f"  frontier {h['n_frontier']} points (target >= "
+          f"{h['frontier_min_points']}: {'MET' if h['met'] else 'NOT MET'}); "
+          f"verified {data['verified']['n_points']} points x "
+          f"{data['verified']['n_modes']} modes")
+
+
+if __name__ == "__main__":
+    main()

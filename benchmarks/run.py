@@ -10,8 +10,8 @@ from __future__ import annotations
 import argparse
 import json
 
-from benchmarks import extensions, frontend, multitenant, paper_figs, \
-    population, priority, serving
+from benchmarks import explorer, extensions, frontend, multitenant, \
+    paper_figs, population, priority, serving
 
 SECTIONS = {
     "tableII": paper_figs.table2,
@@ -25,6 +25,7 @@ SECTIONS = {
     "population": population.section,
     "frontend": frontend.section,
     "serving": serving.section,
+    "explorer": explorer.section,
     "ablation": extensions.design_ablation,
 }
 

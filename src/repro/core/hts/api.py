@@ -27,9 +27,10 @@ Both return the same :class:`Result` with identical per-task schedule rows
 The axes model
 --------------
 Every argument of the compiled machine is a runtime input, so batching is
-a choice of ``vmap`` axes over its 9-argument signature (the 9th is the
-per-tenant frontend stream table, ``frontend.py``).  Three named axes
-compose (``_vmapped`` stacks them outermost-first):
+a choice of ``vmap`` axes over its 11-argument signature (the 9th/10th
+are the heterogeneous FU cost table and the eft-arbiter flag, the 11th
+the per-tenant frontend stream table, ``frontend.py``).  Three named
+axes compose (``_vmapped`` stacks them outermost-first):
 
 * the **scenario** axis — everything batched: a *population* of programs,
   each with its own images, FU counts, policy tables and stream tables.
@@ -82,7 +83,7 @@ import numpy as np
 from . import batch, golden, machine
 from .batch import PackedPopulation
 from .costs import (ALL_SCHEDULERS, FUNC_NAMES, NUM_FUNCS, SchedulerCosts,
-                    costs_by_name)
+                    costs_by_name, fu_cost_tuple, norm_fu_cost)
 from .frontend import StreamSet
 from .golden import HtsParams
 from .policy import SchedPolicy
@@ -381,12 +382,20 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
         params: HtsParams = HtsParams(), event_skip: bool = True,
         max_cycles: int = 5_000_000, max_prog: int = 256,
         max_fu_per_class: int = 16, check: bool = True,
-        policy: Optional[SchedPolicy] = None) -> Result:
+        policy: Optional[SchedPolicy] = None, fu_cost=None) -> Result:
     """Simulate ``program`` under one scheduler cost model.
 
     ``policy`` selects the RS arbitration (per-pid priority weights + FU
     quotas); when omitted, a policy attached to the program (e.g. by
     ``Program.merge(priorities=...)``) applies, then ``params.policy``.
+
+    ``fu_cost`` gives FU instances heterogeneous latency: any form
+    :func:`~repro.core.hts.costs.norm_fu_cost` accepts (a
+    ``{class: row_or_scalar}`` mapping or full per-class table of integer
+    multipliers — unit ``u`` of class ``c`` executes in
+    ``FUNC_CYCLES[c] * fu_cost[c, u]`` cycles).  Resolution: explicit
+    argument > ``params.fu_cost``.  Cost tables are runtime data to the
+    compiled machine — sweeping them never recompiles.
 
     Raises :class:`SimulationError` (naming the program and scheduler) if the
     machine fails to drain within ``max_cycles`` — pass ``check=False`` to
@@ -400,6 +409,7 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
     # frontend arbitration weights resolved from the effective policy
     stream_tab = (prep.streams.table(pol) if prep.streams is not None
                   else None)
+    eff_cost = fu_cost if fu_cost is not None else params.fu_cost
 
     t0 = time.perf_counter()
     if backend == "jax":
@@ -409,13 +419,14 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
                                event_skip=event_skip, max_cycles=max_cycles,
                                max_fu_per_class=max_fu_per_class,
                                max_prog=max_prog, policy=pol,
-                               streams=stream_tab)
+                               fu_cost=eff_cost, streams=stream_tab)
         wall = (time.perf_counter() - t0) * 1e6
         result = _machine_result(prep.name, cost.name, fu, out, wall, pol,
                                  max_fu_per_class, prep.streams)
     elif backend == "golden":
         g = golden.run(prep.code, cost,
-                       dataclasses.replace(params, n_fu=fu, policy=pol),
+                       dataclasses.replace(params, n_fu=fu, policy=pol,
+                                           fu_cost=fu_cost_tuple(eff_cost)),
                        prep.mem_init, prep.effects, max_cycles=max_cycles,
                        streams=stream_tab)
         wall = (time.perf_counter() - t0) * 1e6
@@ -528,14 +539,16 @@ def run_many(programs, *,
              max_cycles: int = 5_000_000, max_prog: Optional[int] = None,
              max_fu_per_class: Optional[int] = None,
              policy=None, check: bool = True,
-             devices: Optional[int] = None) -> PopulationResult:
+             devices: Optional[int] = None, fu_cost=None) -> PopulationResult:
     """Simulate a population of programs as **one vmapped machine call**.
 
     ``programs`` is a sequence of anything :func:`run` accepts (or an
     already-packed :class:`~repro.core.hts.batch.PackedPopulation`, in
-    which case ``n_fu``/``policy``/``max_prog`` come from the pack).
-    ``n_fu`` and ``policy`` accept either one shared value or one entry
-    per scenario — they are per-scenario arrays on the scenario axis.
+    which case ``n_fu``/``policy``/``max_prog``/``fu_cost`` come from the
+    pack).  ``n_fu``, ``policy`` and ``fu_cost`` accept either one shared
+    value or one entry per scenario — they are per-scenario arrays on the
+    scenario axis (heterogeneous cost tables ride the same vmap axis as
+    FU counts, so a cost sweep shares one compilation).
 
     One compilation serves every population of the same shape bucket
     (``batch.prog_bucket``); the batched call's wall-clock is the whole
@@ -559,7 +572,8 @@ def run_many(programs, *,
 
     pop = (programs if isinstance(programs, PackedPopulation)
            else batch.pack_population(programs, params=params, n_fu=n_fu,
-                                      policy=policy, max_prog=max_prog))
+                                      policy=policy, fu_cost=fu_cost,
+                                      max_prog=max_prog))
     cost = _norm_costs(scheduler)
 
     if devices is not None and backend != "jax":
@@ -569,7 +583,7 @@ def run_many(programs, *,
         results = tuple(
             run(prep, scheduler=cost, n_fu=tuple(int(x) for x in pop.n_fu[i]),
                 backend="golden", params=pop.params, max_cycles=max_cycles,
-                policy=pop.policies[i], check=check)
+                policy=pop.policies[i], fu_cost=pop.fu_cost[i], check=check)
             for i, prep in enumerate(pop.preps))
         wall = (time.perf_counter() - t0) * 1e6
         return PopulationResult(
@@ -669,14 +683,15 @@ class SweepResult:
 
 
 # ---------------------------------------------------------------------------
-# the axes model: named vmap axes over the machine's 9-argument signature
-# (ftab, p_len, n_fu, mem, eff, prio, quota, rs_cap, streams) — see module
-# docstring
+# the axes model: named vmap axes over the machine's 11-argument signature
+# (ftab, p_len, n_fu, mem, eff, prio, quota, rs_cap, fu_cost, eft, streams)
+# — see module docstring
 # ---------------------------------------------------------------------------
-SCENARIO_AXIS = (0, 0, 0, 0, 0, 0, 0, 0, 0)          # a population, batched
-SCENARIO_SHARED_FU_AXIS = (0, 0, None, 0, 0, 0, 0, 0, 0)  # population × FU
-N_FU_AXIS = (None, None, 0, None, None, None, None, None, None)  # Fig-10
-POLICY_AXIS = (None, None, None, None, None, 0, 0, 0, None)  # policy sweep
+SCENARIO_AXIS = (0,) * 11                             # a population, batched
+SCENARIO_SHARED_FU_AXIS = (0, 0, None, 0, 0, 0, 0, 0, 0, 0, 0)  # pop × FU
+N_FU_AXIS = (None, None, 0) + (None,) * 8            # Fig-10 FU scaling
+POLICY_AXIS = (None, None, None, None, None, 0, 0, 0,
+               None, 0, None)                        # policy sweep (incl. eft)
 
 
 @functools.lru_cache(maxsize=32)
@@ -750,7 +765,7 @@ def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),
           params: HtsParams = HtsParams(), event_skip: bool = True,
           max_cycles: int = 50_000_000, max_prog: Optional[int] = None,
           max_fu_per_class: Optional[int] = None,
-          policy: Optional[SchedPolicy] = None) -> SweepResult:
+          policy: Optional[SchedPolicy] = None, fu_cost=None) -> SweepResult:
     """Simulate ``program`` across FU configurations in one compiled,
     ``vmap``-batched machine per scheduler (the Fig-10 machinery).
 
@@ -758,7 +773,10 @@ def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),
     class) or a per-class tuple.  ``schedulers`` accepts names from
     ``costs.ALL_SCHEDULERS`` or :class:`SchedulerCosts` objects.
     ``policy`` applies one :class:`SchedPolicy` to every FU point (it is
-    runtime data to the compiled machine, so changing it never recompiles).
+    runtime data to the compiled machine, so changing it never recompiles);
+    ``fu_cost`` likewise applies one heterogeneous cost table to every
+    point — also runtime data, so a design-space explorer can sweep cost
+    tables and FU mixes through one compilation.
 
     **Population mode**: handed a sequence of programs (or a
     :class:`~repro.core.hts.batch.PackedPopulation`), the scenario axis
@@ -775,7 +793,7 @@ def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),
     if _is_population(program):
         pop = (program if isinstance(program, PackedPopulation)
                else batch.pack_population(program, params=params,
-                                          policy=policy,
+                                          policy=policy, fu_cost=fu_cost,
                                           max_prog=max_prog))
         name = f"<population of {len(pop)}>"
         # per-scenario n_fu from the pack is overridden by the swept axis;
@@ -796,15 +814,20 @@ def sweep(program, *, n_fu=(1, 2, 4), schedulers=("naive", "hts_spec"),
         mem, eff = machine.images(params, prep.mem_init, prep.effects)
         stream_tab = (prep.streams.table(pol) if prep.streams is not None
                       else batch.StreamSet.single(p_len).table())
+        eff_cost = fu_cost if fu_cost is not None else params.fu_cost
         args = [jnp.asarray(ftab), jnp.asarray(p_len, jnp.int32), n_fu_arr,
                 jnp.asarray(mem), jnp.asarray(eff),
                 jnp.asarray(pol.weight_array(), jnp.int32),
                 jnp.asarray(pol.quota_array(), jnp.int32),
                 jnp.asarray(pol.rs_cap_array(), jnp.int32),
+                jnp.asarray(norm_fu_cost(eff_cost), jnp.int32),
+                jnp.asarray(1 if pol.issue_mode == "eft" else 0, jnp.int32),
                 jnp.asarray(stream_tab, jnp.int32)]
         axes = (N_FU_AXIS,)
-        # the policy is runtime data — keep it out of the compilation key
-        params_c = dataclasses.replace(params, policy=SchedPolicy())
+        # policy + cost tables are runtime data — keep them out of the
+        # compilation key
+        params_c = dataclasses.replace(params, policy=SchedPolicy(),
+                                       fu_cost=None)
         point_names = [f"{name} @ {p}" for p in points]
 
     if max_fu_per_class is None:
@@ -900,7 +923,7 @@ def compare_population(programs, *,
                        max_cycles: int = 5_000_000,
                        max_prog: Optional[int] = None,
                        max_fu_per_class: Optional[int] = None,
-                       policy=None,
+                       policy=None, fu_cost=None,
                        devices: Optional[int] = None) -> PopulationCompareReport:
     """Differential verification of a whole population: one vmapped machine
     batch per (scheduler, event-skip mode), checked scenario-by-scenario
@@ -914,7 +937,8 @@ def compare_population(programs, *,
     """
     pop = (programs if isinstance(programs, PackedPopulation)
            else batch.pack_population(programs, params=params, n_fu=n_fu,
-                                      policy=policy, max_prog=max_prog))
+                                      policy=policy, fu_cost=fu_cost,
+                                      max_prog=max_prog))
     if max_fu_per_class is None:
         max_fu_per_class = max(4, pop.widest_fu)
     cycles: dict[str, np.ndarray] = {}
@@ -954,9 +978,13 @@ def compare(program, *,
             params: HtsParams = HtsParams(),
             max_cycles: int = 5_000_000, max_prog: Optional[int] = None,
             max_fu_per_class: Optional[int] = None,
-            policy: Optional[SchedPolicy] = None):
+            policy: Optional[SchedPolicy] = None, fu_cost=None):
     """Differential execution: golden oracle vs the compiled JAX machine with
     event-skip **on and off**, for every scheduler cost model.
+
+    ``fu_cost`` threads a heterogeneous per-(class, unit) cost table through
+    every execution, so heterogeneous latency and the ``eft`` arbiter are
+    differentially verified by the same machinery as everything else.
 
     ``policy`` applies one :class:`SchedPolicy` to every execution (defaults
     to the program-attached policy, e.g. from ``Program.merge(priorities=
@@ -979,7 +1007,8 @@ def compare(program, *,
         return compare_population(
             program, schedulers=schedulers, n_fu=n_fu, params=params,
             max_cycles=max_cycles, max_prog=max_prog,
-            max_fu_per_class=max_fu_per_class, policy=policy)
+            max_fu_per_class=max_fu_per_class, policy=policy,
+            fu_cost=fu_cost)
     prep = _prepare(program)
     if max_prog is None:
         max_prog = 256
@@ -995,13 +1024,14 @@ def compare(program, *,
         names.append(cost.name)
         g = run(prep, scheduler=cost, n_fu=fu, backend="golden",
                 params=params, max_cycles=max_cycles, max_prog=max_prog,
-                policy=policy)
+                policy=policy, fu_cost=fu_cost)
         gold_rows = g.schedule_tuple()
         for event_skip in (True, False):
             m = run(prep, scheduler=cost, n_fu=fu, backend="jax",
                     params=params, event_skip=event_skip,
                     max_cycles=max_cycles, max_prog=max_prog,
-                    max_fu_per_class=max_fu_per_class, policy=policy)
+                    max_fu_per_class=max_fu_per_class, policy=policy,
+                    fu_cost=fu_cost)
             mode = f"jax event_skip={'on' if event_skip else 'off'}"
             if m.cycles != g.cycles:
                 raise MismatchError(

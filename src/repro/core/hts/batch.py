@@ -34,7 +34,7 @@ import numpy as np
 
 from . import isa, machine
 from .builder import BuiltProgram, Program
-from .costs import NUM_FUNCS
+from .costs import NUM_FUNCS, norm_fu_cost
 from .frontend import STREAM_FIELDS, MultiProgram, StreamSet
 from .golden import HtsParams
 from .policy import SchedPolicy
@@ -207,6 +207,10 @@ class PackedPopulation:
     * ``n_fu`` (N, NUM_FUNCS) — per-scenario accelerator counts;
     * ``prio`` / ``quota`` / ``rs_cap`` (N, NUM_PIDS) — per-scenario
       scheduling-policy tables;
+    * ``fu_cost`` (N, NUM_FUNCS, FU_COST_WIDTH) — per-scenario
+      per-(class, unit) execution-latency multipliers (all ones =
+      homogeneous pool); ``eft`` (N,) — per-scenario EFT-issue flags
+      (the lowered ``policy.issue_mode``);
     * ``streams`` (N, max_streams, 4) — per-scenario frontend stream
       tables (``frontend.STREAM_FIELDS``), padded with inactive rows
       (``end <= start`` — never fetched); single-frontend scenarios get
@@ -228,6 +232,8 @@ class PackedPopulation:
     prio: np.ndarray
     quota: np.ndarray
     rs_cap: np.ndarray
+    fu_cost: np.ndarray
+    eft: np.ndarray
     streams: np.ndarray
     max_prog: int
     params: HtsParams               # shared capacities (policy stripped)
@@ -241,9 +247,10 @@ class PackedPopulation:
         return int(self.n_fu.max())
 
     def machine_args(self):
-        """The 9 batched arrays in ``machine.make_machine`` run order."""
+        """The 11 batched arrays in ``machine.make_machine`` run order."""
         return (self.ftab, self.p_len, self.n_fu, self.mem, self.eff,
-                self.prio, self.quota, self.rs_cap, self.streams)
+                self.prio, self.quota, self.rs_cap, self.fu_cost,
+                self.eft, self.streams)
 
     def stream_table(self, i: int) -> np.ndarray:
         """Scenario ``i``'s stream table without the batch padding rows
@@ -286,10 +293,30 @@ def _broadcast_policy(policy, preps: Sequence[Prepared],
                  for pol, p in zip(pols, preps))
 
 
+def _broadcast_fu_cost(fu_cost, n: int, params: HtsParams) -> np.ndarray:
+    """One shared cost-table spec or one per scenario → (N, NF, WIDTH).
+
+    A ``None`` entry (or a ``None`` argument) falls back to
+    ``params.fu_cost`` (all ones if that is unset too).  A single spec is
+    anything ``costs.norm_fu_cost`` accepts — a mapping or a full table of
+    per-class rows; per-scenario specs are a length-N sequence of those.
+    """
+    if fu_cost is None:
+        return np.tile(norm_fu_cost(params.fu_cost), (n, 1, 1))
+    if (isinstance(fu_cost, (list, tuple)) and len(fu_cost) == n
+            and all(x is None or np.ndim(x) == 2
+                    or isinstance(x, dict) for x in fu_cost)):
+        return np.stack([norm_fu_cost(x if x is not None
+                                      else params.fu_cost)
+                         for x in fu_cost])
+    return np.tile(norm_fu_cost(fu_cost), (n, 1, 1))
+
+
 def pack_population(programs: Sequence,
                     *, params: HtsParams = HtsParams(),
                     n_fu: Union[int, Sequence] = 2,
                     policy=None,
+                    fu_cost=None,
                     max_prog: Optional[int] = None,
                     max_streams: Optional[int] = None) -> PackedPopulation:
     """Pack N programs into one :class:`PackedPopulation`.
@@ -298,6 +325,9 @@ def pack_population(programs: Sequence,
     ``n_fu`` — shared spec (int / per-class tuple) or one entry per
     scenario.  ``policy`` — shared :class:`SchedPolicy`, one per scenario,
     or ``None`` (each program's attached policy, then ``params.policy``).
+    ``fu_cost`` — shared per-(class, unit) cost-table spec
+    (``costs.norm_fu_cost`` forms) or one per scenario; ``None`` falls
+    back to ``params.fu_cost`` (all ones if unset — homogeneous pools).
     ``max_prog`` — the shared table shape; defaults to the population's
     :func:`prog_bucket`.  ``max_streams`` — the shared frontend-stream
     table width; defaults to the population's widest stream set.  The
@@ -337,6 +367,8 @@ def pack_population(programs: Sequence,
     prio = np.stack([pol.weight_array() for pol in pols]).astype(np.int32)
     quota = np.stack([pol.quota_array() for pol in pols]).astype(np.int32)
     rs_cap = np.stack([pol.rs_cap_array() for pol in pols]).astype(np.int32)
+    eft = np.asarray([1 if pol.issue_mode == "eft" else 0 for pol in pols],
+                     np.int32)
 
     # per-scenario frontend stream tables, padded to the batch's widest
     # stream count with inactive rows (end <= start: arrived-and-drained,
@@ -358,7 +390,10 @@ def pack_population(programs: Sequence,
         names=tuple(p.name for p in preps), preps=preps, policies=pols,
         ftab=ftab, p_len=p_len, mem=mem, eff=eff,
         n_fu=_broadcast_n_fu(n_fu, n), prio=prio, quota=quota,
-        rs_cap=rs_cap, streams=streams, max_prog=int(max_prog),
-        # the policy tables above are the runtime truth — strip the params
-        # copy so one compiled machine serves every policy in the batch
-        params=dataclasses.replace(params, policy=SchedPolicy()))
+        rs_cap=rs_cap, fu_cost=_broadcast_fu_cost(fu_cost, n, params),
+        eft=eft, streams=streams, max_prog=int(max_prog),
+        # the policy/cost tables above are the runtime truth — strip the
+        # params copies so one compiled machine serves every policy and
+        # cost profile in the batch
+        params=dataclasses.replace(params, policy=SchedPolicy(),
+                                   fu_cost=None))

@@ -24,6 +24,9 @@ constants.
 from __future__ import annotations
 
 import dataclasses
+from typing import Mapping, Optional
+
+import numpy as np
 
 # ---------------------------------------------------------------------------
 # Table II — DSP Functions modeled as accelerators
@@ -94,6 +97,68 @@ def hts_costs(speculation: bool = True) -> SchedulerCosts:
 
 
 ALL_SCHEDULERS = ("naive", "software", "hts_nospec", "hts_spec")
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous FU cost tables
+# ---------------------------------------------------------------------------
+#: canonical per-class width of a packed cost table — matches the widest
+#: ``max_fu_per_class`` any machine variant uses; narrower machines slice,
+#: and unit indices ≥ ``n_fu[c]`` are never granted so the padding is inert.
+FU_COST_WIDTH = 16
+#: cost multipliers live in [1, FU_COST_CAP]: a unit's execution latency is
+#: ``FUNC_CYCLES[c] * fu_cost[c, u]``.  The cap keeps the machine's combined
+#: free-unit ranking key and the cycle counter comfortably inside int32.
+FU_COST_CAP = 1 << 10
+
+
+def norm_fu_cost(fu_cost, width: int = FU_COST_WIDTH) -> np.ndarray:
+    """Normalize a cost-table spec to a ``(NUM_FUNCS, width)`` int32 array.
+
+    Accepts ``None`` (all ones — every unit identical, the paper's machine),
+    a ``{class_id_or_keyname: row_or_scalar}`` mapping (unlisted classes stay
+    uniform), or a full array-like of per-class rows.  Rows shorter than
+    ``width`` are padded with 1 (extra units are vanilla); a scalar row means
+    "every unit of that class costs this much".
+    """
+    out = np.ones((NUM_FUNCS, width), np.int32)
+    if fu_cost is None:
+        return out
+    if isinstance(fu_cost, Mapping):
+        items = []
+        for key, row in fu_cost.items():
+            fid = FUNC_IDS[key] if isinstance(key, str) else int(key)
+            if not 0 <= fid < NUM_FUNCS:
+                raise ValueError(f"unknown function class {key!r}")
+            items.append((fid, row))
+    else:
+        rows = list(fu_cost)
+        if len(rows) != NUM_FUNCS:
+            raise ValueError(f"fu_cost must have {NUM_FUNCS} per-class rows, "
+                             f"got {len(rows)}")
+        items = list(enumerate(rows))
+    for fid, row in items:
+        vals = [int(row)] * width if np.ndim(row) == 0 else \
+            [int(v) for v in row]
+        if len(vals) > width:
+            vals = vals[:width]
+        for u, v in enumerate(vals):
+            if not 1 <= v <= FU_COST_CAP:
+                raise ValueError(f"fu_cost[{fid}][{u}] must be in "
+                                 f"[1, {FU_COST_CAP}], got {v}")
+            out[fid, u] = v
+    return out
+
+
+def fu_cost_tuple(fu_cost) -> Optional[tuple]:
+    """Hashable tuple-of-rows form for ``HtsParams.fu_cost`` (None if the
+    table is uniformly 1, so a vanilla machine keeps a vanilla params key)."""
+    if fu_cost is None:
+        return None
+    arr = norm_fu_cost(fu_cost)
+    if (arr == 1).all():
+        return None
+    return tuple(tuple(int(v) for v in row) for row in arr)
 
 
 def costs_by_name(name: str) -> SchedulerCosts:

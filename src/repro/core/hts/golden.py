@@ -27,7 +27,11 @@ Within-cycle phase order (both simulators MUST follow it exactly):
                           age within a class; a pid at its per-class FU quota
                           is masked out without consuming the unit
                           (``policy.SchedPolicy``; all-default = pure age
-                          order, the paper's arbiter).
+                          order, the paper's arbiter).  Unit selection
+                          within the class: greedy = lowest free index;
+                          ``issue_mode="eft"`` = earliest predicted finish
+                          under the per-(class, unit) cost tables
+                          (``HtsParams.fu_cost``), ties to lowest index.
   6. frontend           — the frontend *arbiter* grants one eligible dispatch
                           stream (per-tenant frontends, ``frontend.py``) and
                           fetch/decode/dispatches its next instruction (tasks
@@ -66,7 +70,8 @@ from typing import Optional
 import numpy as np
 
 from . import isa
-from .costs import (FUNC_CYCLES, MEM_READ_CYCLES, NUM_FUNCS, SchedulerCosts)
+from .costs import (FUNC_CYCLES, MEM_READ_CYCLES, NUM_FUNCS, SchedulerCosts,
+                    norm_fu_cost)
 from .policy import AGE_SPAN, NUM_PIDS, PRIO_CAP, SchedPolicy
 
 # ---------------------------------------------------------------------------
@@ -92,6 +97,12 @@ class HtsParams:
     cdb_entries: Optional[int] = None
     n_fu: tuple[int, ...] = (1,) * NUM_FUNCS   # units per function class
     policy: SchedPolicy = SchedPolicy()        # per-pid weights + FU quotas
+    #: per-(class, unit) execution-latency multipliers — heterogeneous FU
+    #: instances within a class.  Hashable tuple-of-rows form (build with
+    #: ``costs.fu_cost_tuple``); ``None`` = every unit identical (cost 1),
+    #: the paper's machine.  Unit ``u`` of class ``c`` executes a task in
+    #: ``FUNC_CYCLES[c] * fu_cost[c][u]`` cycles.
+    fu_cost: Optional[tuple] = None
 
     @property
     def tm_base(self) -> int:
@@ -114,6 +125,10 @@ class TaskRecord:
     is_spec: bool = False
     aborted: bool = False
     pid: int = 0                # owning process (ISA pid field, multi-tenant)
+    #: flattened FU-pool index the task executed on (-1 = never issued).
+    #: Oracle-only instrumentation for the EFT invariant tests — NOT part
+    #: of ``schedule_tuple`` (the machine does not record it).
+    unit: int = -1
 
 
 @dataclasses.dataclass
@@ -199,10 +214,15 @@ def run(code: np.ndarray,
     spec_aborted = 0
 
     rs: list[_RS] = []
-    # FU pool: flattened (class, unit) with existence from n_fu.
+    # FU pool: flattened (class, unit) with existence from n_fu.  Each unit
+    # carries its latency multiplier from the per-(class, unit) cost table
+    # (all ones unless params.fu_cost makes the pool heterogeneous).
+    _ct = norm_fu_cost(p.fu_cost, width=max((16,) + tuple(p.n_fu)))
     fu_cls: list[int] = []
+    fu_cost: list[int] = []
     for c in range(NUM_FUNCS):
         fu_cls.extend([c] * p.n_fu[c])
+        fu_cost.extend(int(_ct[c, u]) for u in range(p.n_fu[c]))
     n_total_fu = len(fu_cls)
     fu_busy = [False] * n_total_fu
     fu_uid = [0] * n_total_fu
@@ -217,6 +237,7 @@ def run(code: np.ndarray,
     _wt = p.policy.weight_array(NUM_PIDS).astype(np.int64)
     _qt = p.policy.quota_array(NUM_PIDS).astype(np.int64)
     _rc = p.policy.rs_cap_array(NUM_PIDS).astype(np.int64)
+    _eft = p.policy.issue_mode == "eft"
 
     tracker: list[dict] = []          # {s, e, uid, is_spec}
     tlb: list[dict] = []              # {os, oe, tm_s, spec, committed, seq}
@@ -375,19 +396,30 @@ def run(code: np.ndarray,
                 break
             if r.dep_uid != 0:
                 continue
-            slot = next((i for i in range(n_total_fu)
-                         if fu_cls[i] == r.func and not fu_busy[i]), None)
-            if slot is None:
+            free_slots = [i for i in range(n_total_fu)
+                          if fu_cls[i] == r.func and not fu_busy[i]]
+            if not free_slots:
                 continue
             if inflight.get((r.pid, r.func), 0) >= _qt[r.pid]:
                 continue                   # quota mask: pid at its class cap
+            if _eft:
+                # EFT unit selection: grant the free unit with the earliest
+                # predicted finish (busy units are not candidates, so the
+                # busy-horizon term is 0 and finish = base cycles × unit
+                # cost); ties break to the lowest index.  Uniform costs
+                # reduce this to the greedy lowest-index rule exactly.
+                slot = min(free_slots,
+                           key=lambda i: (r.exec_cycles * fu_cost[i], i))
+            else:
+                slot = free_slots[0]
             fu_busy[slot] = True
             fu_uid[slot] = r.uid
-            fu_rem[slot] = r.exec_cycles
+            fu_rem[slot] = r.exec_cycles * fu_cost[slot]
             fu_pid[slot] = r.pid
             fu_meta[slot] = (r.out_s, r.out_e, r.src_s, r.is_spec)
             inflight[(r.pid, r.func)] = inflight.get((r.pid, r.func), 0) + 1
             by_uid[r.uid].issue_cycle = cycle
+            by_uid[r.uid].unit = slot
             rs.remove(r)
             issued += 1
 

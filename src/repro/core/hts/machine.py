@@ -35,7 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import isa
-from .costs import FUNC_CYCLES, NUM_FUNCS, SchedulerCosts
+from .costs import FUNC_CYCLES, NUM_FUNCS, SchedulerCosts, norm_fu_cost
 from .golden import HtsParams
 from .policy import AGE_SPAN, NUM_PIDS, PRIO_CAP, SchedPolicy
 
@@ -49,8 +49,9 @@ class ResumableMachine:
     """The population machine factored into snapshot/resume pieces.
 
     ``init(ftab, p_len, n_fu, mem_init, effects, prio, quota, rs_cap,
-    streams)`` builds the while-loop carry (one state row per lane);
-    ``run_slice(carry, <same 9 args>, budget)`` advances every alive lane
+    fu_cost, eft, streams)`` builds the while-loop carry (one state row
+    per lane);
+    ``run_slice(carry, <same 11 args>, budget)`` advances every alive lane
     by at most ``budget`` machine steps (while-loop trips — the unit wall
     time is spent in under event-skip) and returns the carry — lanes at
     their limit (or halted) are fixed points, so slices compose exactly:
@@ -92,7 +93,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
                  population: bool = False, resumable: bool = False):
     """Build the machine under ``spec``; returns
     ``run(ftab, p_len, n_fu, mem_init, effects, prio, quota, rs_cap,
-    streams)``.
+    fu_cost, eft, streams)``.
 
     With ``population=True`` the returned runner expects every argument
     with a leading *scenario* axis and simulates the whole batch in one
@@ -123,6 +124,14 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
     (default uncapped), ``rs_cap`` per-pid RS-entry admission caps (default
     uncapped — a pid at its cap takes a structural dispatch stall exactly
     like a full RS).
+    ``fu_cost``: (NUM_FUNCS, width) int32 per-(class, unit) execution-latency
+    multipliers (traced; ``None`` = all ones — every unit of a class
+    identical).  A width other than ``max_fu_per_class`` is sliced or
+    1-padded to fit, so tables pack at the canonical ``costs.FU_COST_WIDTH``
+    regardless of the machine's pool width.
+    ``eft``: scalar int32 flag (traced) — nonzero selects earliest-finish-time
+    unit ranking in the RS arbiter (``policy.issue_mode``); 0 is the
+    historical greedy lowest-index rule, bit-identical.
     ``streams``: (n_streams, 4) int32 per-tenant frontend table —
     ``frontend.STREAM_FIELDS`` rows (start, end, arrival, weight); one
     per-stream program counter + decode window each, a frontend arbiter
@@ -138,8 +147,8 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
     Every argument is a runtime input, so ``vmap`` can batch any of three
     axes: the *scenario* axis (all arguments batched — a population of
     programs in one compiled machine), the *FU* axis (``n_fu`` alone) and
-    the *policy* axis (``prio``/``quota``/``rs_cap``); ``api.py`` composes
-    them.
+    the *policy* axis (``prio``/``quota``/``rs_cap``, with ``fu_cost``/
+    ``eft`` riding the scenario axis); ``api.py`` composes them.
     """
     p = spec.params
     c = spec.costs
@@ -421,8 +430,18 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
     # computation without consuming the unit, so the arbiter stays
     # work-conserving.  ``prio``/``quota`` are traced runtime arrays
     # (like ``n_fu``), so policies sweep under vmap without recompiling.
+    # Unit selection within a class is a ranking too: free units are
+    # ordered by ``ckey`` — plain FU index under greedy, (cost, index)
+    # under EFT (``eft`` traced flag).  A granted entry's predicted
+    # finish on a *free* unit is base cycles × unit cost (the busy
+    # horizon of a free unit is zero, and busy units are never granted),
+    # and the base is constant per class, so cost order IS finish order
+    # for every entry — the k-th fired entry taking the k-th ckey-ranked
+    # unit reproduces the golden oracle's sequential earliest-finish
+    # pick exactly.  With eft=0 ckey is the FU index and the arbiter is
+    # bit-identical to the historical greedy one.
     # ------------------------------------------------------------------
-    def rs_issue(st, exists, prio, quota, alive):
+    def rs_issue(st, exists, prio, quota, cost, eft, alive):
         ready = st["rs_valid"] & (st["rs_dep"] == 0) & alive
         free = exists & ~st["fu_busy"]
         n_free = jnp.zeros((NF,), I32).at[fu_cls].add(free.astype(I32))
@@ -457,10 +476,13 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         f_key = jnp.where(fire, key, BIG)
         f_ahead = (f_key[None, :] < f_key[:, None]) & same_cls & fire[None, :]
         f_rank = f_ahead.sum(axis=1).astype(I32)
-        # per-class free rank: rank among free units of same class, by fu index
+        # per-class free rank: rank among free units of same class, by
+        # ckey (greedy: FU index; eft: cost-major, index-minor — ckey is
+        # unique per unit, so the ranking is a strict total order)
+        ckey = (jnp.where(eft != 0, cost, 0) * NFU
+                + jnp.arange(NFU, dtype=I32))
         cls_eq = fu_cls[None, :] == fu_cls[:, None]
-        lower = cls_eq & free[None, :] & (jnp.arange(NFU)[None, :]
-                                          < jnp.arange(NFU)[:, None])
+        lower = cls_eq & free[None, :] & (ckey[None, :] < ckey[:, None])
         unit_rank = lower.sum(axis=1).astype(I32)
         # match matrix: entry e → unit u
         m = (fire[:, None] & free[None, :]
@@ -471,7 +493,9 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
 
         st["fu_busy"] = st["fu_busy"] | unit_hit
         st["fu_uid"] = jnp.where(unit_hit, st["rs_uid"][entry_of_unit], st["fu_uid"])
-        st["fu_rem"] = jnp.where(unit_hit, st["rs_exec"][entry_of_unit], st["fu_rem"])
+        st["fu_rem"] = jnp.where(unit_hit,
+                                 st["rs_exec"][entry_of_unit] * cost,
+                                 st["fu_rem"])
         st["fu_out_s"] = jnp.where(unit_hit, st["rs_out_s"][entry_of_unit],
                                    st["fu_out_s"])
         st["fu_out_e"] = jnp.where(unit_hit, st["rs_out_e"][entry_of_unit],
@@ -803,8 +827,8 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         return (~st["halted"] & ~st["overflow"]
                 & (st["cycle"] < spec.max_cycles))
 
-    def step(st, exists, F, p_len, prio, quota, rs_cap, streams, effects,
-             limit):
+    def step(st, exists, F, p_len, prio, quota, rs_cap, cost, eft, streams,
+             effects, limit):
         # ``alive`` gates every phase: a halted/overflowed lane is a fixed
         # point of the step, so the batched population machine can run one
         # while-loop with a scalar any-lane-alive condition and NO
@@ -838,7 +862,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         st, br_ready = memread_tick(st, alive)
         st, br_ready = cdb_grant(st, br_ready, alive)
         st = branch_resolve(st, br_ready)
-        st = rs_issue(st, exists, prio, quota, alive)
+        st = rs_issue(st, exists, prio, quota, cost, eft, alive)
         st = frontend(st, F, p_len, rs_cap, streams, alive)
         done = ((st["pc"] >= streams[:, 1]).all() & ~st["rs_valid"].any()
                 & ~st["fu_busy"].any()
@@ -851,7 +875,8 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         st["halted"] = st["halted"] | (alive & done)
         return st
 
-    def norm_args(ftab, p_len, n_fu, prio, quota, rs_cap, streams):
+    def norm_args(ftab, p_len, n_fu, prio, quota, rs_cap, fu_cost, eft,
+                  streams):
         F = {name: ftab[..., i].astype(I32)
              for i, name in enumerate(isa.FIELDS)}
         p_len = jnp.asarray(p_len, I32)
@@ -862,6 +887,26 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
             quota = jnp.full((NUM_PIDS,), BIG, I32)
         if rs_cap is None:
             rs_cap = jnp.full((NUM_PIDS,), BIG, I32)
+        if fu_cost is None:
+            # all-ones = every unit of a class identical (the paper's pool)
+            cost = jnp.ones(p_len.shape + (NFU,), I32)
+        else:
+            fu_cost = jnp.asarray(fu_cost, I32)
+            w = fu_cost.shape[-1]
+            if w > spec.max_fu_per_class:
+                # tables are packed at the canonical width (costs.
+                # FU_COST_WIDTH); a narrower machine uses the prefix —
+                # unit indices ≥ max_fu_per_class don't exist here
+                fu_cost = fu_cost[..., :spec.max_fu_per_class]
+            elif w < spec.max_fu_per_class:
+                fu_cost = jnp.concatenate(
+                    [fu_cost, jnp.ones(fu_cost.shape[:-1]
+                                       + (spec.max_fu_per_class - w,), I32)],
+                    axis=-1)
+            # flatten (NF, max_fu) → (NFU,) row-major: matches fu_cls/fu_pos
+            cost = fu_cost.reshape(fu_cost.shape[:-2] + (NFU,))
+        eft = (jnp.zeros(p_len.shape, I32) if eft is None
+               else jnp.asarray(eft, I32))
         if streams is None:
             # the historical single merged frontend: one stream covering
             # [0, p_len), arrival 0 (population form gets a leading axis)
@@ -869,7 +914,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
                        .at[..., 0, 1].set(p_len))
         else:
             streams = jnp.asarray(streams, I32)
-        return F, p_len, exists, prio, quota, rs_cap, streams
+        return F, p_len, exists, prio, quota, rs_cap, cost, eft, streams
 
     def collect(st):
         return dict(
@@ -886,20 +931,21 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         )
 
     def run(ftab, p_len, n_fu, mem_init, effects, prio=None, quota=None,
-            rs_cap=None, streams=None):
-        F, p_len, exists, prio, quota, rs_cap, streams = norm_args(
-            ftab, p_len, n_fu, prio, quota, rs_cap, streams)
+            rs_cap=None, fu_cost=None, eft=None, streams=None):
+        F, p_len, exists, prio, quota, rs_cap, cost, eft, streams = norm_args(
+            ftab, p_len, n_fu, prio, quota, rs_cap, fu_cost, eft, streams)
         effects = jnp.asarray(effects, I32)
         st = init_state(mem_init, streams)
         st = jax.lax.while_loop(
             lambda s: alive_of(s).any(),
             lambda s: step(s, exists, F, p_len, prio, quota, rs_cap,
-                           streams, effects, BIG),
+                           cost, eft, streams, effects, BIG),
             st)
         return collect(st)
 
     def run_population(ftab, p_len, n_fu, mem_init, effects,
-                       prio, quota, rs_cap, streams=None):
+                       prio, quota, rs_cap, fu_cost=None, eft=None,
+                       streams=None):
         """The scenario-batched machine: every argument carries a leading
         scenario axis, and the whole population runs in ONE while loop
         whose condition is scalar (any lane alive).  Because a dead lane
@@ -907,8 +953,8 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         needed — which is what makes this markedly faster than
         ``vmap(run)`` (the generic batching of a while loop masks the
         whole ~25 KB/lane state every iteration)."""
-        F, p_len, exists, prio, quota, rs_cap, streams = norm_args(
-            ftab, p_len, n_fu, prio, quota, rs_cap, streams)
+        F, p_len, exists, prio, quota, rs_cap, cost, eft, streams = norm_args(
+            ftab, p_len, n_fu, prio, quota, rs_cap, fu_cost, eft, streams)
         effects = jnp.asarray(effects, I32)
         st = jax.vmap(init_state)(jnp.asarray(mem_init, I32), streams)
 
@@ -917,7 +963,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         st = jax.lax.while_loop(
             lambda s: alive_of(s).any(),
             lambda s: vstep(s, exists, F, p_len, prio, quota, rs_cap,
-                            streams, effects, limit),
+                            cost, eft, streams, effects, limit),
             st)
         return collect(st)
 
@@ -925,21 +971,24 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
     # resumable population machine: the same while loop, re-enterable
     # ------------------------------------------------------------------
     def init_population(ftab, p_len, n_fu, mem_init, effects,
-                        prio, quota, rs_cap, streams=None):
+                        prio, quota, rs_cap, fu_cost=None, eft=None,
+                        streams=None):
         """The population while-loop carry, fresh: one state row per lane.
 
         Only ``pc`` (= each stream's start pc) and ``mem`` (= the memory
         image) depend on the arguments — every other field is a constant
         fill — which is the invariant lane refill relies on (a host can
         build a fresh row for a *different* program from any fresh row by
-        overwriting just those two fields).
+        overwriting just those two fields).  ``fu_cost``/``eft`` stay out
+        of the carry for the same reason: like ``prio`` they are
+        loop-invariant step inputs, re-supplied on every slice.
         """
-        _, p_len, _, _, _, _, streams = norm_args(
-            ftab, p_len, n_fu, prio, quota, rs_cap, streams)
+        _, p_len, _, _, _, _, _, _, streams = norm_args(
+            ftab, p_len, n_fu, prio, quota, rs_cap, fu_cost, eft, streams)
         return jax.vmap(init_state)(jnp.asarray(mem_init, I32), streams)
 
     def run_slice(carry, ftab, p_len, n_fu, mem_init, effects,
-                  prio, quota, rs_cap, streams, budget):
+                  prio, quota, rs_cap, fu_cost, eft, streams, budget):
         """Advance every alive lane by at most ``budget`` machine steps.
 
         Per-lane limits are ``carry steps + budget`` at entry, so every
@@ -952,15 +1001,15 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         (the carry owns the memory image) but kept so the argument list
         stays exactly ``PackedPopulation.machine_args()``.
         """
-        F, p_len, exists, prio, quota, rs_cap, streams = norm_args(
-            ftab, p_len, n_fu, prio, quota, rs_cap, streams)
+        F, p_len, exists, prio, quota, rs_cap, cost, eft, streams = norm_args(
+            ftab, p_len, n_fu, prio, quota, rs_cap, fu_cost, eft, streams)
         effects = jnp.asarray(effects, I32)
         limit = carry["steps"] + jnp.asarray(budget, I32)
         vstep = jax.vmap(step)
         return jax.lax.while_loop(
             lambda s: (alive_of(s) & (s["steps"] < limit)).any(),
             lambda s: vstep(s, exists, F, p_len, prio, quota, rs_cap,
-                            streams, effects, limit),
+                            cost, eft, streams, effects, limit),
             carry)
 
     if resumable:
@@ -1006,19 +1055,27 @@ def simulate(code: np.ndarray, costs: SchedulerCosts,
              event_skip: bool = True, max_cycles: int = 5_000_000,
              max_fu_per_class: int = 16, max_prog: int = 256,
              policy: SchedPolicy | None = None,
+             fu_cost=None,
              streams=None) -> dict[str, Any]:
     """One-shot convenience wrapper around the cached compiled machine.
 
     ``policy`` (defaulting to ``params.policy``) is lowered to the traced
     ``prio``/``quota`` runtime arrays — the compiled machine is shared
-    across policies, so sweeping weights never recompiles.  ``streams``
-    is the optional (n_streams, 4) per-tenant frontend table
+    across policies, so sweeping weights never recompiles.  ``fu_cost``
+    (defaulting to ``params.fu_cost``) is the per-(class, unit) latency
+    table, and the policy's ``issue_mode`` lowers to the traced ``eft``
+    flag — both runtime data too, so heterogeneous cost sweeps and
+    greedy/EFT flips share the one compilation.  ``streams`` is the
+    optional (n_streams, 4) per-tenant frontend table
     (``frontend.STREAM_FIELDS``); ``None`` = one merged frontend.
     """
     pol = policy if policy is not None else params.policy
-    # the policy reaches the machine as runtime data, never as part of the
-    # compilation key — canonicalise it out of the cached MachineSpec
-    ms = MachineSpec(params=dataclasses.replace(params, policy=SchedPolicy()),
+    cost = fu_cost if fu_cost is not None else params.fu_cost
+    # the policy and cost table reach the machine as runtime data, never as
+    # part of the compilation key — canonicalise them out of the cached
+    # MachineSpec
+    ms = MachineSpec(params=dataclasses.replace(params, policy=SchedPolicy(),
+                                                fu_cost=None),
                      costs=costs, event_skip=event_skip,
                      max_cycles=max_cycles, max_fu_per_class=max_fu_per_class)
     run = _compiled(ms, max_prog)
@@ -1029,6 +1086,8 @@ def simulate(code: np.ndarray, costs: SchedulerCosts,
               jnp.asarray(eff), jnp.asarray(pol.weight_array(), I32),
               jnp.asarray(pol.quota_array(), I32),
               jnp.asarray(pol.rs_cap_array(), I32),
+              jnp.asarray(norm_fu_cost(cost), I32),
+              jnp.asarray(1 if pol.issue_mode == "eft" else 0, I32),
               None if streams is None else jnp.asarray(streams, I32))
     return jax.tree.map(np.asarray, out)
 

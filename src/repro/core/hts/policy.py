@@ -75,6 +75,16 @@ class SchedPolicy:
     #: = a stream's pid priority weight ranks first, round-robin within a
     #: weight class.  Irrelevant to single-stream (merged) programs.
     fe_mode: str = "rr"
+    #: RS unit-selection rule once an entry wins arbitration: ``"greedy"``
+    #: grants the lowest-indexed free unit of the class (the paper's
+    #: machine — all units identical, so index order is finish order);
+    #: ``"eft"`` grants the free unit with the earliest predicted finish
+    #: time under the per-(class, unit) cost tables (``fu_cost``) — only
+    #: *free* units are candidates, so the busy-horizon term is zero and
+    #: EFT ranks by cost-table latency, ties broken by unit index.  With
+    #: uniform costs the two are bit-identical.  Like the weight/quota
+    #: arrays this is traced runtime data: flipping modes never recompiles.
+    issue_mode: str = "greedy"
 
     @staticmethod
     def _norm_fe_mode(fe_mode: str) -> str:
@@ -83,11 +93,19 @@ class SchedPolicy:
                              f'got {fe_mode!r}')
         return fe_mode
 
+    @staticmethod
+    def _norm_issue_mode(issue_mode: str) -> str:
+        if issue_mode not in ("greedy", "eft"):
+            raise ValueError(f'issue_mode must be "greedy" or "eft", '
+                             f'got {issue_mode!r}')
+        return issue_mode
+
     @classmethod
     def of(cls, weights: Optional[Mapping[int, int]] = None,
            quotas: Optional[Mapping[int, int]] = None,
            rs_caps: Optional[Mapping[int, int]] = None,
-           default_weight: int = 0, fe_mode: str = "rr") -> "SchedPolicy":
+           default_weight: int = 0, fe_mode: str = "rr",
+           issue_mode: str = "greedy") -> "SchedPolicy":
         """Build a policy from ``{pid: weight}`` / ``{pid: quota}`` /
         ``{pid: rs_cap}`` dicts."""
         def norm(m, what, lo, hi):
@@ -108,7 +126,8 @@ class SchedPolicy:
                    quotas=norm(quotas, "quota", 1, NO_QUOTA),
                    rs_caps=norm(rs_caps, "rs_cap", 1, NO_QUOTA),
                    default_weight=int(default_weight),
-                   fe_mode=cls._norm_fe_mode(fe_mode))
+                   fe_mode=cls._norm_fe_mode(fe_mode),
+                   issue_mode=cls._norm_issue_mode(issue_mode))
 
     # ----------------------------------------------------------- lookups
     def weight_of(self, pid: int) -> int:
@@ -126,6 +145,7 @@ class SchedPolicy:
     def is_default(self) -> bool:
         """True iff this policy degrades to pure age-order arbitration."""
         return (not self.quotas and not self.rs_caps
+                and self.issue_mode == "greedy"
                 and all(w == self.default_weight for _, w in self.weights))
 
     # ------------------------------------------------------ array forms
@@ -161,6 +181,10 @@ class SchedPolicy:
             raise ValueError("cannot merge policies with different "
                              "frontend modes "
                              f"({self.fe_mode!r} vs {other.fe_mode!r})")
+        if other.issue_mode != self.issue_mode:
+            raise ValueError("cannot merge policies with different "
+                             "issue modes "
+                             f"({self.issue_mode!r} vs {other.issue_mode!r})")
         out_w, out_q = dict(self.weights), dict(self.quotas)
         out_r = dict(self.rs_caps)
         for src, dst, what in ((other.weights, out_w, "weight"),
@@ -172,7 +196,7 @@ class SchedPolicy:
                                      f"{dst[pid]} vs {v}")
                 dst[pid] = v
         return SchedPolicy.of(out_w, out_q, out_r, self.default_weight,
-                              self.fe_mode)
+                              self.fe_mode, self.issue_mode)
 
     def issue_key(self, pid: int, age: int) -> int:
         """The arbiter's scalar sort key: priority class first (higher
@@ -196,4 +220,6 @@ class SchedPolicy:
                                                for p, q in self.rs_caps))
         if self.fe_mode != "rr":
             parts.append(f"frontends {self.fe_mode}")
+        if self.issue_mode != "greedy":
+            parts.append(f"issue {self.issue_mode}")
         return "; ".join(parts)

@@ -439,11 +439,11 @@ class Server:
 
     # -- execution ----------------------------------------------------------
     def _machine_spec(self) -> machine.MachineSpec:
-        # mirror run_many exactly (policy-stripped params) so the runner
+        # mirror run_many exactly (policy/cost-stripped params) so the runner
         # fetched here for accounting IS the runner run_many executes
         return machine.MachineSpec(
             params=dataclasses.replace(self.spec.params,
-                                       policy=SchedPolicy()),
+                                       policy=SchedPolicy(), fu_cost=None),
             costs=self._cost, event_skip=self.spec.event_skip,
             max_cycles=self.spec.max_cycles,
             max_fu_per_class=self._max_fu)
@@ -547,7 +547,7 @@ class Server:
 
     def _refill_rows(self, key, fresh, req: _Request):
         """Host-side rows that splice a fresh lane for ``req`` into a
-        running launch: the packed row for all 9 machine arguments, and a
+        running launch: the packed row for all 11 machine arguments, and a
         carry row that is the fresh-state template with the two program-
         dependent fields (``pc``, ``mem``) overwritten — the exact state
         ``init`` would have built for it."""
@@ -565,7 +565,7 @@ class Server:
         drained.  Each request's future resolves the moment its own lane
         halts — not when the batch does.
 
-        The carry and the 9 machine arguments stay **device-resident**
+        The carry and the 11 machine arguments stay **device-resident**
         across slices: per slice only the three per-lane liveness fields
         come back to the host (to decide harvests), then *all* dead lanes
         are gathered in one jitted tree-take and *all* refills spliced in

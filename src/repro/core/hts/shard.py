@@ -3,7 +3,7 @@ across devices.
 
 The scenario axis is embarrassingly parallel — every lane of a packed
 population is an independent machine instance — so sharding it is pure
-data placement: split the 9 batched machine arguments over a 1-D device
+data placement: split the 11 batched machine arguments over a 1-D device
 mesh and run the **population machine** (``machine.make_machine(...,
 population=True)``) per shard.  Each device executes its own while loop
 over its own lanes (there are no collectives in the step body), so a
@@ -78,6 +78,7 @@ def pad_lanes(pop: PackedPopulation, multiple: int) -> PackedPopulation:
         ftab=rep(pop.ftab), p_len=rep(pop.p_len),
         mem=rep(pop.mem), eff=rep(pop.eff), n_fu=rep(pop.n_fu),
         prio=rep(pop.prio), quota=rep(pop.quota), rs_cap=rep(pop.rs_cap),
+        fu_cost=rep(pop.fu_cost), eft=rep(pop.eft),
         streams=rep(pop.streams))
 
 
@@ -114,7 +115,7 @@ def sharded_slicer(spec: machine.MachineSpec, max_prog: int,
     ``run_slice`` each wrapped in one ``shard_map`` over the same 1-D
     ``("scenario",)`` mesh as :func:`sharded_runner`.
 
-    The carry and all 9 machine arguments split over the scenario axis;
+    The carry and all 11 machine arguments split over the scenario axis;
     the slice ``budget`` is replicated (every device pauses its own lanes
     at the same per-lane cycle ceiling).  Lane counts must divide
     ``devices`` (:func:`pad_lanes`) — the serving engine rounds its lane
@@ -137,7 +138,7 @@ def sharded_slicer(spec: machine.MachineSpec, max_prog: int,
                              out_specs=P("scenario")))
     run_slice = jax.jit(shard_map(
         rm.run_slice, mesh=mesh,
-        in_specs=(P("scenario"),) * 10 + (P(),),
+        in_specs=(P("scenario"),) * 12 + (P(),),
         out_specs=P("scenario")))
     return machine.ResumableMachine(init=init, run_slice=run_slice,
                                     collect=rm.collect)

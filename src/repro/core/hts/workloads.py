@@ -58,6 +58,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .builder import Program
+from .costs import NUM_FUNCS, fu_cost_tuple
 from .policy import SchedPolicy
 from .programs import Bench, INPUT, INPUT_WORDS
 
@@ -92,6 +93,11 @@ class Scenario:
     #: per-tenant arrival offsets (``arrivals=True``; index-aligned with
     #: ``pids``); () when arrivals were not drawn
     arrivals: tuple[int, ...] = ()
+    #: heterogeneous per-(class, unit) cost table
+    #: (``heterogeneous_fus=True``; the hashable
+    #: :func:`~repro.core.hts.costs.fu_cost_tuple` form — pass it as the
+    #: ``fu_cost=`` of ``hts.run``/``hts.compare``); None = uniform units
+    fu_cost: Optional[tuple] = None
 
     @property
     def n_tenants(self) -> int:
@@ -220,7 +226,8 @@ def generate_scenario(seed: int, *, n_tenants: Optional[int] = None,
                       name: Optional[str] = None,
                       mixed_priority: bool = False,
                       frontends: bool = False,
-                      arrivals: bool = False) -> Scenario:
+                      arrivals: bool = False,
+                      heterogeneous_fus: bool = False) -> Scenario:
     """One seeded scenario: ``n_tenants`` (2–8, drawn when omitted) programs
     with distinct pids, disjoint region/register budgets, merged N-way.
 
@@ -240,6 +247,15 @@ def generate_scenario(seed: int, *, n_tenants: Optional[int] = None,
     (implies ``frontends``) draws seeded per-tenant arrival offsets in
     ``[0, MAX_ARRIVAL]`` into the stream table; the draws happen *after*
     program and policy generation, so same-seed programs are unchanged.
+
+    ``heterogeneous_fus=True`` draws (last of all, so every earlier draw
+    of the same seed is unchanged) a per-(class, unit) cost table into
+    :attr:`Scenario.fu_cost` — each class gets, with probability ½, a row
+    of small integer multipliers (slow units deliberately land at *low*
+    unit indices sometimes, where the greedy arbiter picks them first) —
+    and, with probability ½, flips the scenario policy to
+    ``issue_mode="eft"`` so the earliest-finish-time arbiter is fuzzed on
+    the same programs.
     """
     rng = np.random.default_rng(seed)
     if n_tenants is None:
@@ -279,10 +295,26 @@ def generate_scenario(seed: int, *, n_tenants: Optional[int] = None,
             [b.program for b in tenants], f"{merged_prog.name}_fe",
             arrivals=arrival_offsets or None, require_distinct_pids=True,
             priorities=priorities, quotas=quotas, rs_caps=rs_caps)
+    fu_cost = None
+    if heterogeneous_fus:   # drawn last: every earlier same-seed draw intact
+        table = {}
+        for fid in range(NUM_FUNCS):
+            if rng.random() < 0.5:
+                row = tuple(int(v) for v in rng.choice(
+                    (1, 1, 2, 3, 4, 8), size=int(rng.integers(2, 5))))
+                if any(v != 1 for v in row):
+                    table[fid] = row
+        fu_cost = fu_cost_tuple(table) if table else None
+        if rng.random() < 0.5:      # fuzz the EFT arbiter on the same DAGs
+            eft_pol = dataclasses.replace(
+                merged_prog.policy or SchedPolicy(), issue_mode="eft")
+            merged_prog.policy = eft_pol
+            if multi is not None:
+                multi = dataclasses.replace(multi, policy=eft_pol)
     return Scenario(name=merged_prog.name, seed=seed, pids=pids,
                     tenants=tenants, merged=Bench.of(merged_prog),
                     policy=merged_prog.policy, multi=multi,
-                    arrivals=arrival_offsets)
+                    arrivals=arrival_offsets, fu_cost=fu_cost)
 
 
 def generate_scenarios(n: int, *, seed0: int = 0, **kwargs):

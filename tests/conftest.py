@@ -1,21 +1,70 @@
-"""Test-suite bootstrap.
+"""Test-suite bootstrap: hypothesis fallback + fast-tier wall-clock guard.
 
-The container this repo targets does not always ship ``hypothesis``; the
-tier-1 suite previously died at *collection* because two test modules import
-it.  When the real package is available we use it untouched.  Otherwise we
-install a tiny deterministic stand-in that covers exactly the API surface
-these tests use (``given``, ``settings``, ``strategies.integers /
-sampled_from / booleans / composite``): each ``@given`` test runs a fixed
-number of seeded pseudo-random examples.  Less thorough than real
-hypothesis shrinking, but deterministic, dependency-free, and infinitely
-better than not running the property tests at all.
+**Hypothesis fallback.** The container this repo targets does not always
+ship ``hypothesis``; the tier-1 suite previously died at *collection*
+because two test modules import it.  When the real package is available we
+use it untouched.  Otherwise we install a tiny deterministic stand-in that
+covers exactly the API surface these tests use (``given``, ``settings``,
+``strategies.integers / sampled_from / booleans / composite``): each
+``@given`` test runs a fixed number of seeded pseudo-random examples.
+Less thorough than real hypothesis shrinking, but deterministic,
+dependency-free, and infinitely better than not running the property
+tests at all.
+
+**Fast-tier wall-clock guard.** The fast tier is the edit loop; letting it
+creep is how suites rot.  A *full* fast-tier session (the bare
+``testpaths`` run with the default ``-m 'not slow'`` selection) that
+passes but exceeds the wall budget is turned into a hard failure, so a
+newly-unmarked fuzz mix that doubles the tier fails CI instead of slipping
+by.  The budget comes from ``HTS_FAST_BUDGET_S`` (CI pins its own number);
+the default is calibrated to the measured suite on a contended 2-core dev
+box (~24 min incl. docs) plus headroom — not an aspiration.  Subset runs
+(explicit paths, ``-k``, ``-m slow``) are never guarded: the guard polices
+the tier, not your debugging loop.
 """
 from __future__ import annotations
 
 import functools
+import os
 import random
 import sys
+import time
 import types
+
+#: wall budget for a *full* fast-tier session, seconds (override via env).
+FAST_TIER_BUDGET_S = float(os.environ.get("HTS_FAST_BUDGET_S", 1800))
+
+_SESSION_T0 = time.monotonic()
+
+
+def _is_full_fast_tier(config) -> bool:
+    """Bare `pytest` run over the ini testpaths with the default
+    `-m 'not slow'` selection — the invocation the budget is for."""
+    if list(config.args) != list(config.getini("testpaths")):
+        return False                      # explicit file/dir subset
+    if "not slow" not in (config.getoption("markexpr") or ""):
+        return False                      # slow tier / custom -m selection
+    if config.getoption("keyword"):
+        return False                      # -k subset
+    return True
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if exitstatus != 0 or not _is_full_fast_tier(session.config):
+        return
+    elapsed = time.monotonic() - _SESSION_T0
+    if elapsed <= FAST_TIER_BUDGET_S:
+        return
+    reporter = session.config.pluginmanager.get_plugin("terminalreporter")
+    msg = (f"fast tier took {elapsed:.0f}s > budget "
+           f"{FAST_TIER_BUDGET_S:.0f}s (HTS_FAST_BUDGET_S) — move new "
+           f"slow mixes behind the `slow` marker (see --durations output)")
+    if reporter is not None:
+        reporter.write_sep("=", "FAST-TIER WALL BUDGET EXCEEDED", red=True)
+        reporter.write_line(msg, red=True)
+    else:                                 # pragma: no cover - no terminal
+        print(msg, file=sys.stderr)
+    session.exitstatus = 1
 
 try:                                    # real hypothesis wins when present
     import hypothesis  # noqa: F401

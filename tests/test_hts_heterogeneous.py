@@ -1,0 +1,297 @@
+"""Heterogeneous FU cost tables + the EFT-rank arbiter.
+
+Covers the three hard guarantees of the heterogeneity layer:
+
+* **bit-identity** — an all-ones cost table plus ``issue_mode="greedy"``
+  degrades *exactly* to the baseline arbiter on both backends (cycles and
+  full schedule tuples pinned), and the default ``SchedPolicy()`` equality/
+  hash is unchanged, so no existing compilation bucket splits;
+* **EFT semantics** — the arbiter grants each task the free quota-eligible
+  unit with the earliest predicted finish (cost-table latency; a busy unit
+  is not a candidate, so the busy-horizon term is zero by construction),
+  verified as a schedule-level property on generated scenarios;
+* **policy composition** — quota and RS-cap invariants hold under ``eft``
+  exactly as they do under greedy.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import hts
+from repro.core.hts import costs, machine, workloads
+from repro.core.hts.builder import Program
+from repro.core.hts.costs import (FU_COST_CAP, FU_COST_WIDTH, FUNC_CYCLES,
+                                  fu_cost_tuple, norm_fu_cost)
+from repro.core.hts.policy import SchedPolicy
+
+DCT = costs.FUNC_IDS["dct"]
+
+
+def _pool(n_tasks=2, func="dct", pid=1):
+    """``n_tasks`` independent same-class tasks: every task is ready at
+    once, so unit selection is the whole schedule."""
+    p = Program(f"pool{pid}", region_base=0x100)
+    frame = p.input(0x10, 4, "frame")
+    with p.process(pid):
+        for i in range(n_tasks):
+            p.task(func, in_=frame, out=4, tid=i & 0xF)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# cost-table normalisation
+# ---------------------------------------------------------------------------
+def test_norm_fu_cost_forms():
+    ones = norm_fu_cost(None)
+    assert ones.shape == (costs.NUM_FUNCS, FU_COST_WIDTH)
+    assert (ones == 1).all() and ones.dtype == np.int32
+    # keyname mapping, scalar row, short row padded with 1
+    t = norm_fu_cost({"dct": 3, DCT - 1: (5, 2)})
+    assert (t[DCT] == 3).all()
+    assert t[DCT - 1, 0] == 5 and t[DCT - 1, 1] == 2 and t[DCT - 1, 2] == 1
+    assert (t[0] == 1).all()
+    # full per-class table round-trips
+    full = np.arange(1, costs.NUM_FUNCS * 4 + 1).reshape(costs.NUM_FUNCS, 4)
+    t2 = norm_fu_cost(full)
+    assert (t2[:, :4] == full).all() and (t2[:, 4:] == 1).all()
+
+
+def test_norm_fu_cost_validation():
+    with pytest.raises(ValueError, match=r"\[1, "):
+        norm_fu_cost({"dct": 0})
+    with pytest.raises(ValueError, match=r"\[1, "):
+        norm_fu_cost({"dct": FU_COST_CAP + 1})
+    with pytest.raises(ValueError, match="unknown function class"):
+        norm_fu_cost({99: 2})
+    with pytest.raises(KeyError):
+        norm_fu_cost({"not_a_kernel": 2})
+    with pytest.raises(ValueError, match="per-class rows"):
+        norm_fu_cost([(1, 1)] * 3)
+
+
+def test_fu_cost_tuple_uniform_is_none():
+    """Uniform tables normalise to None so a vanilla machine keeps a
+    vanilla ``HtsParams`` key (no cache-bucket split from an explicit
+    all-ones table)."""
+    assert fu_cost_tuple(None) is None
+    assert fu_cost_tuple({"dct": 1}) is None
+    assert fu_cost_tuple(np.ones((costs.NUM_FUNCS, 4))) is None
+    t = fu_cost_tuple({"dct": (2, 1)})
+    assert isinstance(t, tuple) and hash(t) is not None
+    assert t[DCT][0] == 2
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: bit-identity + unchanged default policy key
+# ---------------------------------------------------------------------------
+def test_default_policy_equality_and_hash_unchanged():
+    """``issue_mode`` is a defaulted field: the default policy's equality,
+    hash and ``is_default`` are untouched, so every pre-existing
+    compilation bucket keyed on ``SchedPolicy()`` survives."""
+    assert SchedPolicy() == SchedPolicy(issue_mode="greedy")
+    assert hash(SchedPolicy()) == hash(SchedPolicy(issue_mode="greedy"))
+    assert SchedPolicy(issue_mode="greedy").is_default
+    eft = SchedPolicy(issue_mode="eft")
+    assert not eft.is_default and "issue eft" in eft.describe()
+    assert "issue" not in SchedPolicy().describe()
+    with pytest.raises(ValueError, match="issue_mode"):
+        SchedPolicy.of(issue_mode="fastest")
+    # merge: agreeing modes pass through, conflicting modes refuse
+    assert eft.merge_with(SchedPolicy.of(weights={1: 4},
+                                         issue_mode="eft")).issue_mode == "eft"
+    with pytest.raises(ValueError, match="different issue modes"):
+        eft.merge_with(SchedPolicy())
+
+
+@pytest.mark.parametrize("backend", ["jax", "golden"])
+def test_all_ones_cost_table_is_bit_identical_to_baseline(backend):
+    """All-ones table + explicit greedy == today's arbiter, exactly:
+    cycles and the full schedule tuple pinned on both backends."""
+    ones = np.ones((costs.NUM_FUNCS, 4), np.int64)
+    for sc in (workloads.generate_scenario(5, kernels=workloads.CHEAP_MIX),
+               workloads.generate_scenario(17, n_tenants=3,
+                                           kernels=workloads.CHEAP_MIX,
+                                           mixed_priority=True)):
+        base = hts.run(sc.merged, n_fu=2, backend=backend)
+        via = hts.run(sc.merged, n_fu=2, backend=backend, fu_cost=ones,
+                      policy=dataclasses.replace(
+                          sc.policy or SchedPolicy(), issue_mode="greedy"))
+        assert via.cycles == base.cycles, sc.name
+        assert via.schedule_tuple() == base.schedule_tuple(), sc.name
+
+
+def test_cost_tables_and_eft_share_the_default_compile_bucket():
+    """Cost tables and the eft flag are traced runtime data: running with
+    a heterogeneous table + eft reuses the exact compilation the default
+    run produced (no new ``machine._compiled`` miss)."""
+    p = _pool(4)
+    hts.run(p, n_fu=2)                       # warm the bucket
+    before = machine._compiled.cache_info().misses
+    hts.run(p, n_fu=2, fu_cost={"dct": (4, 1)},
+            policy=SchedPolicy(issue_mode="eft"))
+    hts.run(p, n_fu=2, fu_cost={"dct": (2, 3)})
+    assert machine._compiled.cache_info().misses == before
+
+
+# ---------------------------------------------------------------------------
+# EFT semantics: unit selection + makespan
+# ---------------------------------------------------------------------------
+def test_eft_avoids_slow_units_greedy_pays_them():
+    """Slow unit at index 0 where greedy looks first: two ready tasks on a
+    (8x, 1x, 1x) dct pool — greedy serialises behind the 8x unit, EFT
+    finishes in one fast-unit pass.  Oracle unit attribution confirms the
+    grant decisions, not just the makespan."""
+    p, cost = _pool(2), {"dct": (8, 1, 1)}
+    greedy = hts.run(p, n_fu=3, fu_cost=cost, backend="golden")
+    eft = hts.run(p, n_fu=3, fu_cost=cost, backend="golden",
+                  policy=SchedPolicy(issue_mode="eft"))
+    assert eft.cycles < greedy.cycles
+    # flattened pool: dct units sit at [3*DCT, 3*DCT + 3)
+    g_units = sorted(t.unit - 3 * DCT for t in greedy.raw.tasks)
+    e_units = sorted(t.unit - 3 * DCT for t in eft.raw.tasks)
+    assert g_units == [0, 1]                 # greedy takes the slow unit
+    assert e_units == [1, 2]                 # eft skips it entirely
+    # heterogeneous latency itself applies under BOTH issue modes
+    assert greedy.cycles > 8 * FUNC_CYCLES[DCT]
+
+
+@pytest.mark.parametrize("backend", ["jax", "golden"])
+def test_uniform_costs_make_eft_equal_greedy(backend):
+    """With uniform unit costs every free unit predicts the same finish,
+    ties break to the lowest index, and eft == greedy bit-for-bit."""
+    for seed in (1, 9, 23):
+        sc = workloads.generate_scenario(seed, kernels=workloads.CHEAP_MIX)
+        a = hts.run(sc.merged, n_fu=2, backend=backend)
+        b = hts.run(sc.merged, n_fu=2, backend=backend,
+                    policy=SchedPolicy(issue_mode="eft"))
+        assert a.cycles == b.cycles, seed
+        assert a.schedule_tuple() == b.schedule_tuple(), seed
+
+
+def _busy_intervals(gold, n_per_class):
+    """unit -> [(issue, complete)) busy spans from oracle attribution."""
+    spans: dict[int, list] = {}
+    for t in gold.tasks:
+        if t.unit >= 0 and not t.aborted and t.complete_cycle >= 0:
+            spans.setdefault(t.unit, []).append(
+                (t.issue_cycle, t.complete_cycle))
+    return spans
+
+
+def test_eft_invariant_no_free_unit_finished_earlier():
+    """The EFT grant property, extracted from real schedules: for every
+    granted (task, unit) pair, no other unit of the class that was *free*
+    at the grant instant had a strictly earlier predicted finish
+    (cost-rank, ties to lower index).  Units busy at the instant —
+    including same-cycle earlier grants — are not candidates, which makes
+    the reconstruction conservative and the check sound."""
+    n_per, checked = 3, 0
+    for seed in range(12):
+        sc = workloads.generate_scenario(seed, kernels=workloads.CHEAP_MIX,
+                                         heterogeneous_fus=True)
+        if sc.fu_cost is None:
+            continue
+        table = norm_fu_cost(sc.fu_cost)
+        pol = dataclasses.replace(sc.policy or SchedPolicy(),
+                                  issue_mode="eft")
+        # hts_nospec: no speculative aborts => every busy span is exact
+        gold = hts.run(sc.merged, n_fu=n_per, backend="golden",
+                       scheduler="hts_nospec", fu_cost=sc.fu_cost,
+                       policy=pol).raw
+        spans = _busy_intervals(gold, n_per)
+        for t in gold.tasks:
+            if t.unit < 0:
+                continue
+            u_in_class = t.unit - n_per * t.func
+            key = (int(table[t.func, u_in_class]), u_in_class)
+            for u in range(n_per):
+                if u == u_in_class:
+                    continue
+                flat = n_per * t.func + u
+                free = all(not (s <= t.issue_cycle < e)
+                           for s, e in spans.get(flat, ()))
+                if free:
+                    assert (int(table[t.func, u]), u) >= key, (
+                        sc.seed, t.uid, t.unit, u)
+                    checked += 1
+    assert checked >= 50, f"only {checked} grant decisions exercised"
+
+
+# ---------------------------------------------------------------------------
+# policy composition under eft
+# ---------------------------------------------------------------------------
+def _max_inflight(result, pid, func):
+    iv = [(r.issue, r.complete) for r in result.schedule
+          if r.pid == pid and r.func == func
+          and not r.aborted and r.issue >= 0 and r.complete >= 0]
+    points = sorted({t for s, e in iv for t in (s, e)})
+    return max((sum(1 for s, e in iv if s <= t < e) for t in points),
+               default=0)
+
+
+def _flood(pid):
+    p = Program(f"flood{pid}", region_base=0x200 + 0x100 * (pid - 1))
+    frame = p.input(0x10, 4, "frame")
+    with p.process(pid):
+        for i in range(8):
+            p.task("dct", in_=frame, out=4, tid=i & 0xF)
+    return p
+
+
+@pytest.mark.parametrize("backend", ["jax", "golden"])
+def test_quota_never_exceeded_under_eft(backend):
+    """The quota mask composes with EFT ranking: per-pid per-class
+    in-flight units stay at the cap even when EFT steers every grant."""
+    prog = Program.merge([_flood(1), _flood(2)], "quota_eft",
+                         require_distinct_pids=True, quotas={1: 1, 2: 2})
+    pol = dataclasses.replace(prog.policy, issue_mode="eft")
+    r = hts.run(prog, n_fu=4, backend=backend, policy=pol,
+                fu_cost={"dct": (6, 1, 1, 2)})
+    assert _max_inflight(r, 1, DCT) <= 1
+    assert _max_inflight(r, 2, DCT) <= 2
+
+
+def test_rs_cap_backpressure_under_eft():
+    """RS admission caps keep binding under eft + heterogeneous costs, on
+    both backends."""
+    from benchmarks.priority import _max_rs_occupancy
+    prog = Program.merge([_flood(1), _flood(2)], "rscap_eft",
+                         require_distinct_pids=True)
+    pol = SchedPolicy.of(rs_caps={1: 2, 2: 2}, issue_mode="eft")
+    for backend in ("jax", "golden"):
+        r = hts.run(prog, n_fu=1, backend=backend, policy=pol,
+                    fu_cost={"dct": 3})
+        for pid in (1, 2):
+            assert _max_rs_occupancy(r, pid) <= 2, (backend, pid)
+
+
+# ---------------------------------------------------------------------------
+# differential: population batch with per-scenario tables
+# ---------------------------------------------------------------------------
+def test_population_compare_heterogeneous_tables():
+    """One batched run_many population compare: per-scenario cost tables
+    (some None, some eft) through golden = machine, event-skip on and
+    off."""
+    scs = [workloads.generate_scenario(s, n_tenants=2,
+                                       kernels=workloads.CHEAP_MIX,
+                                       max_tasks=4, heterogeneous_fus=True)
+           for s in range(6)]
+    assert any(sc.fu_cost is not None for sc in scs)
+    assert any((sc.policy and sc.policy.issue_mode == "eft") for sc in scs)
+    rep = hts.compare([sc.merged for sc in scs],
+                      fu_cost=[sc.fu_cost for sc in scs],
+                      schedulers=("hts_spec",))
+    assert len(rep) == 6 and rep.n_modes == 3
+
+
+def test_sweep_threads_cost_tables_without_recompiling():
+    """A cost-table + eft sweep rides the FU axis machinery: same
+    compiled bucket, and the uniform-table point of the sweep equals the
+    no-table run exactly."""
+    p = _pool(3)
+    base = hts.sweep(p, n_fu=(1, 2, 3), schedulers=("hts_spec",))
+    het = hts.sweep(p, n_fu=(1, 2, 3), schedulers=("hts_spec",),
+                    fu_cost={"dct": (1, 1, 1)},
+                    policy=SchedPolicy(issue_mode="eft"))
+    assert (base.cycles["hts_spec"] == het.cycles["hts_spec"]).all()

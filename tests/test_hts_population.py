@@ -260,3 +260,21 @@ def test_population_mixed_priority_differential_fuzz():
     report = hts.compare(list(pop.programs), n_fu=2,
                          schedulers=("hts_spec",), max_prog=pop.max_prog)
     assert len(report) == 16
+
+
+@pytest.mark.slow
+def test_population_heterogeneous_differential_fuzz():
+    """Heterogeneous population: per-scenario cost tables (mixed with
+    uniform lanes and eft policies) ride the same vmap batch as the
+    mixed-priority tables, golden = machine in every event-skip mode."""
+    (pop,) = workloads.generate_population(16, bucket=False,
+                                           kernels=workloads.CHEAP_MIX,
+                                           max_tasks=4, mixed_priority=True,
+                                           heterogeneous_fus=True)
+    scs = pop.scenarios
+    assert any(sc.fu_cost is not None for sc in scs)
+    assert any(sc.policy and sc.policy.issue_mode == "eft" for sc in scs)
+    report = hts.compare(list(pop.programs), n_fu=2,
+                         fu_cost=[sc.fu_cost for sc in scs],
+                         schedulers=("hts_spec",), max_prog=pop.max_prog)
+    assert len(report) == 16

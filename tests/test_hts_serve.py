@@ -454,6 +454,37 @@ def test_serve_sliced_refill_differential_fuzz(event_skip):
     assert all(b.occupancy > 0.5 for b in rep.per_bucket.values())
 
 
+def test_serve_sliced_heterogeneous_cost_tables():
+    """Slice-and-refill serving under heterogeneous FU costs: a server
+    whose ``params.fu_cost`` marks unit 0 of the hot classes slow, fed a
+    queue deeper than the lane width (so batches refill mid-flight) with
+    a mix of greedy and program-attached eft policies — every request's
+    sliced result equals a direct hts.run with the same table."""
+    from repro.core.hts.costs import fu_cost_tuple
+    from repro.core.hts.programs import Bench
+    params = hts.HtsParams(fu_cost=fu_cost_tuple({"dct": (4, 1),
+                                                  "vector_add": (3, 1)}))
+    progs = []
+    for s in range(8):
+        sc = workloads.generate_scenario(60 + s, n_tenants=2,
+                                         kernels=workloads.CHEAP_MIX)
+        prog = sc.merged.program
+        if s % 2:       # half the requests run the EFT arbiter
+            prog.policy = dataclasses.replace(
+                prog.policy or hts.SchedPolicy(), issue_mode="eft")
+        progs.append(Bench.of(prog))
+    srv = hts.serve(max_batch=3, max_queue=64, deadline=99.0, params=params,
+                    slice_steps=16, clock=hts.ManualClock())
+    with srv:
+        futs = [srv.submit(p) for p in progs]
+        srv.drain()
+        for p, f in zip(progs, futs):
+            got = f.result(timeout=0)
+            ref = hts.run(p, scheduler="hts_spec", n_fu=2, params=params)
+            assert got.halted and got.cycles == ref.cycles, p.name
+            assert got.schedule == ref.schedule, p.name
+
+
 def test_serve_sliced_never_recompiles_across_refills(progs):
     """The cache guarantee extends to compaction: one carry-init compile
     plus one slice compile per bucket, frozen across launches, refills,
