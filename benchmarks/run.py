@@ -11,7 +11,7 @@ import argparse
 import json
 
 from benchmarks import explorer, extensions, frontend, multitenant, \
-    paper_figs, population, priority, serving
+    paper_figs, population, priority, serving, stepwidth
 
 SECTIONS = {
     "tableII": paper_figs.table2,
@@ -25,6 +25,7 @@ SECTIONS = {
     "population": population.section,
     "frontend": frontend.section,
     "serving": serving.section,
+    "stepwidth": stepwidth.section,
     "explorer": explorer.section,
     "ablation": extensions.design_ablation,
 }

@@ -77,12 +77,43 @@ VERIFY_PREFIX = 4
 #: slice budget for the compacted points — "auto" sizes each slice from
 #: the bucket's measured completed-request step-count medians
 SLICE_STEPS = "auto"
+STEPWIDTH_JSON = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_stepwidth.json"
+
+
+def compact_width(best_width: int) -> int:
+    """Clamp the step-curve's best lane width to a usable *compaction*
+    width.  Slice-and-refill only pays while refills actually happen: a
+    compacted batch as wide as the static one swallows the whole queue
+    in a single launch and degenerates to static batching (measured —
+    occupancy collapses and the heterogeneous speedup with it).  Keeping
+    the compacted width at most half the static batch guarantees the
+    queue stays non-empty long enough for harvested lanes to be
+    refilled, which is the whole mechanism."""
+    return max(1, min(int(best_width), DEFAULT_MAX_BATCH // 2))
+
+
+def _compact_max_batch(default: int = 4) -> int:
+    """Lane width for the compacted points, derived from the committed
+    step-width curve (``BENCH_stepwidth.json``, written by
+    ``benchmarks/stepwidth.py``): the width maximising lanes advanced
+    per microsecond of per-trip step cost on the default ``xla`` impl,
+    clamped by :func:`compact_width`.  Falls back to ``default`` when no
+    curve has been committed."""
+    try:
+        data = json.loads(STEPWIDTH_JSON.read_text())
+        return compact_width(data["derived"]["best_width_xla"])
+    except (OSError, KeyError, ValueError, TypeError):
+        return default
+
+
 #: lane width for the compacted points.  Batched step cost grows with
 #: lane width on CPU, so width only pays where lanes stay oversubscribed;
 #: compaction's refill keeps *narrow* lanes permanently full, which is
 #: the winning trade on a heterogeneous stream (wide static batches idle
-#: behind their slowest lane instead).
-COMPACT_MAX_BATCH = 4
+#: behind their slowest lane instead).  The width itself is measured,
+#: not hand-picked: it comes off the committed step-width curve.
+COMPACT_MAX_BATCH = _compact_max_batch()
 #: every stream a point measures (the ``*_compacted`` pair serve with
 #: ``slice_steps=SLICE_STEPS`` at ``COMPACT_MAX_BATCH`` lanes)
 STREAMS = ("qos", "generated", "generated_compacted", "qos_compacted")

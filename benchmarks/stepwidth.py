@@ -1,0 +1,262 @@
+"""Step-width benchmark: per-trip step cost vs lane width, per step impl.
+
+The population machine runs one ``lax.while_loop`` whose body is the
+vmapped per-cycle step, so *every* batched economics question in this
+repo — static batching, slice-and-refill compaction, sharding — reduces
+to one curve: **wall-clock per while-loop trip as a function of lane
+width**.  The flatter that curve, the wider the profitable batch.  This
+driver measures it directly for each step-body lowering
+(``machine.STEP_IMPLS``):
+
+* ``xla_base`` — the pre-restructure step body, kept verbatim as the
+  measured baseline for this curve.
+* ``xla`` — the restructured default: hoisted tables, collapsed
+  masked-select chains, cumsum-rank CDB enqueue instead of a full
+  argsort, narrow mask dtypes in the RS arbiter, and event-proportional
+  *scatter* trace writes in place of the base machine's U-wide one-hot
+  selects (the dominant per-lane term of the trip cost — K×U compares
+  per trace write per trip, paid whether or not any event fired).
+* ``pallas`` — the fused per-lane kernel step (``pallas_step.py``),
+  lane-per-program grid.  On CPU this runs in **interpret mode**, so its
+  numbers here are honesty checks and shape validation, not a speed
+  claim; on a TPU backend the same code path compiles to Mosaic.
+
+Method: one CHEAP_MIX scenario is packed once at the facade-default
+capacities (``HtsParams()``) — the state shape every ``hts.run_many``
+caller pays for unless they right-size it, and the regime where the
+U-proportional trace-write term dominates the lane slope — and
+replicated lane-for-lane to each width with ``batch.replicate``, so the
+sweep varies *only* the width.
+Each (width, impl) point re-enters its run's own compile bucket through
+``PopulationResult.trip_cost_us``: a fresh carry advanced by a fixed
+step budget, median of ``reps`` timed slices — interleaved round-robin
+across impls, so the shared box's load drift cannot bias one impl's
+median — divided by the trips actually executed.
+
+The derived block feeds a policy knob: ``best_width_xla`` is the width
+maximising lanes-per-microsecond on the default impl, and
+``benchmarks/serving.py`` derives its ``COMPACT_MAX_BATCH`` (the
+slice-and-refill lane width) from the committed JSON.  The driver
+re-measures the serving ``qos_compacted`` point at that width to close
+the loop.
+
+    PYTHONPATH=src python -m benchmarks.stepwidth            # writes JSON
+    PYTHONPATH=src python -m benchmarks.stepwidth --smoke    # CI-sized
+
+JSON lands in ``BENCH_stepwidth.json`` (repo root); see
+docs/BENCHMARKS.md for the schema.  Headline acceptance: the
+restructured ``xla`` width-8/width-1 per-trip ratio is strictly below
+``xla_base``'s — the restructure flattened the curve, not just shifted
+it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+DEFAULT_WIDTHS = (1, 2, 4, 8, 16)
+DEFAULT_BUDGET = 256
+DEFAULT_REPS = 7
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_stepwidth.json"
+
+SEED = 11
+SCENARIO_KW = dict(n_tenants=2, max_tasks=4)
+#: facade-default machine capacities (``HtsParams()``): the trace tables
+#: are (max_tasks+1,)-wide, so the default 1024-task capacity is exactly
+#: where the base machine's one-hot trace writes dominate the per-lane
+#: slope this benchmark exists to measure
+PARAMS_KW: dict = {}
+IMPLS = ("xla_base", "xla", "pallas")
+#: the two widths whose per-trip ratio is the headline (width growth
+#: factor the restructure must beat)
+RATIO_WIDTHS = (1, 8)
+
+
+def _population(width: int):
+    """One CHEAP scenario, packed at default capacities, tiled to
+    ``width`` identical lanes — width is the only swept variable."""
+    from repro.core import hts
+    from repro.core.hts import batch, workloads
+    sc = workloads.generate_scenario(SEED, kernels=workloads.CHEAP_MIX,
+                                     **SCENARIO_KW)
+    pop = batch.pack_population([sc.merged],
+                                params=hts.HtsParams(**PARAMS_KW))
+    return batch.replicate(pop, width)
+
+
+def measure_point(width: int, *, budget: int, reps: int,
+                  impls=IMPLS) -> dict:
+    """Per-trip medians for every impl at one lane width.  Each impl's
+    run is its own compile bucket (``step_impl`` is a spec field);
+    ``trip_cost_us`` times the resumable machine of that same bucket.
+    Reps are **interleaved round-robin across impls** so the shared
+    box's slow load drift lands on every impl alike — back-to-back
+    per-impl blocks would let a noisy minute bias one impl's median."""
+    from repro.core import hts
+    pop = _population(width)
+    runs = {}
+    for impl in impls:
+        r = hts.run_many(pop, scheduler="hts_spec", step_impl=impl)
+        assert bool(np.asarray(r.halted).all()), (impl, width)
+        runs[impl] = r
+    walls = {impl: [] for impl in impls}
+    for _ in range(reps):
+        for impl in impls:
+            walls[impl].append(runs[impl].trip_cost_us(budget=budget,
+                                                       reps=1))
+    return {"width": width,
+            "per_trip_us": {i: float(np.median(walls[i])) for i in impls}}
+
+
+def _derived(points, impls=IMPLS) -> dict:
+    by_w = {p["width"]: p["per_trip_us"] for p in points}
+    lo, hi = RATIO_WIDTHS
+    ratios = {impl: by_w[hi][impl] / by_w[lo][impl]
+              for impl in impls if lo in by_w and hi in by_w}
+    # throughput proxy: lanes advanced per microsecond of trip cost —
+    # the width the compacted serving path should run at
+    lanes_per_us = {w: w / c["xla"] for w, c in by_w.items()}
+    best = min(sorted(lanes_per_us),
+               key=lambda w: (-lanes_per_us[w], w))
+    return {
+        "ratio_widths": list(RATIO_WIDTHS),
+        "per_trip_ratio": ratios,
+        "lanes_per_us_xla": lanes_per_us,
+        "best_width_xla": best,
+    }
+
+
+def sweep(*, widths=DEFAULT_WIDTHS, budget: int = DEFAULT_BUDGET,
+          reps: int = DEFAULT_REPS, impls=IMPLS,
+          serving_point: bool = True) -> dict:
+    from benchmarks import serving
+    from repro.core.hts import pallas_step
+
+    points = [measure_point(w, budget=budget, reps=reps, impls=impls)
+              for w in widths]
+    derived = _derived(points, impls=impls)
+
+    data = {
+        "bench": "stepwidth",
+        "spec": {
+            "seed": SEED,
+            "scenario_kw": SCENARIO_KW,
+            "params": PARAMS_KW,
+            "budget": budget,
+            "reps": reps,
+            "impls": list(impls),
+            "pallas_interpret": pallas_step.INTERPRET,
+        },
+        "points": points,
+        "derived": derived,
+        "note": "per-trip medians of {} reps at step budget {}; wall "
+                "times on this class of box are +/-50% noisy, so assert "
+                "against conservative bounds, not the medians; pallas "
+                "numbers are interpret-mode on CPU (correctness path, "
+                "not a speed claim)".format(reps, budget),
+    }
+
+    r = derived["per_trip_ratio"]
+    if "xla" in r and "xla_base" in r:
+        data["headline"] = {
+            "baseline_w{}_over_w{}".format(*RATIO_WIDTHS[::-1]):
+                r["xla_base"],
+            "restructured_w{}_over_w{}".format(*RATIO_WIDTHS[::-1]):
+                r["xla"],
+            "flattened": r["xla"] < r["xla_base"],
+            "best_width_xla": derived["best_width_xla"],
+        }
+
+    if serving_point:
+        # close the loop: re-measure the serving qos_compacted point at
+        # the width this curve says is profitable (the same width
+        # benchmarks/serving.py derives its COMPACT_MAX_BATCH from —
+        # clamped below the static batch so slice-and-refill can refill)
+        w = serving.compact_width(derived["best_width_xla"])
+        pt = serving.measure_stream(
+            serving.qos_stream(16), devices=1, max_batch=w,
+            reps=max(1, reps // 2), slice_steps=serving.SLICE_STEPS)
+        data["serving"] = {
+            "qos_compacted_width": w,
+            "n_requests": pt["n_requests"],
+            "speedup_vs_sequential": pt["speedup_vs_sequential"],
+            "mean_occupancy": pt["mean_occupancy"],
+        }
+    return data
+
+
+def section():
+    """``benchmarks.run`` integration: a two-width mini-sweep per impl."""
+    rows = []
+    for w in (1, 8):
+        pt = measure_point(w, budget=32, reps=1)
+        for impl in IMPLS:
+            rows.append((f"stepwidth/w{w}/{impl}",
+                         pt["per_trip_us"][impl], {"width": w}))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--widths", type=int, nargs="+",
+                    default=list(DEFAULT_WIDTHS))
+    ap.add_argument("--budget", type=int, default=DEFAULT_BUDGET)
+    ap.add_argument("--reps", type=int, default=DEFAULT_REPS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (widths 1+4, budget 32, 1 rep, no "
+                         "serving re-measure; no JSON unless --out)")
+    ap.add_argument("--out", default=None,
+                    help=f"output path (default {DEFAULT_OUT}; smoke runs "
+                         "write no JSON unless set)")
+    args = ap.parse_args()
+
+    if args.smoke:
+        data = sweep(widths=(1, 4), budget=32, reps=1,
+                     serving_point=False)
+        # smoke gates the machinery, not wall-clock: every impl produced
+        # a positive per-trip figure at every width and the derived
+        # block computed
+        for p in data["points"]:
+            for impl in IMPLS:
+                assert p["per_trip_us"][impl] > 0.0, (p["width"], impl)
+        assert data["derived"]["best_width_xla"] in (1, 4)
+    else:
+        data = sweep(widths=tuple(args.widths), budget=args.budget,
+                     reps=args.reps)
+
+    out = None
+    if args.out:
+        out = pathlib.Path(args.out)
+    elif not args.smoke:
+        out = DEFAULT_OUT
+    if out is not None:
+        out.write_text(json.dumps(data, indent=2, default=float) + "\n")
+        print(f"wrote {out}")
+
+    for p in data["points"]:
+        cells = "  ".join(f"{impl} {p['per_trip_us'][impl]:>9.1f}"
+                          for impl in data["spec"]["impls"])
+        print(f"  width {p['width']:>2}: {cells}  (us/trip)")
+    d = data["derived"]
+    print(f"  w{RATIO_WIDTHS[1]}/w{RATIO_WIDTHS[0]} per-trip ratio: " +
+          ", ".join(f"{i} {d['per_trip_ratio'][i]:.2f}x"
+                    for i in d["per_trip_ratio"]))
+    print(f"  best width (xla lanes/us): {d['best_width_xla']}")
+    if "headline" in data:
+        h = data["headline"]
+        print(f"  headline: restructured ratio "
+              f"{h['restructured_w8_over_w1']:.2f}x vs baseline "
+              f"{h['baseline_w8_over_w1']:.2f}x — flattened: "
+              f"{'YES' if h['flattened'] else 'NO'}")
+    if "serving" in data:
+        s = data["serving"]
+        print(f"  serving qos_compacted @ width {s['qos_compacted_width']}: "
+              f"{s['speedup_vs_sequential']:.2f}x vs sequential")
+
+
+if __name__ == "__main__":
+    main()

@@ -51,7 +51,7 @@ Lower layers remain importable directly (``isa``, ``assembler``, ``costs``,
 ``golden``, ``machine``, ``batch``, ``programs``, ``workloads``) for
 tests and tools.
 """
-from .api import (ALL_SCHEDULERS, CompareReport, FairnessReport,
+from .api import (ALL_SCHEDULERS, STEP_IMPLS, CompareReport, FairnessReport,
                   MismatchError, PopulationCompareReport, PopulationResult,
                   Result, SimulationError, SweepResult, TaskRow, compare,
                   compare_population, run, run_many, scenarios_per_second,
@@ -73,7 +73,8 @@ __all__ = [
     "PopulationCompareReport", "PopulationResult", "Program",
     "QueueFullError", "Reg", "Region", "Result", "SchedPolicy",
     "SchedulerCosts", "Server", "ServeReport", "ServeSpec",
-    "SimulationError", "Stream", "StreamSet", "SweepResult", "SystemClock",
+    "STEP_IMPLS", "SimulationError", "Stream", "StreamSet", "SweepResult",
+    "SystemClock",
     "TaskHandle", "TaskRow", "Walker", "build_frontends", "compare",
     "compare_population", "costs_by_name", "pack_population", "prog_bucket",
     "run", "run_many", "scenarios_per_second", "serve", "sweep",

@@ -82,6 +82,7 @@ import numpy as np
 
 from . import batch, golden, machine
 from .batch import PackedPopulation
+from .machine import STEP_IMPLS
 from .costs import (ALL_SCHEDULERS, FUNC_NAMES, NUM_FUNCS, SchedulerCosts,
                     costs_by_name, fu_cost_tuple, norm_fu_cost)
 from .frontend import StreamSet
@@ -382,7 +383,8 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
         params: HtsParams = HtsParams(), event_skip: bool = True,
         max_cycles: int = 5_000_000, max_prog: int = 256,
         max_fu_per_class: int = 16, check: bool = True,
-        policy: Optional[SchedPolicy] = None, fu_cost=None) -> Result:
+        policy: Optional[SchedPolicy] = None, fu_cost=None,
+        step_impl: str = "xla") -> Result:
     """Simulate ``program`` under one scheduler cost model.
 
     ``policy`` selects the RS arbitration (per-pid priority weights + FU
@@ -419,7 +421,8 @@ def run(program, *, scheduler: Union[str, SchedulerCosts] = "hts_spec",
                                event_skip=event_skip, max_cycles=max_cycles,
                                max_fu_per_class=max_fu_per_class,
                                max_prog=max_prog, policy=pol,
-                               fu_cost=eff_cost, streams=stream_tab)
+                               fu_cost=eff_cost, streams=stream_tab,
+                               step_impl=step_impl)
         wall = (time.perf_counter() - t0) * 1e6
         result = _machine_result(prep.name, cost.name, fu, out, wall, pol,
                                  max_fu_per_class, prep.streams)
@@ -477,6 +480,12 @@ class PopulationResult:
     _results: Optional[tuple] = dataclasses.field(repr=False, default=None)
     #: per-scenario frontend stream sets (None entries = merged frontend)
     stream_sets: tuple = ()
+    # the compiled-machine identity of this run (spec + shape bucket +
+    # machine args), stashed by ``run_many`` so :meth:`trip_cost_us` can
+    # re-enter the same compile bucket; None on the golden backend
+    _spec: Any = dataclasses.field(repr=False, default=None)
+    _max_prog: Optional[int] = dataclasses.field(repr=False, default=None)
+    _margs: Any = dataclasses.field(repr=False, default=None)
 
     def __len__(self) -> int:
         return len(self.names)
@@ -518,6 +527,40 @@ class PopulationResult:
         return scenarios_per_second(
             len(self), self.wall_us if wall_us is None else wall_us)
 
+    def trip_cost_us(self, budget: int = 128, reps: int = 5) -> float:
+        """Median wall-clock per while-loop trip of this population's
+        compiled machine (microseconds).
+
+        The measurement re-enters the run's own compile bucket through
+        the *resumable* machine: a fresh carry is advanced by exactly
+        ``budget`` steps per lane (`run_slice` with a fixed step budget,
+        ``block_until_ready`` around each call), ``reps`` times after one
+        untimed warm-up, and the median wall divides by the trips the
+        slice actually executed.  Because every lane runs the same
+        budget from a fresh carry, trips = ``budget`` until a lane halts
+        earlier — the returned figure is the population step body's
+        per-trip cost at this lane width, the number
+        ``benchmarks/stepwidth.py`` sweeps.  Requires the jax backend
+        (raises on golden results).
+        """
+        import jax
+        import jax.numpy as jnp
+        if self._spec is None:
+            raise ValueError("trip_cost_us requires a jax-backend "
+                             "population run")
+        rm = _population_slicer(self._spec, self._max_prog)
+        args = [jnp.asarray(a) for a in self._margs]
+        b = jnp.asarray(budget, jnp.int32)
+        carry0 = jax.block_until_ready(rm.init(*args))
+        jax.block_until_ready(rm.run_slice(carry0, *args, b))  # warm-up
+        walls = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(rm.run_slice(carry0, *args, b))
+            walls.append((time.perf_counter() - t0) * 1e6)
+        trips = int(np.max(np.asarray(out["steps"])))
+        return float(np.median(walls)) / max(trips, 1)
+
     def scenarios_per_sec(self) -> float:
         """Batched throughput of this call (scenarios per host second)."""
         return self.scenarios_per_second()
@@ -539,7 +582,8 @@ def run_many(programs, *,
              max_cycles: int = 5_000_000, max_prog: Optional[int] = None,
              max_fu_per_class: Optional[int] = None,
              policy=None, check: bool = True,
-             devices: Optional[int] = None, fu_cost=None) -> PopulationResult:
+             devices: Optional[int] = None, fu_cost=None,
+             step_impl: str = "xla") -> PopulationResult:
     """Simulate a population of programs as **one vmapped machine call**.
 
     ``programs`` is a sequence of anything :func:`run` accepts (or an
@@ -566,6 +610,13 @@ def run_many(programs, *,
     ``backend="golden"`` runs the pure-Python oracle in a loop instead —
     same :class:`PopulationResult` surface, no batching (the differential
     baseline).
+
+    ``step_impl`` selects the step-body lowering
+    (:data:`~repro.core.hts.machine.STEP_IMPLS`): the restructured XLA
+    form (default), the pre-restructure baseline, or the fused pallas
+    kernels — all bit-identical, differentially pinned.  It is part of
+    the compile key; the default value keeps the default path in the
+    pre-existing compile bucket.
     """
     import jax
     import jax.numpy as jnp
@@ -607,7 +658,8 @@ def run_many(programs, *,
 
     spec = machine.MachineSpec(params=pop.params, costs=cost,
                                event_skip=event_skip, max_cycles=max_cycles,
-                               max_fu_per_class=max_fu_per_class)
+                               max_fu_per_class=max_fu_per_class,
+                               step_impl=step_impl)
     runner = _runner_for(spec, pop.max_prog, devices)
     if devices is not None:
         from . import shard
@@ -626,7 +678,9 @@ def run_many(programs, *,
         scheduler=cost.name, backend="jax", names=pop.names, n_fu=pop.n_fu,
         cycles=out["cycles"], halted=halted, wall_us=wall,
         max_fu_per_class=max_fu_per_class, policies=pop.policies, raw=out,
-        stream_sets=tuple(p.streams for p in pop.preps))
+        stream_sets=tuple(p.streams for p in pop.preps),
+        _spec=spec, _max_prog=pop.max_prog,
+        _margs=tuple(run_pop.machine_args()))
     if check and not result.all_halted:
         bad = [pop.names[i] for i in np.nonzero(~halted)[0]]
         raise SimulationError(
@@ -924,7 +978,8 @@ def compare_population(programs, *,
                        max_prog: Optional[int] = None,
                        max_fu_per_class: Optional[int] = None,
                        policy=None, fu_cost=None,
-                       devices: Optional[int] = None) -> PopulationCompareReport:
+                       devices: Optional[int] = None,
+                       step_impl: str = "xla") -> PopulationCompareReport:
     """Differential verification of a whole population: one vmapped machine
     batch per (scheduler, event-skip mode), checked scenario-by-scenario
     against a golden loop.  Raises :class:`MismatchError` naming the
@@ -952,7 +1007,8 @@ def compare_population(programs, *,
         for event_skip in (True, False):
             m = run_many(pop, scheduler=cost, event_skip=event_skip,
                          max_cycles=max_cycles,
-                         max_fu_per_class=max_fu_per_class, devices=devices)
+                         max_fu_per_class=max_fu_per_class, devices=devices,
+                         step_impl=step_impl)
             mode = f"jax event_skip={'on' if event_skip else 'off'}"
             for i in range(len(pop)):
                 if int(m.cycles[i]) != int(gold.cycles[i]):
@@ -978,7 +1034,8 @@ def compare(program, *,
             params: HtsParams = HtsParams(),
             max_cycles: int = 5_000_000, max_prog: Optional[int] = None,
             max_fu_per_class: Optional[int] = None,
-            policy: Optional[SchedPolicy] = None, fu_cost=None):
+            policy: Optional[SchedPolicy] = None, fu_cost=None,
+            step_impl: str = "xla"):
     """Differential execution: golden oracle vs the compiled JAX machine with
     event-skip **on and off**, for every scheduler cost model.
 
@@ -1008,7 +1065,7 @@ def compare(program, *,
             program, schedulers=schedulers, n_fu=n_fu, params=params,
             max_cycles=max_cycles, max_prog=max_prog,
             max_fu_per_class=max_fu_per_class, policy=policy,
-            fu_cost=fu_cost)
+            fu_cost=fu_cost, step_impl=step_impl)
     prep = _prepare(program)
     if max_prog is None:
         max_prog = 256
@@ -1031,7 +1088,7 @@ def compare(program, *,
                     params=params, event_skip=event_skip,
                     max_cycles=max_cycles, max_prog=max_prog,
                     max_fu_per_class=max_fu_per_class, policy=policy,
-                    fu_cost=fu_cost)
+                    fu_cost=fu_cost, step_impl=step_impl)
             mode = f"jax event_skip={'on' if event_skip else 'off'}"
             if m.cycles != g.cycles:
                 raise MismatchError(
@@ -1051,4 +1108,5 @@ __all__ = ["run", "run_many", "sweep", "compare", "compare_population",
            "Result", "PopulationResult", "SweepResult", "TaskRow",
            "FairnessReport", "CompareReport", "PopulationCompareReport",
            "MismatchError", "SimulationError", "SchedPolicy",
-           "PackedPopulation", "ALL_SCHEDULERS", "scenarios_per_second"]
+           "PackedPopulation", "ALL_SCHEDULERS", "STEP_IMPLS",
+           "scenarios_per_second"]

@@ -260,6 +260,35 @@ class PackedPopulation:
         return tab[keep] if keep.any() else tab[:1]
 
 
+def replicate(pop: PackedPopulation, width: int) -> PackedPopulation:
+    """A ``width``-lane population that tiles ``pop``'s lanes.
+
+    Every batched array repeats lane-for-lane (lane ``i`` is source lane
+    ``i % len(pop)``), so the replica exercises exactly the same step
+    bodies at a different lane width — the controlled variable of the
+    width-cost sweeps (``benchmarks/stepwidth.py``).  Names are suffixed
+    with the replica index to stay unique.
+    """
+    n = len(pop)
+    if width < 1:
+        raise ValueError(f"width must be >= 1, got {width}")
+    idx = np.arange(width) % n
+
+    def tile(a: np.ndarray) -> np.ndarray:
+        return np.ascontiguousarray(np.asarray(a)[idx])
+
+    return dataclasses.replace(
+        pop,
+        names=tuple(f"{pop.names[i % n]}#r{i // n}" for i in range(width)),
+        preps=tuple(pop.preps[i % n] for i in range(width)),
+        policies=tuple(pop.policies[i % n] for i in range(width)),
+        ftab=tile(pop.ftab), p_len=tile(pop.p_len), mem=tile(pop.mem),
+        eff=tile(pop.eff), n_fu=tile(pop.n_fu), prio=tile(pop.prio),
+        quota=tile(pop.quota), rs_cap=tile(pop.rs_cap),
+        fu_cost=tile(pop.fu_cost), eft=tile(pop.eft),
+        streams=tile(pop.streams))
+
+
 def _broadcast_n_fu(n_fu, n: int) -> np.ndarray:
     """One shared FU spec or a length-N per-scenario list → (N, NUM_FUNCS).
 

@@ -71,6 +71,18 @@ class ResumableMachine:
     collect: Any
 
 
+#: valid ``step_impl`` values — how the step body's scatter/select-heavy
+#: phases are implemented (identical schedules, different lowering):
+#: ``"xla"`` (default) is the restructured XLA form (cumsum ranks instead of
+#: the argsort, one shared key-comparison matrix in the RS arbiter,
+#: per-class unit ranking, fused trace selectors); ``"xla_base"`` preserves
+#: the pre-restructure phase bodies verbatim (the honest benchmark
+#: baseline); ``"pallas"`` runs the population step's hot phases as fused
+#: ``pl.pallas_call`` kernels with a lane-per-program grid
+#: (:mod:`pallas_step` — interpreted on CPU, real lowering on TPU).
+STEP_IMPLS = ("xla", "xla_base", "pallas")
+
+
 @dataclasses.dataclass(frozen=True)
 class MachineSpec:
     """Static configuration baked into the compiled machine."""
@@ -87,13 +99,26 @@ class MachineSpec:
     #: transactional-memory slot width (speculative outputs can never be
     #: wider than a TM slot anyway).
     max_out_words: int = 16
+    #: step-body implementation (see :data:`STEP_IMPLS`).  Part of the
+    #: compile key like every other field; the default value keeps the
+    #: default path in the same compile bucket as before the field existed.
+    step_impl: str = "xla"
 
 
 def make_machine(spec: MachineSpec, max_prog: int = 256,
-                 population: bool = False, resumable: bool = False):
+                 population: bool = False, resumable: bool = False,
+                 step_impl: str | None = None):
     """Build the machine under ``spec``; returns
     ``run(ftab, p_len, n_fu, mem_init, effects, prio, quota, rs_cap,
     fu_cost, eft, streams)``.
+
+    ``step_impl`` overrides ``spec.step_impl`` (see :data:`STEP_IMPLS`):
+    ``"xla"`` / ``"xla_base"`` / ``"pallas"`` select how the hot step
+    phases lower — all three produce bit-identical schedules (pinned by
+    the differential tests).  The pallas implementation is population-
+    level (``pl.pallas_call`` cannot sit under ``jax.vmap``), so a
+    single-lane pallas machine runs as a population of one and squeezes
+    the lane axis off its outputs — integer math, still bit-identical.
 
     With ``population=True`` the returned runner expects every argument
     with a leading *scenario* axis and simulates the whole batch in one
@@ -150,6 +175,11 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
     the *policy* axis (``prio``/``quota``/``rs_cap``, with ``fu_cost``/
     ``eft`` riding the scenario axis); ``api.py`` composes them.
     """
+    impl = spec.step_impl if step_impl is None else step_impl
+    if impl not in STEP_IMPLS:
+        raise ValueError(f"step_impl must be one of {STEP_IMPLS}, "
+                         f"got {impl!r}")
+    base = impl == "xla_base"
     p = spec.params
     c = spec.costs
     if p.max_tasks > AGE_SPAN:
@@ -184,13 +214,20 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         """``arr[uid] = value where enable`` for uid-indexed trace arrays.
 
         ``uid``/``enable`` may be scalars or aligned vectors (one slot per
-        RS entry / FU).  The single machine writes through a scatter (fast
-        per lane); the population machine uses a one-hot select — batched
-        scatters on CPU pay per *update × lane*, which made the trace
-        writes the hottest ops in the population body.
+        RS entry / FU).  The single machine writes through a scatter; the
+        *base* population machine uses a one-hot select (its historical
+        form — batched scatters were assumed to pay per *update × lane*).
+        The restructured path scatters in the population machine too: a
+        one-hot costs K×U compares per lane per trip whether or not any
+        event fired, while the scatter costs only the handful of actual
+        updates — measured even at serving-sized tables (U=65) and ~3×
+        cheaper per trip at default capacities (U=1025), which is where
+        the lane-width slope of the step body lived.  The per-lane pallas
+        kernels made this obvious: inside a kernel body (no batch axis)
+        the write is naturally a scatter (:func:`tw_scatter`).
         """
         uid = jnp.asarray(uid)
-        if not population:
+        if not population or not base:
             idx = jnp.where(enable, uid, U)
             return arr.at[idx].set(value, mode="drop")
         if uid.ndim == 0:
@@ -198,6 +235,30 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         else:
             hit = (enable[:, None] & (uid[:, None] == u_iota[None, :])).any(0)
         return jnp.where(hit, value, arr)
+
+    def tw_scatter(arr, uid, value, enable):
+        """The single-machine scatter form of :func:`trace_write`, used
+        *inside* pallas kernels too: a kernel body runs per lane (no batch
+        axis), so scatters are cheap again there even when the machine as
+        a whole is a population."""
+        uid = jnp.asarray(uid)
+        idx = jnp.where(enable, uid, U)
+        return arr.at[idx].set(value, mode="drop")
+
+    # several trace arrays written under ONE (uid, enable) pair — e.g. the
+    # frontend's four dispatch traces — share one selector instead of
+    # recomputing it per array.  On the scatter path the selector is the
+    # guarded index itself; the base population machine shares the
+    # (U,)-wide one-hot (the dominant per-lane cost of its trace writes).
+    def trace_sel(uid, enable):
+        if not population or not base:
+            return jnp.where(enable, uid, U)
+        return enable & (u_iota == uid)
+
+    def trace_put(arr, sel, value):
+        if not population or not base:
+            return arr.at[sel].set(value, mode="drop")
+        return jnp.where(sel, value, arr)
 
     def init_state(mem_init, streams):
         # NB the read-only ``effects`` image is NOT part of the state: the
@@ -297,7 +358,10 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
                                             jnp.where(mask, vals, cur),
                                             (dst_c,))
 
-    def fu_tick(st, exists, effect, alive):
+    def fu_exec(st, exists, effect, alive):
+        """Per-unit execution tick + completion memory writes; returns the
+        ``done`` mask for the slot-side CDB enqueue (its own phase so the
+        pallas machine can vmap this half and kernel the enqueue)."""
         busy = st["fu_busy"] & exists & alive
         st["fu_busy_cycles"] = st["fu_busy_cycles"] + jnp.where(busy, st["dt"], 0)
         rem = jnp.where(busy, st["fu_rem"] - st["dt"], st["fu_rem"])
@@ -311,22 +375,34 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
                                st["fu_out_e"][i] - st["fu_out_s"][i],
                                done[i])
         st["mem"] = jax.lax.fori_loop(0, NFU, mem_trip, st["mem"])
+        return st, done
 
+    def cdb_enqueue(st, done, tw):
         # --- CDB enqueue: k-th done unit → k-th free slot, ticket + k.
         # Written slot-side ((C,)-wide selects + gathers, no scatters —
         # batched scatters pay per update) — identical to the sequential
         # argmin loop: the slot of free-rank r receives the done unit of
         # FU-index-rank r and the r-th consecutive ticket.
-        k = jnp.cumsum(done.astype(I32)) - 1                      # unit rank
         n_done = jnp.sum(done, dtype=I32)
         free = ~st["cdb_valid"]
         free_rank = jnp.cumsum(free.astype(I32)) - 1              # slot rank
         n_free = jnp.sum(free, dtype=I32)
         n_enq = jnp.minimum(n_done, n_free)
-        # unit_of_rank[r]: the r-th completing unit in FU-index order
-        unit_of_rank = jnp.argsort(jnp.where(done, k, BIG)).astype(I32)
+        fr = jnp.clip(free_rank, 0, NFU - 1)
+        if base:
+            # unit_of_rank[r]: the r-th completing unit in FU-index order
+            k = jnp.cumsum(done.astype(I32)) - 1                  # unit rank
+            unit_of_rank = jnp.argsort(jnp.where(done, k, BIG)).astype(I32)
+            u = unit_of_rank[fr]                                  # (C,)
+        else:
+            # same rank → unit map without the (NFU,)-argsort: csum[i]
+            # counts completions through unit i, so the first index with
+            # csum ≥ r+1 IS the r-th completing unit — a log2(NFU) binary
+            # search per slot.  Slots past n_enq are masked by ``take``.
+            csum = jnp.cumsum(done.astype(I32))
+            u = jnp.clip(jnp.searchsorted(csum, fr + 1, side="left"),
+                         0, NFU - 1).astype(I32)
         take = free & (free_rank < n_enq)
-        u = unit_of_rank[jnp.clip(free_rank, 0, NFU - 1)]         # (C,)
         st["cdb_valid"] = st["cdb_valid"] | take
         st["cdb_uid"] = jnp.where(take, st["fu_uid"][u], st["cdb_uid"])
         st["cdb_ticket"] = jnp.where(take, st["ticket"] + free_rank,
@@ -338,8 +414,8 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         st["overflow"] = st["overflow"] | (n_done > n_free)
 
         # --- trace + unit release
-        st["tr_complete"] = trace_write(st["tr_complete"], st["fu_uid"],
-                                        st["cycle"], done)
+        st["tr_complete"] = tw(st["tr_complete"], st["fu_uid"],
+                               st["cycle"], done)
         st["fu_busy"] = st["fu_busy"] & ~done
         st["fu_uid"] = jnp.where(done, 0, st["fu_uid"])
         return st
@@ -355,9 +431,8 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         st["mr_active"] = st["mr_active"] & ~fired
         return st, fired
 
-    def cdb_grant(st, br_ready, alive):
-        def grant_one(carry, _):
-            st, br_ready = carry
+    def cdb_grant(st, br_ready, alive, tw, unroll=False):
+        def grant_one(st, br_ready):
             ready = st["cdb_valid"] & (st["cdb_ready"] <= st["cycle"]) & alive
             idx = jnp.argmin(jnp.where(ready, st["cdb_ticket"], BIG))
             has = ready.any()
@@ -365,20 +440,36 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
             st["cdb_valid"] = st["cdb_valid"] & ~(has & (c_iota == idx))
             st["rs_dep"] = jnp.where(has & (st["rs_dep"] == uid), 0, st["rs_dep"])
             st["trk_valid"] = st["trk_valid"] & ~(has & (st["trk_uid"] == uid))
-            st["tr_broadcast"] = trace_write(st["tr_broadcast"], uid,
-                                             st["cycle"], has)
+            st["tr_broadcast"] = tw(st["tr_broadcast"], uid,
+                                    st["cycle"], has)
             br_ready = br_ready | (has & st["br_active"]
                                    & (st["br_kind"] == isa.BR_BR)
                                    & (st["br_wait"] == uid))
-            return (st, br_ready), None
-        (st, br_ready), _ = jax.lax.scan(grant_one, (st, br_ready), None,
+            return st, br_ready
+        # every scheduler model grants one broadcast per cycle (cdb_width
+        # 1), so the restructured path inlines the single grant instead of
+        # paying a length-1 ``lax.scan``; kernels unroll wider widths too
+        # (a Python loop of the same body — identical ops, no scan carry)
+        if (not base and c.cdb_width == 1) or unroll:
+            for _ in range(c.cdb_width):
+                st, br_ready = grant_one(st, br_ready)
+            return st, br_ready
+
+        def body(carry, _):
+            return grant_one(*carry), None
+        (st, br_ready), _ = jax.lax.scan(body, (st, br_ready), None,
                                          length=c.cdb_width)
         return st, br_ready
 
     # ------------------------------------------------------------------
     # phase 4: branch resolution
     # ------------------------------------------------------------------
-    def branch_resolve(st, br_ready):
+    def branch_core(st, br_ready):
+        """Branch resolution minus the two ``tr_aborted`` trace writes —
+        returns the kill masks plus the uid arrays *as of the squash* (the
+        core zeroes ``fu_uid``, and the frontend later overwrites
+        ``rs_uid`` slots) so the caller can apply the aborted traces in
+        whichever form suits its backend."""
         fire = st["br_active"] & br_ready
         value = st["mem"][remap(st, st["br_addr"])]
         taken = eval_cond(st["br_cond"], value, st["br_thr"])
@@ -399,10 +490,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         # --- squash: discard speculative state, roll back, redirect
         rs_kill = squash & st["rs_valid"] & st["rs_spec"]
         fu_kill = squash & st["fu_busy"] & st["fu_spec"]
-        st["tr_aborted"] = trace_write(st["tr_aborted"], st["rs_uid"],
-                                       True, rs_kill)
-        st["tr_aborted"] = trace_write(st["tr_aborted"], st["fu_uid"],
-                                       True, fu_kill)
+        rs_uid_k, fu_uid_k = st["rs_uid"], st["fu_uid"]
         st["spec_aborted"] = (st["spec_aborted"]
                               + rs_kill.sum(dtype=I32) + fu_kill.sum(dtype=I32))
         st["rs_valid"] = st["rs_valid"] & ~rs_kill
@@ -420,6 +508,12 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
 
         st["spec_active"] = st["spec_active"] & ~(commit | squash)
         st["br_active"] = st["br_active"] & ~fire
+        return st, (rs_uid_k, rs_kill, fu_uid_k, fu_kill)
+
+    def abort_traces(st, kills, tw):
+        rs_uid_k, rs_kill, fu_uid_k, fu_kill = kills
+        st["tr_aborted"] = tw(st["tr_aborted"], rs_uid_k, True, rs_kill)
+        st["tr_aborted"] = tw(st["tr_aborted"], fu_uid_k, True, fu_kill)
         return st
 
     # ------------------------------------------------------------------
@@ -441,7 +535,33 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
     # pick exactly.  With eft=0 ckey is the FU index and the arbiter is
     # bit-identical to the historical greedy one.
     # ------------------------------------------------------------------
-    def rs_issue(st, exists, prio, quota, cost, eft, alive):
+    nfu_iota = jnp.arange(NFU, dtype=I32)
+
+    def _issue_apply(st, m, fire, cost, tw):
+        """Shared arbiter tail: apply the entry→unit match matrix."""
+        entry_of_unit = jnp.argmax(m, axis=0)      # valid where any col
+        unit_hit = m.any(axis=0)
+
+        st["fu_busy"] = st["fu_busy"] | unit_hit
+        st["fu_uid"] = jnp.where(unit_hit, st["rs_uid"][entry_of_unit], st["fu_uid"])
+        st["fu_rem"] = jnp.where(unit_hit,
+                                 st["rs_exec"][entry_of_unit] * cost,
+                                 st["fu_rem"])
+        st["fu_out_s"] = jnp.where(unit_hit, st["rs_out_s"][entry_of_unit],
+                                   st["fu_out_s"])
+        st["fu_out_e"] = jnp.where(unit_hit, st["rs_out_e"][entry_of_unit],
+                                   st["fu_out_e"])
+        st["fu_src"] = jnp.where(unit_hit, st["rs_src"][entry_of_unit], st["fu_src"])
+        st["fu_spec"] = jnp.where(unit_hit, st["rs_spec"][entry_of_unit],
+                                  st["fu_spec"])
+        st["fu_pid"] = jnp.where(unit_hit, st["rs_pid"][entry_of_unit],
+                                 st["fu_pid"])
+        st["tr_issue"] = tw(st["tr_issue"], st["rs_uid"],
+                            st["cycle"], fire)
+        st["rs_valid"] = st["rs_valid"] & ~fire
+        return st
+
+    def rs_issue_base(st, exists, prio, quota, cost, eft, alive, tw):
         ready = st["rs_valid"] & (st["rs_dep"] == 0) & alive
         free = exists & ~st["fu_busy"]
         n_free = jnp.zeros((NF,), I32).at[fu_cls].add(free.astype(I32))
@@ -488,27 +608,59 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         m = (fire[:, None] & free[None, :]
              & (st["rs_func"][:, None] == fu_cls[None, :])
              & (f_rank[:, None] == unit_rank[None, :]))
-        entry_of_unit = jnp.argmax(m, axis=0)      # valid where any col
-        unit_hit = m.any(axis=0)
+        return _issue_apply(st, m, fire, cost, tw)
 
-        st["fu_busy"] = st["fu_busy"] | unit_hit
-        st["fu_uid"] = jnp.where(unit_hit, st["rs_uid"][entry_of_unit], st["fu_uid"])
-        st["fu_rem"] = jnp.where(unit_hit,
-                                 st["rs_exec"][entry_of_unit] * cost,
-                                 st["fu_rem"])
-        st["fu_out_s"] = jnp.where(unit_hit, st["rs_out_s"][entry_of_unit],
-                                   st["fu_out_s"])
-        st["fu_out_e"] = jnp.where(unit_hit, st["rs_out_e"][entry_of_unit],
-                                   st["fu_out_e"])
-        st["fu_src"] = jnp.where(unit_hit, st["rs_src"][entry_of_unit], st["fu_src"])
-        st["fu_spec"] = jnp.where(unit_hit, st["rs_spec"][entry_of_unit],
-                                  st["fu_spec"])
-        st["fu_pid"] = jnp.where(unit_hit, st["rs_pid"][entry_of_unit],
-                                 st["fu_pid"])
-        st["tr_issue"] = trace_write(st["tr_issue"], st["rs_uid"],
-                                     st["cycle"], fire)
-        st["rs_valid"] = st["rs_valid"] & ~fire
-        return st
+    def rs_issue_fast(st, exists, prio, quota, cost, eft, alive, tw):
+        """The restructured arbiter: same selection function as
+        :func:`rs_issue_base` (bit-identical by the differential tests),
+        restructured for the population width-cost curve — ONE (S, S) key
+        comparison matrix feeds every rank (the issue key is unique among
+        ready entries, so masking columns of ``key_lt`` IS re-ranking the
+        masked subset), the unit ranking collapses from (NFU, NFU) to a
+        per-class (NF, W, W) block, and rank sums narrow to int16 (S ≤ 32
+        entries, ≤ W ≤ 16 units per class — int16 is exact)."""
+        I16 = jnp.int16
+        ready = st["rs_valid"] & (st["rs_dep"] == 0) & alive
+        free = exists & ~st["fu_busy"]
+        n_free = jnp.zeros((NF,), I32).at[fu_cls].add(free.astype(I32))
+        w = jnp.clip(prio[st["rs_pid"]], 0, PRIO_CAP)
+        key = jnp.where(ready, (PRIO_CAP - w) * AGE_SPAN + st["rs_age"], BIG)
+        key_lt = key[None, :] < key[:, None]
+        same_cls = st["rs_func"][:, None] == st["rs_func"][None, :]
+        same_pid = st["rs_pid"][:, None] == st["rs_pid"][None, :]
+        busy = st["fu_busy"] & exists
+        inflight = ((busy[None, :]
+                     & (st["fu_pid"][None, :] == st["rs_pid"][:, None])
+                     & (fu_cls[None, :] == st["rs_func"][:, None]))
+                    .sum(axis=1, dtype=I16))
+        q_rank = (key_lt & same_cls & same_pid
+                  & ready[None, :]).sum(axis=1, dtype=I16)
+        quota_ok = inflight + q_rank < quota[st["rs_pid"]]
+        eligible = ready & quota_ok
+        cls_rank = (key_lt & same_cls & eligible[None, :]).sum(axis=1,
+                                                               dtype=I16)
+        issuable = eligible & (cls_rank < n_free[st["rs_func"]])
+        # ``key`` is BIG on every non-ready entry and unique among ready
+        # ones, so "rank within subset X" is just key_lt with X's columns
+        # — no per-subset masked key or fresh comparison matrix needed
+        g_rank = (key_lt & issuable[None, :]).sum(axis=1, dtype=I16)
+        fire = issuable & (g_rank < c.issue_width)
+        f_rank = (key_lt & same_cls & fire[None, :]).sum(axis=1, dtype=I16)
+        # per-class unit ranking: units only ever compare within their own
+        # class, so the (NFU, NFU) cls_eq matrix is 1/NF dead weight —
+        # rank inside (NF, W, W) blocks instead
+        Wc = spec.max_fu_per_class
+        ckey = (jnp.where(eft != 0, cost, 0) * NFU
+                + nfu_iota).reshape(NF, Wc)
+        free_c = free.reshape(NF, Wc)
+        lower = free_c[:, None, :] & (ckey[:, None, :] < ckey[:, :, None])
+        unit_rank = lower.sum(axis=2, dtype=I16).reshape(NFU)
+        m = (fire[:, None] & free[None, :]
+             & (st["rs_func"][:, None] == fu_cls[None, :])
+             & (f_rank[:, None] == unit_rank[None, :]))
+        return _issue_apply(st, m, fire, cost, tw)
+
+    rs_issue = rs_issue_base if base else rs_issue_fast
 
     # ------------------------------------------------------------------
     # phase 6: frontend — N per-tenant streams, one arbitrated dispatch.
@@ -522,7 +674,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
     # model's head-of-line stall.  A single stream covering [0, p_len)
     # reduces to the historical merged frontend bit-for-bit.
     # ------------------------------------------------------------------
-    def frontend(st, F, p_len, rs_cap, streams, alive):
+    def frontend_core(st, F, p_len, rs_cap, streams, alive):
         NS = streams.shape[0]
         ns_iota = jnp.arange(NS, dtype=I32)
         s_start, s_end = streams[:, 0], streams[:, 1]
@@ -702,21 +854,16 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         st["overflow"] = st["overflow"] | (dispatch & (uid >= U)) \
             | (dispatch & (out_e - out_s > W))
         uidc = jnp.clip(uid, 0, U - 1)
+        pidv = F["pid"][pcc]
         rs_sel = dispatch & (s_iota == rs_new)
         st["rs_valid"] = st["rs_valid"] | rs_sel
         for k, v in (("rs_uid", uid), ("rs_func", acc),
                      ("rs_dep", dep), ("rs_age", st["age"]),
                      ("rs_out_s", phys_out), ("rs_out_e", phys_oe),
                      ("rs_src", out_s), ("rs_exec", func_cycles[jnp.clip(acc, 0, NF - 1)]),
-                     ("rs_pid", F["pid"][pcc])):
+                     ("rs_pid", pidv)):
             st[k] = jnp.where(rs_sel, v, st[k])
         st["rs_spec"] = jnp.where(rs_sel, spec, st["rs_spec"])
-        st["tr_func"] = trace_write(st["tr_func"], uidc, acc, dispatch)
-        st["tr_dispatch"] = trace_write(st["tr_dispatch"], uidc,
-                                        st["cycle"], dispatch)
-        st["tr_dep"] = trace_write(st["tr_dep"], uidc, dep, dispatch)
-        st["tr_pid"] = trace_write(st["tr_pid"], uidc, F["pid"][pcc],
-                                   dispatch)
         st["next_uid"] = st["next_uid"] + jnp.where(dispatch, 1, 0)
         st["age"] = st["age"] + jnp.where(dispatch, 1, 0)
         st["fe_wait"] = jnp.where(gmask & dispatch,
@@ -761,6 +908,29 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         st["pc"] = jnp.where(gmask, pc_next, pcs)
         st["stall_cycles"] = st["stall_cycles"] + jnp.where(
             progressed | ~alive, 0, 1)
+        # the four dispatch trace writes share one (uid, enable) selector;
+        # the caller applies them (select-form, scatter-form, or a fused
+        # pallas kernel, per step_impl)
+        fe = dict(uid=uidc, acc=acc, dep=dep, pid=pidv, dispatch=dispatch)
+        return st, fe
+
+    def dispatch_traces(st, fe, tw=None):
+        if tw is not None or base:
+            tw = tw or trace_write
+            st["tr_func"] = tw(st["tr_func"], fe["uid"], fe["acc"],
+                               fe["dispatch"])
+            st["tr_dispatch"] = tw(st["tr_dispatch"], fe["uid"],
+                                   st["cycle"], fe["dispatch"])
+            st["tr_dep"] = tw(st["tr_dep"], fe["uid"], fe["dep"],
+                              fe["dispatch"])
+            st["tr_pid"] = tw(st["tr_pid"], fe["uid"], fe["pid"],
+                              fe["dispatch"])
+            return st
+        sel = trace_sel(fe["uid"], fe["dispatch"])
+        st["tr_func"] = trace_put(st["tr_func"], sel, fe["acc"])
+        st["tr_dispatch"] = trace_put(st["tr_dispatch"], sel, st["cycle"])
+        st["tr_dep"] = trace_put(st["tr_dep"], sel, fe["dep"])
+        st["tr_pid"] = trace_put(st["tr_pid"], sel, fe["pid"])
         return st
 
     # ------------------------------------------------------------------
@@ -827,8 +997,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         return (~st["halted"] & ~st["overflow"]
                 & (st["cycle"] < spec.max_cycles))
 
-    def step(st, exists, F, p_len, prio, quota, rs_cap, cost, eft, streams,
-             effects, limit):
+    def step_top(st, streams, limit):
         # ``alive`` gates every phase: a halted/overflowed lane is a fixed
         # point of the step, so the batched population machine can run one
         # while-loop with a scalar any-lane-alive condition and NO
@@ -858,12 +1027,9 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
                      & (streams[:, 2] <= st["cycle"] - st["dt"]))
         st["fe_stall"] = st["fe_stall"] + jnp.where(
             alive & w_stalled, st["dt"] - 1, 0)
-        st = fu_tick(st, exists, effects, alive)
-        st, br_ready = memread_tick(st, alive)
-        st, br_ready = cdb_grant(st, br_ready, alive)
-        st = branch_resolve(st, br_ready)
-        st = rs_issue(st, exists, prio, quota, cost, eft, alive)
-        st = frontend(st, F, p_len, rs_cap, streams, alive)
+        return st, alive
+
+    def step_bottom(st, exists, F, p_len, rs_cap, streams, alive):
         done = ((st["pc"] >= streams[:, 1]).all() & ~st["rs_valid"].any()
                 & ~st["fu_busy"].any()
                 & ~st["cdb_valid"].any() & ~st["br_active"] & ~st["mr_active"]
@@ -874,6 +1040,120 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         st["dt"] = jnp.where(alive, dt, st["dt"])
         st["halted"] = st["halted"] | (alive & done)
         return st
+
+    def step(st, exists, F, p_len, prio, quota, rs_cap, cost, eft, streams,
+             effects, limit):
+        st, alive = step_top(st, streams, limit)
+        st, fu_done = fu_exec(st, exists, effects, alive)
+        st = cdb_enqueue(st, fu_done, trace_write)
+        st, br_ready = memread_tick(st, alive)
+        st, br_ready = cdb_grant(st, br_ready, alive, trace_write)
+        st, kills = branch_core(st, br_ready)
+        st = abort_traces(st, kills, trace_write)
+        st = rs_issue(st, exists, prio, quota, cost, eft, alive, trace_write)
+        st, fe = frontend_core(st, F, p_len, rs_cap, streams, alive)
+        st = dispatch_traces(st, fe)
+        return step_bottom(st, exists, F, p_len, rs_cap, streams, alive)
+
+    # ------------------------------------------------------------------
+    # the pallas population step: the same phase functions, but the
+    # scatter/select-heavy ones run as fused lane-per-program kernels
+    # (pallas_step.py) over the whole population, and the rest are
+    # vmapped.  ``pl.pallas_call`` cannot sit under ``jax.vmap``, which
+    # is why this is a population-level step rather than a per-lane one.
+    # Inside a kernel there is no batch axis, so the trace writes use the
+    # single-machine scatter form (``tw_scatter``) — cheap per lane.
+    # ------------------------------------------------------------------
+    ENQ_KEYS = ("cdb_valid", "cdb_uid", "cdb_ticket", "cdb_ready",
+                "cdb_spec", "ticket", "overflow", "tr_complete",
+                "fu_busy", "fu_uid")
+    GRANT_KEYS = ("cdb_valid", "rs_dep", "trk_valid", "tr_broadcast")
+    ISSUE_KEYS = ("fu_busy", "fu_uid", "fu_rem", "fu_out_s", "fu_out_e",
+                  "fu_src", "fu_spec", "fu_pid", "tr_issue", "rs_valid")
+    TRACE_KEYS = ("tr_func", "tr_dispatch", "tr_dep", "tr_pid",
+                  "tr_aborted")
+
+    def make_pop_step():
+        from . import pallas_step as ps
+
+        def k_enqueue(v):
+            return cdb_enqueue(v, v["done"], tw_scatter)
+
+        def k_grant(v):
+            st2, br = cdb_grant(v, v["br_ready"], v["alive"], tw_scatter,
+                                unroll=True)
+            st2["br_ready"] = br
+            return st2
+
+        def k_issue(v):
+            return rs_issue(v, v["exists"], v["prio"], v["quota"],
+                            v["cost"], v["eft"], v["alive"], tw_scatter)
+
+        def k_traces(v):
+            st2 = dict(v)
+            st2 = abort_traces(
+                st2, (v["rs_uid_k"], v["rs_kill"], v["fu_uid_k"],
+                      v["fu_kill"]), tw_scatter)
+            sel = jnp.where(v["dispatch"], v["uid"], U)
+            for key, val in (("tr_func", v["acc"]),
+                             ("tr_dispatch", v["cycle"]),
+                             ("tr_dep", v["dep"]), ("tr_pid", v["pid"])):
+                st2[key] = st2[key].at[sel].set(val, mode="drop")
+            return st2
+
+        def pop_step(st, exists, F, p_len, prio, quota, rs_cap, cost, eft,
+                     streams, effects, limit):
+            st, alive = jax.vmap(step_top)(st, streams, limit)
+            st, fu_done = jax.vmap(fu_exec)(st, exists, effects, alive)
+
+            ins = {k: st[k] for k in ENQ_KEYS}
+            ins.update(done=fu_done, cycle=st["cycle"],
+                       fu_spec=st["fu_spec"])
+            st.update(ps.lane_phase(k_enqueue, ins, ENQ_KEYS))
+
+            st, fired = jax.vmap(memread_tick)(st, alive)
+
+            ins = {k: st[k] for k in GRANT_KEYS}
+            ins.update(cdb_ready=st["cdb_ready"], cdb_ticket=st["cdb_ticket"],
+                       cdb_uid=st["cdb_uid"], cycle=st["cycle"],
+                       trk_uid=st["trk_uid"], br_active=st["br_active"],
+                       br_kind=st["br_kind"], br_wait=st["br_wait"],
+                       br_ready=fired, alive=alive)
+            out = ps.lane_phase(k_grant, ins, GRANT_KEYS + ("br_ready",))
+            br_ready = out.pop("br_ready")
+            st.update(out)
+
+            st, kills = jax.vmap(branch_core)(st, br_ready)
+            rs_uid_k, rs_kill, fu_uid_k, fu_kill = kills
+
+            ins = {k: st[k] for k in ISSUE_KEYS}
+            ins.update(rs_dep=st["rs_dep"], rs_pid=st["rs_pid"],
+                       rs_age=st["rs_age"], rs_func=st["rs_func"],
+                       rs_uid=st["rs_uid"], rs_exec=st["rs_exec"],
+                       rs_out_s=st["rs_out_s"], rs_out_e=st["rs_out_e"],
+                       rs_src=st["rs_src"], rs_spec=st["rs_spec"],
+                       cycle=st["cycle"], exists=exists, prio=prio,
+                       quota=quota, cost=cost, eft=eft, alive=alive)
+            st.update(ps.lane_phase(k_issue, ins, ISSUE_KEYS))
+
+            st, fe = jax.vmap(frontend_core)(st, F, p_len, rs_cap, streams,
+                                             alive)
+
+            ins = {k: st[k] for k in TRACE_KEYS}
+            ins.update(rs_uid_k=rs_uid_k, rs_kill=rs_kill,
+                       fu_uid_k=fu_uid_k, fu_kill=fu_kill,
+                       uid=fe["uid"], acc=fe["acc"], dep=fe["dep"],
+                       pid=fe["pid"], dispatch=fe["dispatch"],
+                       cycle=st["cycle"])
+            st.update(ps.lane_phase(k_traces, ins, TRACE_KEYS))
+
+            return jax.vmap(step_bottom)(st, exists, F, p_len, rs_cap,
+                                         streams, alive)
+
+        return pop_step
+
+    # the population step: kernel-phased under pallas, plain vmap otherwise
+    vstep = make_pop_step() if impl == "pallas" else jax.vmap(step)
 
     def norm_args(ftab, p_len, n_fu, prio, quota, rs_cap, fu_cost, eft,
                   streams):
@@ -958,7 +1238,6 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
         effects = jnp.asarray(effects, I32)
         st = jax.vmap(init_state)(jnp.asarray(mem_init, I32), streams)
 
-        vstep = jax.vmap(step)
         limit = jnp.full_like(p_len, BIG)
         st = jax.lax.while_loop(
             lambda s: alive_of(s).any(),
@@ -1005,12 +1284,35 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
             ftab, p_len, n_fu, prio, quota, rs_cap, fu_cost, eft, streams)
         effects = jnp.asarray(effects, I32)
         limit = carry["steps"] + jnp.asarray(budget, I32)
-        vstep = jax.vmap(step)
         return jax.lax.while_loop(
             lambda s: (alive_of(s) & (s["steps"] < limit)).any(),
             lambda s: vstep(s, exists, F, p_len, prio, quota, rs_cap,
                             cost, eft, streams, effects, limit),
             carry)
+
+    def run_one(ftab, p_len, n_fu, mem_init, effects, prio=None, quota=None,
+                rs_cap=None, fu_cost=None, eft=None, streams=None):
+        """Single-lane pallas machine: a population of one, squeezed.
+
+        ``pl.pallas_call`` cannot sit under ``jax.vmap``, so the pallas
+        step only exists in population form — the single machine lifts
+        its arguments onto a width-1 scenario axis and drops it from the
+        outputs.  Nones that ``norm_args`` would default *unbatched*
+        (the pid tables) are defaulted here first."""
+        if prio is None:
+            prio = jnp.zeros((NUM_PIDS,), I32)
+        if quota is None:
+            quota = jnp.full((NUM_PIDS,), BIG, I32)
+        if rs_cap is None:
+            rs_cap = jnp.full((NUM_PIDS,), BIG, I32)
+
+        def lift(x):
+            return None if x is None else jnp.asarray(x)[None]
+        out = run_population(lift(ftab), lift(p_len), lift(n_fu),
+                             lift(mem_init), lift(effects), lift(prio),
+                             lift(quota), lift(rs_cap), lift(fu_cost),
+                             lift(eft), lift(streams))
+        return jax.tree.map(lambda x: x[0], out)
 
     if resumable:
         if not population:
@@ -1019,7 +1321,7 @@ def make_machine(spec: MachineSpec, max_prog: int = 256,
                                 collect=collect)
     if population:
         return run_population
-    return run
+    return run_one if impl == "pallas" else run
 
 
 @functools.lru_cache(maxsize=32)
@@ -1056,7 +1358,7 @@ def simulate(code: np.ndarray, costs: SchedulerCosts,
              max_fu_per_class: int = 16, max_prog: int = 256,
              policy: SchedPolicy | None = None,
              fu_cost=None,
-             streams=None) -> dict[str, Any]:
+             streams=None, step_impl: str = "xla") -> dict[str, Any]:
     """One-shot convenience wrapper around the cached compiled machine.
 
     ``policy`` (defaulting to ``params.policy``) is lowered to the traced
@@ -1077,7 +1379,8 @@ def simulate(code: np.ndarray, costs: SchedulerCosts,
     ms = MachineSpec(params=dataclasses.replace(params, policy=SchedPolicy(),
                                                 fu_cost=None),
                      costs=costs, event_skip=event_skip,
-                     max_cycles=max_cycles, max_fu_per_class=max_fu_per_class)
+                     max_cycles=max_cycles, max_fu_per_class=max_fu_per_class,
+                     step_impl=step_impl)
     run = _compiled(ms, max_prog)
     ftab, p_len = pack_program(code, max_prog)
     n_fu = jnp.asarray(n_fu if n_fu is not None else params.n_fu, I32)

@@ -1,0 +1,98 @@
+"""Pallas kernel driver for the population machine's step phases.
+
+The scatter/select-heavy phases of the step body (CDB enqueue, CDB
+grant/wakeup, RS issue, trace writes) run here as fused ``pl.pallas_call``
+kernels with a **lane-per-program grid**: program ``i`` owns scenario lane
+``i`` and sees that lane's state rows as unbatched blocks.  That inverts
+the cost structure of the vmapped XLA step — inside a kernel there is no
+batch axis, so a uid-indexed trace write is a plain cheap scatter again
+instead of a (lanes × table)-wide batched scatter, and the per-lane
+selects fuse into one pass over the lane's rows.
+
+Like every kernel in ``src/repro/kernels/``, the machine kernels are
+written for TPU and validated on CPU in ``interpret=True`` mode — the
+kernel body executes traceably, so bit-identity against the XLA step is
+provable on the bench box (``tests/test_hts_step_impl.py``).  On CPU the
+interpreter overhead loses to compiled XLA; the honest numbers live in
+``BENCH_stepwidth.json`` and the XLA restructure carries the CPU headline.
+
+The one structural constraint this module exists to absorb:
+``pl.pallas_call`` cannot sit under ``jax.vmap``, so the kernels take the
+*population* arrays directly (lane = grid axis) and ``machine.py`` builds
+a population-level step around them rather than vmapping a per-lane one.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: interpret mode: True everywhere except a real TPU backend (same idiom
+#: as :mod:`repro.kernels.common`).
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _lane_spec(arr):
+    """BlockSpec selecting one lane's row of ``arr`` per grid step."""
+    blk = (1,) + arr.shape[1:]
+    nd = len(blk)
+    return pl.BlockSpec(blk, lambda i, _nd=nd: (i,) + (0,) * (_nd - 1))
+
+
+def lane_phase(fn, ins, outs, *, interpret=INTERPRET):
+    """Run ``fn`` once per lane as a fused pallas kernel.
+
+    ``ins`` maps names to population arrays (leading axis = lanes); ``fn``
+    receives a dict of ONE lane's values with the lane axis dropped and
+    returns a dict containing at least every name in ``outs``.  Each out
+    name must also be an in name (the kernel updates state in place
+    semantically; shapes/dtypes are taken from the input).  Returns the
+    updated population arrays as ``{name: array}``.
+    """
+    names = list(ins)
+    for k in outs:
+        if k not in ins:
+            raise ValueError(f"output {k!r} has no matching input")
+    n = ins[names[0]].shape[0]
+
+    # A pallas kernel body may not capture traced constants (the machine
+    # closes over iotas and class tables) — hoist them into explicit
+    # arguments and ship each one as a lane-broadcast input.  The copies
+    # are a few KB per lane; on TPU these become loop-invariant VMEM
+    # blocks.  (``jax.closure_convert`` only hoists *differentiable*
+    # consts, and the machine's are all integer — so hoist by hand:
+    # trace once, split the jaxpr consts out, re-evaluate inside.)
+    example = {k: jax.ShapeDtypeStruct(ins[k].shape[1:], ins[k].dtype)
+               for k in names}
+    closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(example)
+    out_tree = jax.tree_util.tree_structure(out_shape)
+    consts = closed.consts
+    cnames = [f"_const{i}" for i in range(len(consts))]
+    full = dict(ins)
+    for cname, cval in zip(cnames, consts):
+        cval = jnp.asarray(cval)
+        full[cname] = jnp.broadcast_to(cval, (n,) + cval.shape)
+    allnames = names + cnames
+
+    def kernel(*refs):
+        vals = {k: refs[i][...][0] for i, k in enumerate(allnames)}
+        flat, _ = jax.tree_util.tree_flatten({k: vals[k] for k in names})
+        out_flat = jax.core.eval_jaxpr(closed.jaxpr,
+                                       [vals[k] for k in cnames], *flat)
+        res = jax.tree_util.tree_unflatten(out_tree, out_flat)
+        for j, k in enumerate(outs):
+            out_ref = refs[len(allnames) + j]
+            out_ref[...] = jnp.asarray(res[k], out_ref.dtype)[None]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[_lane_spec(full[k]) for k in allnames],
+        out_specs=[_lane_spec(full[k]) for k in outs],
+        out_shape=[jax.ShapeDtypeStruct(full[k].shape, full[k].dtype)
+                   for k in outs],
+        interpret=interpret,
+    )(*[full[k] for k in allnames])
+    if len(outs) == 1:
+        out = [out] if not isinstance(out, (list, tuple)) else out
+    return dict(zip(outs, out))

@@ -162,6 +162,11 @@ class ServeSpec:
     sizes slices from the bucket's measured completed-request step counts
     (4x the median of the last 64, floor {AUTO_MIN}; first launch at
     {AUTO} steps).
+
+    ``step_impl`` — the step-body lowering
+    (:data:`~repro.core.hts.machine.STEP_IMPLS`) every launch runs
+    under; compilation-relevant like the rest, so it is part of the
+    bucket cache key via the machine spec.
     """
     scheduler: Union[str, SchedulerCosts] = "hts_spec"
     n_fu: Union[int, Sequence[int]] = 2
@@ -175,6 +180,7 @@ class ServeSpec:
     devices: Optional[int] = None
     max_fu_per_class: Optional[int] = None
     slice_steps: Optional[Union[int, str]] = None
+    step_impl: str = "xla"
 
 
 #: first-launch slice budget (machine steps) under ``slice_steps="auto"``
@@ -446,7 +452,8 @@ class Server:
                                        policy=SchedPolicy(), fu_cost=None),
             costs=self._cost, event_skip=self.spec.event_skip,
             max_cycles=self.spec.max_cycles,
-            max_fu_per_class=self._max_fu)
+            max_fu_per_class=self._max_fu,
+            step_impl=self.spec.step_impl)
 
     def _runner(self, key: tuple[int, int]):
         r = self._runners.get(key)
@@ -514,7 +521,8 @@ class Server:
                            event_skip=self.spec.event_skip,
                            max_cycles=self.spec.max_cycles,
                            max_fu_per_class=self._max_fu,
-                           devices=self.spec.devices, check=False)
+                           devices=self.spec.devices, check=False,
+                           step_impl=self.spec.step_impl)
         t_done = self._clock.now()
         self._batch_rows.append((key, len(reqs), pad,
                                  len(reqs) / self._lanes))

@@ -92,6 +92,10 @@ def sharded_runner(spec: machine.MachineSpec, max_prog: int, devices: int):
     shard (no collectives — per-shard trip counts are independent, which
     is the whole point).  Lane counts must divide ``devices``
     (:func:`pad_lanes`).
+
+    ``spec.step_impl`` flows through untouched — the sharded machine is
+    just ``make_machine(spec, ...)`` under a ``shard_map``, so the
+    pallas-kernel step runs per shard with a lanes/devices grid.
     """
     import jax
     from jax.sharding import PartitionSpec as P

@@ -1,0 +1,176 @@
+"""step_impl backends: xla (restructured), xla_base, pallas — bit-identity.
+
+The PR that introduced ``step_impl`` restructured the XLA step body for
+the population width-cost curve and added a fused-pallas-kernel step
+(interpreted on CPU).  Every implementation must produce bit-identical
+schedules: these tests pin xla ≡ xla_base ≡ pallas on generated
+scenarios (cycles, full schedule tuples, fe_stall; both event-skip
+modes; single-lane and population paths), pallas ≡ golden through the
+standard differential machinery (slow tier — interpret mode pays per
+step), and the compile-bucket invariant that the default path did not
+move.
+"""
+import numpy as np
+import pytest
+
+import repro.core.hts as hts
+from repro.core.hts import api, batch, costs, machine, workloads
+
+FAST_SEEDS = (0, 3, 11)
+
+
+def _prep(seed, **kw):
+    sc = workloads.generate_scenario(seed, n_tenants=2 + seed % 3,
+                                     kernels=workloads.CHEAP_MIX,
+                                     max_tasks=4, **kw)
+    return sc, api._prepare(sc.merged)
+
+
+# ---------------------------------------------------------------------------
+# cross-implementation bit-identity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("event_skip", [True, False])
+def test_step_impls_bit_identical_single_lane(event_skip):
+    """All three implementations agree on every output array of the
+    single-lane machine — trace tables and counters included, so
+    fe_stall/stall_cycles/fu_busy_cycles are pinned, not just cycles."""
+    cost = costs.costs_by_name("hts_spec")
+    for seed in FAST_SEEDS:
+        sc, prep = _prep(seed, heterogeneous_fus=seed % 2 == 1)
+        outs = {impl: machine.simulate(prep.code, cost,
+                                       mem_init=prep.mem_init,
+                                       effects=prep.effects,
+                                       event_skip=event_skip,
+                                       fu_cost=sc.fu_cost, step_impl=impl)
+                for impl in machine.STEP_IMPLS}
+        ref = outs["xla"]
+        for impl in ("xla_base", "pallas"):
+            for k in ref:
+                assert np.array_equal(ref[k], outs[impl][k]), \
+                    f"seed {seed}: xla vs {impl} differ on {k!r}"
+
+
+def test_step_impls_bit_identical_population():
+    """One packed population through run_many under each implementation:
+    cycles, schedule tuples and fe_stall agree lane for lane."""
+    progs = [_prep(s)[0].merged for s in range(4)]
+    runs = {impl: hts.run_many(progs, scheduler="hts_spec", step_impl=impl)
+            for impl in machine.STEP_IMPLS}
+    ref = runs["xla"]
+    for impl in ("xla_base", "pallas"):
+        r = runs[impl]
+        assert np.array_equal(ref.cycles, r.cycles), impl
+        for i in range(len(progs)):
+            assert ref[i].schedule_tuple() == r[i].schedule_tuple(), \
+                (impl, i)
+            assert ref[i].fe_stall == r[i].fe_stall, (impl, i)
+
+
+def test_single_lane_pallas_via_api():
+    """hts.run(step_impl="pallas") — the population-of-one lift — matches
+    the default path on the full Result surface."""
+    sc, _ = _prep(7)
+    a = hts.run(sc.merged, scheduler="hts_spec")
+    b = hts.run(sc.merged, scheduler="hts_spec", step_impl="pallas")
+    assert a.cycles == b.cycles
+    assert a.schedule_tuple() == b.schedule_tuple()
+    assert a.fe_stall == b.fe_stall
+
+
+def test_pallas_resumable_slices_compose():
+    """The pallas step is a fixed point for paused lanes too: slicing a
+    pallas population in small step budgets collects the same outcome as
+    the unsliced pallas (and default xla) run."""
+    import jax
+    import jax.numpy as jnp
+    progs = [_prep(s)[0].merged for s in range(3)]
+    ref = hts.run_many(progs, scheduler="hts_spec")
+    pal = hts.run_many(progs, scheduler="hts_spec", step_impl="pallas")
+    rm = api._population_slicer(pal._spec, pal._max_prog)
+    args = [jnp.asarray(a) for a in pal._margs]
+    carry = rm.init(*args)
+    for _ in range(200):
+        carry = rm.run_slice(carry, *args, jnp.asarray(37, jnp.int32))
+        if not np.asarray(jax.device_get(carry["halted"]) == False).any():
+            break
+    out = rm.collect(carry)
+    assert np.array_equal(np.asarray(out["cycles"]), ref.cycles)
+    assert np.asarray(out["halted"]).all()
+
+
+@pytest.mark.slow
+def test_pallas_differential_fuzz():
+    """The standard differential harness (golden ≡ machine, event-skip on
+    AND off) with the machine side running the pallas kernels — interpret
+    mode pays per machine step, hence the slow tier."""
+    for seed in range(6):
+        sc = workloads.generate_scenario(seed, n_tenants=2 + seed % 3,
+                                         kernels=workloads.CHEAP_MIX,
+                                         max_tasks=4,
+                                         heterogeneous_fus=seed % 3 == 0)
+        hts.compare(sc.merged, schedulers=("hts_nospec", "hts_spec"),
+                    fu_cost=sc.fu_cost, step_impl="pallas")
+
+
+@pytest.mark.slow
+def test_pallas_population_compare_fuzz():
+    """Population differential: compare_population with step_impl="pallas"
+    verifies the batched pallas machine against the golden loop in both
+    event-skip modes."""
+    progs = [workloads.generate_scenario(100 + s, n_tenants=2,
+                                         kernels=workloads.CHEAP_MIX,
+                                         max_tasks=4).merged
+             for s in range(3)]
+    hts.compare_population(progs, schedulers=("hts_spec",),
+                           step_impl="pallas")
+
+
+# ---------------------------------------------------------------------------
+# compile-key discipline
+# ---------------------------------------------------------------------------
+def test_default_step_impl_compile_bucket_unchanged():
+    """The default path's compile key did not move: a default-constructed
+    MachineSpec equals one with explicit step_impl="xla" (same lru
+    bucket), explicit "xla" runs reuse the warm default bucket, and the
+    other implementations compile into buckets of their own."""
+    assert machine.MachineSpec() == machine.MachineSpec(step_impl="xla")
+    sc, _ = _prep(0)
+    # a max_cycles value no other test uses — this test owns its buckets
+    # regardless of what the rest of the suite has already warmed
+    mc = 4_999_991
+    hts.run(sc.merged, n_fu=2, max_cycles=mc)        # warm default bucket
+    before = machine._compiled.cache_info().misses
+    hts.run(sc.merged, n_fu=2, max_cycles=mc, step_impl="xla")
+    assert machine._compiled.cache_info().misses == before
+    hts.run(sc.merged, n_fu=2, max_cycles=mc, step_impl="xla_base")
+    assert machine._compiled.cache_info().misses == before + 1
+
+
+def test_invalid_step_impl_raises():
+    with pytest.raises(ValueError, match="step_impl"):
+        machine.make_machine(machine.MachineSpec(), step_impl="triton")
+
+
+def test_trip_cost_us_probe():
+    """The profiling hook returns a positive per-trip figure on the jax
+    backend and refuses on golden (no compiled machine to time)."""
+    progs = [_prep(s)[0].merged for s in range(2)]
+    r = hts.run_many(progs, scheduler="hts_spec")
+    t = r.trip_cost_us(budget=16, reps=2)
+    assert t > 0.0
+    g = hts.run_many(progs, scheduler="hts_spec", backend="golden")
+    with pytest.raises(ValueError, match="jax"):
+        g.trip_cost_us()
+
+
+def test_replicate_tiles_lanes():
+    """batch.replicate widens a pack lane-for-lane: replica lanes produce
+    the source lanes' cycles, so width sweeps vary only the width."""
+    progs = [_prep(s)[0].merged for s in range(2)]
+    pop = batch.pack_population(progs)
+    wide = batch.replicate(pop, 5)
+    assert len(wide) == 5
+    ref = hts.run_many(pop, scheduler="hts_spec")
+    r = hts.run_many(wide, scheduler="hts_spec")
+    for i in range(5):
+        assert int(r.cycles[i]) == int(ref.cycles[i % 2])
